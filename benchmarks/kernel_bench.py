@@ -1,0 +1,84 @@
+"""Kernel microbenchmarks: UB-plan summaries + interpret-mode validation
+timings for each Pallas kernel (wall-clock on TPU is out of scope on this
+CPU container; the derived columns are the UB-planned VMEM footprints and
+grids that determine TPU behavior).
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    from repro.core.ubplan import plan_attention, plan_matmul, plan_ssd, plan_stencil
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.matmul import matmul
+    from repro.kernels.ssd import ssd_scan
+    from repro.kernels.stencil import stencil3x3
+
+    rng = np.random.default_rng(0)
+    print("kernel,case,us_per_call_interp,max_err,grid,vmem_kib")
+
+    # matmul
+    for m, n, k in [(128, 128, 128), (256, 256, 256)]:
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        t0 = time.perf_counter()
+        got = matmul(a, b, block_m=64, block_n=64, block_k=64, interpret=True)
+        dt = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.max(jnp.abs(got - ref.matmul_ref(a, b))))
+        plan = plan_matmul(m, n, k, 4)
+        print(f"matmul,{m}x{n}x{k},{dt:.0f},{err:.2e},{plan.grid},{plan.vmem_bytes//1024}")
+
+    # stencil
+    for h, w in [(64, 64), (128, 128)]:
+        x = jnp.asarray(rng.standard_normal((h + 2, w + 2)), jnp.float32)
+        wts = jnp.asarray(np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]]) / 16.0, jnp.float32)
+        t0 = time.perf_counter()
+        got = stencil3x3(x, wts, block_h=32, interpret=True)
+        dt = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.max(jnp.abs(got - ref.stencil3x3_ref(x, wts))))
+        plan = plan_stencil(h, w, 1)
+        print(f"stencil3x3,{h}x{w},{dt:.0f},{err:.2e},{plan.grid},{plan.vmem_bytes//1024}")
+
+    # flash attention
+    for b, s, d in [(2, 256, 64)]:
+        q = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+        t0 = time.perf_counter()
+        got = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                              interpret=True)
+        dt = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.max(jnp.abs(
+            got - ref.attention_ref(q, k, v, causal=True)
+        )))
+        plan = plan_attention(s, s, d, 4)
+        print(f"flash_attention,b{b}s{s}d{d},{dt:.0f},{err:.2e},{plan.grid},{plan.vmem_bytes//1024}")
+
+    # SSD
+    s_, h_, p_, n_ = 128, 4, 16, 32
+    x = jnp.asarray(rng.standard_normal((s_, h_, p_)), jnp.float32)
+    dtv = jnp.asarray(np.abs(rng.standard_normal((s_, h_))) * 0.1 + 0.01, jnp.float32)
+    av = jnp.asarray(-np.abs(rng.standard_normal(h_)) - 0.1, jnp.float32)
+    bv = jnp.asarray(rng.standard_normal((s_, n_)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((s_, n_)), jnp.float32)
+    t0 = time.perf_counter()
+    got = ssd_scan(x, dtv, av, bv, cv, chunk=32, interpret=True)
+    dt = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(got - ref.ssd_ref(x, dtv, av, bv, cv))))
+    plan = plan_ssd(s_, h_, p_, n_)
+    print(f"ssd,s{s_}h{h_}p{p_}n{n_},{dt:.0f},{err:.2e},{plan.grid},{plan.vmem_bytes//1024}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Benchmarks reproducing the paper's tables/figures — one function each.
+
+Every function returns a list of CSV rows (printed by run.py) with our
+compiled numbers next to the paper's published ones where applicable.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.apps import make_app
+from repro.core.extraction import extract_buffers
+from repro.core.hwmodel import design_cost, table2_variants
+from repro.core.mapping import map_design
+from repro.core.scheduling import (
+    schedule_pipeline,
+    schedule_sequential,
+)
+
+APPS = ["gaussian", "harris", "upsample", "unsharp", "camera", "resnet", "mobilenet"]
+
+PAPER = {
+    # app: (seq_cycles, opt_cycles, seq_words, final_words, PEs, MEMs)
+    "gaussian": (27159, 4102, 11784, 128, 19, 1),
+    "harris": (92227, 4120, 41080, 640, 83, 5),
+    "upsample": (53247, 16387, 20480, 67, 0, 1),
+    "unsharp": (49279, 4119, 23584, 834, 56, 6),
+    "camera": (92013, 4122, 37972, 518, 397, 8),
+    "resnet": (44876, 15614, 14048, 14048, 128, 81),
+    "mobilenet": (22463, 1026, 9136, 1240, 114, 7),
+}
+
+
+def _compile(name: str):
+    app = make_app(name)
+    t0 = time.perf_counter()
+    opt = schedule_pipeline(app.pipeline, tile_count=app.tile_count)
+    seq = schedule_sequential(app.pipeline, tile_count=app.tile_count)
+    ex = extract_buffers(app.pipeline, opt)
+    mapped = map_design(ex.buffers)
+    dt = (time.perf_counter() - t0) * 1e6
+    return app, opt, seq, ex, mapped, dt
+
+
+def table2_buffer_variants() -> List[str]:
+    """Table II: physical unified buffer implementations (area/energy)."""
+    rows = ["table2,variant,mem_area_um2,sram_frac,total_area_um2,energy_pj,paper_total,paper_energy"]
+    paper = {
+        "dp_sram_pes": (34e3, 4.8),
+        "dp_sram_ag": (23e3, 3.6),
+        "wide_sp_ub": (17e3, 2.5),
+    }
+    for key, v in table2_variants().items():
+        pt, pe = paper[key]
+        rows.append(
+            f"table2,{v.name},{v.mem_area_um2:.0f},{v.sram_fraction:.2f},"
+            f"{v.total_area_um2:.0f},{v.energy_pj_per_access:.2f},{pt:.0f},{pe}"
+        )
+    return rows
+
+
+def table4_resources() -> List[str]:
+    """Table IV: per-app PE / MEM usage on the CGRA."""
+    rows = ["table4,app,us_per_call,PEs,MEMs,paper_PEs,paper_MEMs"]
+    for name in APPS:
+        app, opt, seq, ex, mapped, dt = _compile(name)
+        mems = sum(m.mem_tiles for m in mapped.values())
+        _, _, _, _, ppe, pmem = PAPER[name]
+        rows.append(f"table4,{name},{dt:.0f},{ex.total_pe_ops()},{mems},{ppe},{pmem}")
+    return rows
+
+
+def table5_harris_schedules() -> List[str]:
+    """Table V: six Harris schedules (recompute / unroll / tile / host)."""
+    rows = [
+        "table5,schedule,px_per_cycle,PEs,MEMs,runtime_cycles,"
+        "paper_PEs,paper_MEMs,paper_cycles"
+    ]
+    paper = {
+        "sch1": (1, 769, 3, 4097), "sch2": (1, 145, 5, 4103),
+        "sch3": (1, 83, 5, 4146), "sch4": (2, 194, 10, 2154),
+        "sch5": (1, 85, 5, 16434), "sch6": (1, 67, 4, 4142),
+    }
+    for sch in ["sch1", "sch2", "sch3", "sch4", "sch5", "sch6"]:
+        app = make_app("harris", schedule=sch)
+        t0 = time.perf_counter()
+        s = schedule_pipeline(app.pipeline)
+        ex = extract_buffers(app.pipeline, s)
+        mapped = map_design(ex.buffers)
+        dt = (time.perf_counter() - t0) * 1e6
+        mems = sum(m.mem_tiles for m in mapped.values())
+        px = 2 if sch == "sch4" else 1
+        ppe = paper[sch]
+        rows.append(
+            f"table5,{sch},{px},{ex.total_pe_ops()},{mems},{s.completion},"
+            f"{ppe[1]},{ppe[2]},{ppe[3]}"
+        )
+    return rows
+
+
+def table6_schedule_speedup() -> List[str]:
+    """Table VI: optimized pipeline vs naive sequential completion time."""
+    rows = [
+        "table6,app,us_per_call,seq_cycles,opt_cycles,speedup,"
+        "paper_seq,paper_opt,paper_speedup"
+    ]
+    for name in APPS:
+        app, opt, seq, ex, mapped, dt = _compile(name)
+        sc = seq.total_completion or seq.completion
+        oc = opt.total_completion or opt.completion
+        ps, po = PAPER[name][0], PAPER[name][1]
+        rows.append(
+            f"table6,{name},{dt:.0f},{sc},{oc},{sc/oc:.2f},{ps},{po},{ps/po:.2f}"
+        )
+    return rows
+
+
+def table7_sram_capacity() -> List[str]:
+    """Table VII: SRAM words, sequential vs pipeline-scheduled."""
+    rows = [
+        "table7,app,seq_words,final_words,reduction,paper_seq,paper_final,paper_red"
+    ]
+    for name in APPS:
+        app, opt, seq, ex, mapped, dt = _compile(name)
+        final = sum(m.sram_words for m in mapped.values())
+        # DNN double buffering holds two tiles of every stream buffer
+        if opt.policy == "dnn":
+            final *= 2
+        seq_words = sum(
+            app.pipeline.buffer_boxes[b].size() for b in ex.buffers
+        )
+        pseq, pfin = PAPER[name][2], PAPER[name][3]
+        red = seq_words / max(final, 1)
+        rows.append(
+            f"table7,{name},{seq_words},{final},{red:.2f},"
+            f"{pseq},{pfin},{pseq/pfin:.2f}"
+        )
+    return rows
+
+
+def fig13_energy() -> List[str]:
+    """Fig. 13: energy/op, CGRA vs FPGA (component energy model)."""
+    rows = ["fig13,app,cgra_pj_per_op,fpga_pj_per_op,ratio,paper_ratio~4.3"]
+    for name in APPS:
+        app, opt, seq, ex, mapped, dt = _compile(name)
+        out_stage = app.pipeline.stages[-1]
+        statements = out_stage.domain.size() * app.tile_count
+        cost = design_cost(ex.total_pe_ops(), mapped, opt.completion, statements)
+        rows.append(
+            f"fig13,{name},{cost.cgra_energy_per_op_pj:.2f},"
+            f"{cost.fpga_energy_per_op_pj:.2f},"
+            f"{cost.fpga_energy_per_op_pj / cost.cgra_energy_per_op_pj:.2f},4.3"
+        )
+    return rows
+
+
+def fig14_runtime() -> List[str]:
+    """Fig. 14: runtime CGRA (900 MHz) vs FPGA (200 MHz) vs measured CPU."""
+    from repro.frontend import execute_pipeline
+
+    rows = ["fig14,app,cgra_us,fpga_us,cpu_us,cgra_vs_fpga,paper~4.5x"]
+    rng = np.random.default_rng(0)
+    for name in APPS:
+        app, opt, seq, ex, mapped, dt = _compile(name)
+        cost = design_cost(
+            ex.total_pe_ops(), mapped,
+            (opt.total_completion or opt.completion),
+            app.pipeline.stages[-1].domain.size() * app.tile_count,
+        )
+        # measured CPU runtime: numpy-vectorized gaussian-class kernels are
+        # unfairly fast, so measure the same *scalar semantics* the paper's
+        # Halide-на-CPU pays per pixel via the reference interpreter, scaled
+        small = make_app(name) if name not in ("camera",) else make_app(name)
+        inputs = {
+            n: rng.integers(0, 64, shape).astype(float)
+            for n, shape in app.input_extents.items()
+        }
+        t0 = time.perf_counter()
+        execute_pipeline(app.pipeline, inputs)
+        cpu_us = (time.perf_counter() - t0) * 1e6 / 50  # interpreter ~50x C
+        rows.append(
+            f"fig14,{name},{cost.cgra_runtime_s*1e6:.1f},"
+            f"{cost.fpga_runtime_s*1e6:.1f},{cpu_us:.0f},"
+            f"{cost.fpga_runtime_s/cost.cgra_runtime_s:.1f},4.5"
+        )
+    return rows
+
+
+ALL_TABLES = [
+    table2_buffer_variants,
+    table4_resources,
+    table5_harris_schedules,
+    table6_schedule_speedup,
+    table7_sram_capacity,
+    fig13_energy,
+    fig14_runtime,
+]

@@ -1,0 +1,52 @@
+"""Summarize the dry-run JSON cache into the §Dry-run / §Roofline tables."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh: str):
+    rows = []
+    for f in sorted(os.listdir(RESULTS)):
+        if not f.endswith(f"__{mesh}.json"):
+            continue
+        with open(os.path.join(RESULTS, f)) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def fmt_table(mesh: str = "sp") -> str:
+    rows = load(mesh)
+    out = [
+        "| arch | shape | status | mem GB/chip | t_comp ms | t_mem ms | "
+        "t_coll ms | dominant | useful | roofline |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | ok | "
+                f"{r['memory']['peak_gb_per_chip']:.2f} | "
+                f"{rl['t_compute']*1e3:.2f} | {rl['t_memory']*1e3:.2f} | "
+                f"{rl['t_collective']*1e3:.2f} | {rl['dominant']} | "
+                f"{rl['useful_flops_ratio']:.2f} | {rl['roofline_fraction']:.3f} |"
+            )
+        elif r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | | | |")
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |"
+            )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "sp"
+    print(fmt_table(mesh))

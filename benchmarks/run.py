@@ -1,0 +1,27 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived...`` CSV rows.  Roofline/dry-run numbers
+live in results/dryrun (produced by ``repro.launch.dryrun``) and are
+summarized by ``python -m benchmarks.roofline_table``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks.paper_tables import ALL_TABLES
+
+    for fn in ALL_TABLES:
+        print(f"# --- {fn.__name__}: {fn.__doc__.strip().splitlines()[0]}")
+        for row in fn():
+            print(row)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Batched serving demo: greedy decoding with a KV cache on a reduced model.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    cfg = get_config("tinyllama_1_1b").reduced(n_layers=4, d_model=128)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    engine = ServeEngine(cfg, params, batch_slots=4, max_seq=64)
+
+    rng = jax.random.PRNGKey(7)
+    prompts = jax.random.randint(rng, (4, 8), 0, cfg.vocab)
+    reqs = [Request(prompt=[int(t) for t in prompts[i]], max_new=24)
+            for i in range(4)]
+    t0 = time.time()
+    done = engine.run(reqs)
+    dt = time.time() - t0
+    for i, r in enumerate(done):
+        print(f"[serve] req{i}: {r.prompt[:4]}... -> {r.generated[:12]}...")
+    total = sum(len(r.generated) for r in done)
+    print(f"[serve] {total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s)")
+
+    # determinism check: greedy decode twice gives identical streams
+    engine2 = ServeEngine(cfg, params, batch_slots=4, max_seq=64)
+    reqs2 = [Request(prompt=[int(t) for t in prompts[i]], max_new=24)
+             for i in range(4)]
+    done2 = engine2.run(reqs2)
+    same = all(a.generated == b.generated for a, b in zip(done, done2))
+    print(f"[serve] deterministic: {same}")
+
+
+if __name__ == "__main__":
+    main()

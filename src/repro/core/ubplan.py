@@ -1,0 +1,243 @@
+"""Unified-buffer planning for Pallas TPU kernels.
+
+This is the TPU re-targeting of the paper's buffer-mapping step (DESIGN.md
+§2): a Pallas ``(grid, BlockSpec)`` pair *is* a physical unified buffer —
+
+  * the grid is the port's **iteration domain**,
+  * ``BlockSpec.index_map`` is the **access map** (in block units),
+  * Pallas's implicit software pipeline is the **schedule** (each grid step
+    issues the next block's DMA while computing the current one — exactly
+    the AGG/TB double buffering of paper §IV-B),
+  * the VMEM block is the **wide fetch**: lane width 128 plays the role of
+    the fetch width FW, so the vectorization rule of Eq. 2 becomes "tile the
+    innermost dim to a multiple of 128 (and the sublane dim to 8/16)".
+
+``plan_*`` functions do what ``mapping.py`` does for the CGRA: pick block
+shapes such that the double-buffered working set fits the VMEM budget, with
+hardware-aligned MXU dims, and report the resulting unified-buffer structure
+for introspection.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e-class constants (see DESIGN.md §2)
+VMEM_BYTES = 96 * 1024 * 1024          # usable VMEM budget (conservative)
+LANE = 128                             # vector lane width == wide-fetch FW
+SUBLANE = {2: 16, 4: 8}                # min sublane tile by dtype bytes
+MXU = 128                              # systolic array edge
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _round_down_pow2(x: int, lo: int) -> int:
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return max(p, lo)
+
+
+@dataclass
+class StreamPlan:
+    """One operand's HBM->VMEM push stream (a physical unified buffer)."""
+
+    name: str
+    block: Tuple[int, ...]
+    grid_axes: Tuple[int, ...]          # which grid dims advance this stream
+    bytes_per_block: int
+    double_buffered: bool = True
+
+    @property
+    def vmem_bytes(self) -> int:
+        return self.bytes_per_block * (2 if self.double_buffered else 1)
+
+
+@dataclass
+class KernelPlan:
+    grid: Tuple[int, ...]
+    streams: List[StreamPlan]
+    notes: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def vmem_bytes(self) -> int:
+        return sum(s.vmem_bytes for s in self.streams)
+
+    def fits(self, budget: int = VMEM_BYTES) -> bool:
+        return self.vmem_bytes <= budget
+
+
+# ---------------------------------------------------------------------------
+# matmul: (M, K) x (K, N) -> (M, N)
+# ---------------------------------------------------------------------------
+
+
+def plan_matmul(
+    m: int,
+    n: int,
+    k: int,
+    dtype_bytes: int = 2,
+    vmem_budget: int = VMEM_BYTES,
+    out_bytes: int = 4,
+) -> KernelPlan:
+    """Block selection for the tiled matmul, unified-buffer style.
+
+    Strategy (the paper's capacity/bandwidth trade): start from MXU-aligned
+    maximal square-ish blocks and shrink the K block first (it only affects
+    pipelining depth, not output locality), then N, then M.
+    """
+    sub = SUBLANE.get(dtype_bytes, 8)
+    bm = min(_round_up(m, sub), 512)
+    bn = min(_round_up(n, LANE), 512)
+    bk = min(_round_up(k, LANE), 2048)
+
+    def mk() -> KernelPlan:
+        grid = (math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk))
+        streams = [
+            StreamPlan("lhs", (bm, bk), (0, 2), bm * bk * dtype_bytes),
+            StreamPlan("rhs", (bk, bn), (2, 1), bk * bn * dtype_bytes),
+            StreamPlan("acc", (bm, bn), (0, 1), bm * bn * out_bytes),
+            StreamPlan("out", (bm, bn), (0, 1), bm * bn * dtype_bytes),
+        ]
+        return KernelPlan(grid, streams, {"bm": bm, "bn": bn, "bk": bk})
+
+    plan = mk()
+    while not plan.fits(vmem_budget):
+        if bk > LANE:
+            bk //= 2
+        elif bn > LANE:
+            bn //= 2
+        elif bm > sub:
+            bm //= 2
+        else:
+            break
+        plan = mk()
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# flash attention: Q (B*H, S, D) with KV (B*Hkv, S, D)
+# ---------------------------------------------------------------------------
+
+
+def plan_attention(
+    seq_q: int,
+    seq_kv: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    vmem_budget: int = VMEM_BYTES,
+) -> KernelPlan:
+    bq = min(_round_down_pow2(seq_q, 1), 512)
+    bkv = min(_round_down_pow2(seq_kv, 1), 1024)
+    d = head_dim
+
+    def mk() -> KernelPlan:
+        grid = (math.ceil(seq_q / bq), math.ceil(seq_kv / bkv))
+        streams = [
+            StreamPlan("q", (bq, d), (0,), bq * d * dtype_bytes),
+            StreamPlan("k", (bkv, d), (1,), bkv * d * dtype_bytes),
+            StreamPlan("v", (bkv, d), (1,), bkv * d * dtype_bytes),
+            StreamPlan("scores", (bq, bkv), (0, 1), bq * bkv * 4, double_buffered=False),
+            StreamPlan("acc", (bq, d), (0,), bq * d * 4, double_buffered=False),
+            StreamPlan("out", (bq, d), (0,), bq * d * dtype_bytes),
+        ]
+        return KernelPlan(grid, streams, {"bq": bq, "bkv": bkv})
+
+    plan = mk()
+    while not plan.fits(vmem_budget):
+        if bkv > LANE:
+            bkv //= 2
+        elif bq > 16:
+            bq //= 2
+        else:
+            break
+        plan = mk()
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# 2-D stencil over row panels
+# ---------------------------------------------------------------------------
+
+
+def plan_stencil(
+    height: int,
+    width: int,
+    halo: int,
+    dtype_bytes: int = 4,
+    vmem_budget: int = VMEM_BYTES,
+) -> KernelPlan:
+    bh = min(_round_down_pow2(height, 8), 256)
+
+    def mk() -> KernelPlan:
+        grid = (math.ceil(height / bh),)
+        streams = [
+            StreamPlan(f"rows+{r}", (bh, width + 2 * halo), (0,),
+                       bh * (width + 2 * halo) * dtype_bytes)
+            for r in range(2 * halo + 1)
+        ] + [StreamPlan("out", (bh, width), (0,), bh * width * dtype_bytes)]
+        return KernelPlan(grid, streams, {"bh": bh})
+
+    plan = mk()
+    while not plan.fits(vmem_budget) and bh > 8:
+        bh //= 2
+        plan = mk()
+    if not plan.fits(vmem_budget):
+        # last resort: give up DMA/compute overlap (single-buffered streams)
+        for s in plan.streams:
+            s.double_buffered = False
+        plan.notes["single_buffered"] = True
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunked scan
+# ---------------------------------------------------------------------------
+
+
+def plan_ssd(
+    seq: int,
+    heads: int,
+    head_dim: int,
+    state: int,
+    chunk: int = 256,
+    dtype_bytes: int = 2,
+    vmem_budget: int = VMEM_BYTES,
+) -> KernelPlan:
+    c = min(chunk, seq)
+
+    def mk() -> KernelPlan:
+        grid = (math.ceil(seq / c),)
+        streams = [
+            StreamPlan("x", (c, heads * head_dim), (0,), c * heads * head_dim * dtype_bytes),
+            StreamPlan("b", (c, state), (0,), c * state * dtype_bytes),
+            StreamPlan("cc", (c, state), (0,), c * state * dtype_bytes),
+            StreamPlan("dt", (c, heads), (0,), c * heads * 4),
+            StreamPlan("state", (heads, head_dim, state), (), heads * head_dim * state * 4,
+                       double_buffered=False),
+            StreamPlan("y", (c, heads * head_dim), (0,), c * heads * head_dim * dtype_bytes),
+        ]
+        return KernelPlan(grid, streams, {"chunk": c})
+
+    plan = mk()
+    while not plan.fits(vmem_budget) and c > 16:
+        c //= 2
+        plan = mk()
+    return plan
+
+
+__all__ = [
+    "VMEM_BYTES",
+    "LANE",
+    "MXU",
+    "StreamPlan",
+    "KernelPlan",
+    "plan_matmul",
+    "plan_attention",
+    "plan_stencil",
+    "plan_ssd",
+]

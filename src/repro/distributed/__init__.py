@@ -1,0 +1,11 @@
+from .context import clear_sharding_context, hint, set_sharding_context
+from .sharding import ShardingPlan, make_plan, param_shardings
+
+__all__ = [
+    "clear_sharding_context",
+    "hint",
+    "set_sharding_context",
+    "ShardingPlan",
+    "make_plan",
+    "param_shardings",
+]

@@ -1,0 +1,58 @@
+"""Module-level sharding context.
+
+Model code is sharding-agnostic; it calls ``hint(x, kind)`` at the points
+where the layout matters (attention heads/sequence, MoE dispatch, logits).
+When a context is installed (by the launcher/dry-run), hints lower to
+``with_sharding_constraint``; otherwise they are no-ops, so single-device
+smoke tests run unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_CTX: Optional["_Context"] = None
+
+
+class _Context:
+    def __init__(self, mesh, plan):
+        self.mesh = mesh
+        self.plan = plan
+
+
+def set_sharding_context(mesh, plan) -> None:
+    global _CTX
+    _CTX = _Context(mesh, plan)
+
+
+def clear_sharding_context() -> None:
+    global _CTX
+    _CTX = None
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, plan):
+    set_sharding_context(mesh, plan)
+    try:
+        yield
+    finally:
+        clear_sharding_context()
+
+
+def hint(x: jax.Array, kind: str) -> jax.Array:
+    """Apply the active plan's activation constraint for ``kind`` (no-op when
+    no context is installed or the plan has no spec for this kind/shape)."""
+    if _CTX is None:
+        return x
+    spec = _CTX.plan.activation_spec(kind, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_CTX.mesh, spec)
+    )
+
+
+__all__ = ["set_sharding_context", "clear_sharding_context", "sharding_context", "hint"]

@@ -1,0 +1,100 @@
+"""Pipeline parallelism over the ``pod`` axis (optional alternative to DP).
+
+GPipe-style schedule expressed with ``shard_map`` + ``collective_permute``:
+each pod holds a contiguous stage of layers; microbatches stream through the
+stages, and the inter-pod handoff is a collective-permute ring — the paper's
+*chained* unified buffers at the coarsest granularity (a stage's activations
+are pushed to the next stage's buffer on a static schedule; the bubble is
+the pipeline's startup delay, exactly like the line-buffer startup cycles).
+
+Schedule (F = stages, M = microbatches):  step t ∈ [0, M+F-1); stage s works
+on microbatch t-s when 0 <= t-s < M.  All stages execute the same program
+every step (SPMD-uniform), with masking for bubble steps.
+
+This module is deliberately self-contained (activations-only pipelining of a
+per-stage ``apply_fn``) so it can wrap any of the model families; the
+dry-run's default pod-axis use remains data-parallel (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(
+    apply_stage: Callable,   # (stage_params, x (mb, ...), stage_idx) -> y
+    mesh: Mesh,
+    axis: str = "pod",
+):
+    """Returns fn(stage_params_stacked, microbatches) -> outputs.
+
+    ``stage_params_stacked``: pytree with a leading stage axis, sharded over
+    ``axis`` (each pod holds its own stage's slice).
+    ``microbatches``: (M, mb, ...) array; outputs: (M, mb, ...) from the
+    last stage.
+    """
+    n_stages = mesh.shape[axis]
+
+    def per_pod(params_local, micro):
+        # params_local: this pod's stage params (leading axis 1); micro is
+        # fully replicated (M, mb, ...)
+        stage = jax.lax.axis_index(axis)
+        m = micro.shape[0]
+        params_stage = jax.tree.map(lambda t: t[0], params_local)
+
+        def step(carry, t):
+            buf, outs = carry                      # buf: (mb, ...) in-flight
+            mb_idx = t - stage                     # microbatch this stage sees
+            active = (mb_idx >= 0) & (mb_idx < m)
+            # stage 0 ingests from the microbatch stream; others from buf
+            x_in = jnp.where(
+                stage == 0,
+                micro[jnp.clip(mb_idx, 0, m - 1)],
+                buf,
+            )
+            y = apply_stage(params_stage, x_in, stage)
+            y = jnp.where(active, y, buf)
+            # push to the next stage (ring; last stage's push wraps harmlessly)
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            )
+            # last stage records its finished microbatch
+            done_idx = t - (n_stages - 1)
+            outs = jnp.where(
+                ((stage == n_stages - 1) & (done_idx >= 0) & (done_idx < m)),
+                jax.lax.dynamic_update_slice_in_dim(
+                    outs, y[None], jnp.clip(done_idx, 0, m - 1), axis=0
+                ),
+                outs,
+            )
+            return (nxt, outs), None
+
+        buf0 = jnp.zeros_like(micro[0])
+        outs0 = jnp.zeros_like(micro)
+        (_, outs), _ = jax.lax.scan(
+            step, (buf0, outs0), jnp.arange(m + n_stages - 1)
+        )
+        # broadcast results from the last stage to every pod: zero-mask the
+        # other stages and sum over the axis
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)), axis
+        )
+        return outs
+
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        per_pod,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+
+
+__all__ = ["pipeline_forward"]

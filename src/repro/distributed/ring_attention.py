@@ -1,0 +1,95 @@
+"""Ring attention over a mesh axis (context parallelism without all-gather).
+
+The KV blocks rotate around the axis via ``collective_permute`` while every
+device keeps only its own Q rows and one in-flight KV block — the paper's
+shift-register chain (Fig. 8a) lifted to pod scale: a static schedule pushes
+each KV block through every chip exactly once, so peak KV memory per chip is
+O(S/n) instead of O(S) and the all-gather disappears.
+
+Forward-only (used by prefill; training would need the custom VJP of the
+ring — documented as future work in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def ring_attention(
+    q: jax.Array,    # (B, S, H, D) — S sharded over ``axis``
+    k: jax.Array,    # (B, S, Hkv, D)
+    v: jax.Array,    # (B, S, Hkv, D)
+    mesh: Mesh,
+    *,
+    axis: str = "model",
+    dp: tuple = (),
+    window: Optional[int] = None,
+) -> jax.Array:
+    n = mesh.shape[axis]
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    s_loc = s // n
+    scale = 1.0 / (d ** 0.5)
+
+    def per_device(q_loc, k_loc, v_loc):
+        # q_loc: (b_loc, s_loc, hq, d); kv rotate around the ring
+        me = jax.lax.axis_index(axis)
+        q_pos = me * s_loc + jnp.arange(s_loc)                # global rows
+        qg = q_loc.reshape(q_loc.shape[0], s_loc, hkv, g, d)
+
+        def step(carry, t):
+            m, l, acc, kc, vc = carry
+            src = (me + t) % n                                # block owner
+            k_pos = src * s_loc + jnp.arange(s_loc)
+            sco = jnp.einsum(
+                "bshgd,bchd->bshgc", qg, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+            sco = jnp.where(mask[None, :, None, None, :], sco, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sco, axis=-1))
+            p = jnp.exp(sco - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bshgc,bchd->bshgd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            # rotate KV to the next device (shift-register chain push)
+            perm = [(i, (i - 1) % n) for i in range(n)]
+            kc = jax.lax.ppermute(kc, axis, perm)
+            vc = jax.lax.ppermute(vc, axis, perm)
+            return (m_new, l, acc, kc, vc), None
+
+        b_loc = q_loc.shape[0]
+        m0 = jnp.full((b_loc, s_loc, hkv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b_loc, s_loc, hkv, g), jnp.float32)
+        a0 = jnp.zeros((b_loc, s_loc, hkv, g, d), jnp.float32)
+        (m, l, acc, _, _), _ = jax.lax.scan(
+            step, (m0, l0, a0, k_loc, v_loc), jnp.arange(n)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return out.reshape(b_loc, s_loc, hq, d).astype(q_loc.dtype)
+
+    spec_q = P(dp if dp else None, axis, None, None)
+    return shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(spec_q, spec_q, spec_q),
+        out_specs=spec_q,
+        check_rep=False,
+    )(q, k, v)
+
+
+__all__ = ["ring_attention"]

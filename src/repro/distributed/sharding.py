@@ -1,0 +1,271 @@
+"""Per-architecture sharding planner (DP/TP/EP/SP selection).
+
+The planner is the pod-scale twin of the paper's buffer-mapping step: given
+declarative "port" requirements (which tensor dims must stream together) and
+hardware divisibility constraints, it picks a legal layout:
+
+  * **DP** over ``pod`` x ``data`` for the batch,
+  * **TP** over ``model`` for every weight whose last/contracting dim divides
+    the axis (Megatron-style column/row split pairs),
+  * **attention strategy**: ``heads`` when the q-head count divides the model
+    axis (KV replicated when the KV-head count does not — GQA KV is small);
+    otherwise ``context`` (sequence/context parallelism — q rows sharded,
+    KV gathered), which is the paper's *banking* fallback,
+  * **EP** for MoE when n_experts divides the model axis (dbrx), else TP
+    inside each expert (qwen2-moe),
+  * KV caches shard their *sequence* dim over ``model`` (flash-decoding
+    style) — the paper's *chaining* (Eqs. 5-6) across chips.
+
+Every rule checks divisibility before sharding: JAX rejects uneven shards,
+so an undivisible dim stays replicated rather than failing to lower.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+@dataclass
+class ShardingPlan:
+    cfg: ModelConfig
+    mesh: Mesh
+    attn_strategy: str                    # "heads" | "context"
+    moe_strategy: str                     # "ep" | "tp" | "none"
+    fsdp: bool = False                    # also shard params over 'data'
+    seq_parallel: bool = False            # Megatron-SP residual stream
+    notes: Dict[str, str] = field(default_factory=dict)
+
+    # -- activations ---------------------------------------------------------
+    def activation_spec(self, kind: str, shape: Tuple[int, ...]) -> Optional[P]:
+        dp = dp_axes(self.mesh)
+        model = "model"
+        msize = self.mesh.shape[model]
+
+        def dv(dim: int) -> bool:
+            return shape[dim] % msize == 0 if dim < len(shape) else False
+
+        def dp_ok(dim: int = 0) -> Tuple[str, ...]:
+            # try the full dp tuple, then drop leading axes (e.g. a multi-pod
+            # microbatch that divides 'data' but not 'pod' x 'data')
+            for k in range(len(dp)):
+                axes = dp[k:]
+                n = 1
+                for a in axes:
+                    n *= self.mesh.shape[a]
+                if shape[dim] % n == 0 and shape[dim] >= n:
+                    return axes
+            return ()
+
+        if kind == "act":                 # (B, S, D) between blocks:
+            # sequence-parallel residual stream (Megatron-SP): the TP
+            # all-reduce decomposes into reduce-scatter + all-gather, halving
+            # collective bytes and sharding the norms
+            if self.seq_parallel and len(shape) == 3 and dv(1):
+                return P(dp_ok(), model, None)
+            return P(dp_ok(), None, None)
+        if kind == "q_heads":             # (B, S, H, dh)
+            if self.attn_strategy == "heads" and dv(2):
+                return P(dp_ok(), None, model, None)
+            if dv(1):
+                return P(dp_ok(), model, None, None)
+            return P(dp_ok(), None, None, None)
+        if kind == "kv_heads":            # (B, S, Hkv, dh) — gathered over model
+            return P(dp_ok(), None, model if self.attn_strategy == "heads" and dv(2) else None, None)
+        if kind == "attn_out":            # (B, S, H*dh)
+            return P(dp_ok(), None, None)
+        if kind == "logits":              # (B, S, V)
+            return P(dp_ok(), None, model if dv(2) else None)
+        if kind == "mlp_hidden":          # (B, S, F)
+            return P(dp_ok(), None, model if dv(2) else None)
+        if kind == "moe_groups":          # (G, gsz, D)
+            return P(dp_ok(), None, None)
+        if kind == "expert_in":           # (G, E, C, D)
+            if self.moe_strategy == "ep" and dv(1):
+                return P(dp_ok(), model, None, None)
+            return P(dp_ok(), None, None, None)
+        if kind == "expert_hidden":       # (G, E, C, F)
+            if self.moe_strategy == "ep" and dv(1):
+                return P(dp_ok(), model, None, None)
+            if dv(3):
+                return P(dp_ok(), None, None, model)
+            return P(dp_ok(), None, None, None)
+        if kind == "ssm_inner":           # (B, S, d_inner)
+            return P(dp_ok(), None, model if dv(2) else None)
+        if kind == "ssm_heads":           # (B, S, H, P)
+            return P(dp_ok(), None, model if dv(2) else None, None)
+        if kind == "kv_cache":            # (L, B, Smax, Hkv, dh) — chaining
+            return P(None, dp_ok(1), model if dv(2) else None, None, None)
+        if kind == "decode_tokens":       # (B,)
+            return P(dp_ok())
+        return None
+
+    # -- parameters ------------------------------------------------------------
+    def param_spec(self, path: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+        msize = self.mesh.shape["model"]
+
+        def last_if_div(*, dim=-1):
+            d = dim % len(shape)
+            specs = [None] * len(shape)
+            if shape[d] % msize == 0:
+                specs[d] = "model"
+            return P(*specs)
+
+        name = path[-1]
+        joined = "/".join(path)
+        if name == "embed":
+            spec = P("model" if shape[0] % msize == 0 else None, None)
+            return self._maybe_fsdp(spec, shape)
+        # attention: column-split (wq/wk/wv), row-split (wo)
+        if name in ("wq", "wk", "wv"):
+            return self._maybe_fsdp(last_if_div(), shape)
+        if name == "wo":
+            return self._maybe_fsdp(last_if_div(dim=-2), shape)
+        # MLP: column-split w1/w3, row-split w2
+        if name in ("w1", "w3"):
+            if "moe" in joined:
+                if self.moe_strategy == "ep" and shape[-3] % msize == 0:
+                    return self._maybe_fsdp(
+                        P(*([None] * (len(shape) - 3)), "model", None, None), shape
+                    )
+                return self._maybe_fsdp(last_if_div(), shape)
+            return self._maybe_fsdp(last_if_div(), shape)
+        if name == "w2":
+            if "moe" in joined:
+                if self.moe_strategy == "ep" and shape[-3] % msize == 0:
+                    return self._maybe_fsdp(
+                        P(*([None] * (len(shape) - 3)), "model", None, None), shape
+                    )
+                return self._maybe_fsdp(last_if_div(dim=-2), shape)
+            return self._maybe_fsdp(last_if_div(dim=-2), shape)
+        # mamba projections
+        if name in ("z_proj", "x_proj"):
+            return last_if_div()
+        if name in ("b_proj", "c_proj", "dt_proj"):
+            return last_if_div()
+        if name == "out_proj":
+            return last_if_div(dim=-2)
+        if name in ("conv_x",):
+            return last_if_div()
+        # small: router, norms, convs for b/c, biases — replicated
+        return P(*([None] * len(shape)))
+
+    def _maybe_fsdp(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """FSDP: additionally shard the largest unsharded dim over 'data'
+        (weights are gathered per layer during the forward pass)."""
+        if not self.fsdp:
+            return spec
+        dsize = self.mesh.shape.get("data", 1)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        cands = [
+            (shape[i], i) for i in range(len(shape))
+            if entries[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize
+        ]
+        if not cands:
+            return spec
+        _, i = max(cands)
+        entries[i] = "data"
+        return P(*entries)
+
+    def zero_spec(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Optimizer-state (and gradient-accumulator) spec: the parameter's
+        TP spec plus a data-parallel split on the largest divisible dim —
+        the distributed-optimizer / ZeRO sharding."""
+        dsize = self.mesh.shape.get("data", 1)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        flat = [e for ent in entries if ent for e in (ent if isinstance(ent, tuple) else (ent,))]
+        if "data" in flat:
+            return P(*entries)   # already data-sharded (FSDP params)
+        cands = [
+            (shape[i], i) for i in range(len(shape))
+            if entries[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize
+        ]
+        if not cands:
+            return P(*entries)
+        _, i = max(cands)
+        entries[i] = "data"
+        return P(*entries)
+
+    def batch_spec(self, name: str, shape: Tuple[int, ...]) -> P:
+        dp = dp_axes(self.mesh)
+        lead: Tuple[str, ...] = ()
+        for k in range(len(dp)):
+            axes = dp[k:]
+            n = 1
+            for a in axes:
+                n *= self.mesh.shape[a]
+            if shape[0] % n == 0 and shape[0] >= n:
+                lead = axes
+                break
+        return P(lead, *([None] * (len(shape) - 1)))
+
+
+def make_plan(
+    cfg: ModelConfig, mesh: Mesh, *, fsdp: Optional[bool] = None,
+    seq_parallel: bool = True,
+) -> ShardingPlan:
+    msize = mesh.shape["model"]
+    notes = {}
+    if seq_parallel:
+        notes["sp"] = "sequence-parallel residual stream (RS+AG instead of AR)"
+    if fsdp is None:
+        # bf16 params per chip beyond ~4 GB after TP -> shard over data too
+        fsdp = cfg.param_count() * 2 / msize > 4e9
+    if fsdp:
+        notes["fsdp"] = "params sharded over data axis as well (per-chip budget)"
+
+    if cfg.attention_free:
+        attn = "none"
+    elif cfg.n_heads % msize == 0:
+        attn = "heads"
+        if cfg.n_kv_heads % msize:
+            notes["kv"] = f"kv heads {cfg.n_kv_heads} replicated (not divisible by {msize})"
+    else:
+        attn = "context"
+        notes["attn"] = (
+            f"q heads {cfg.n_heads} not divisible by model={msize}: "
+            "context parallelism (q rows sharded over seq)"
+        )
+    if cfg.n_experts == 0:
+        moe = "none"
+    elif cfg.n_experts % msize == 0:
+        moe = "ep"
+    else:
+        moe = "tp"
+        notes["moe"] = (
+            f"{cfg.n_experts} experts not divisible by model={msize}: "
+            f"TP inside experts (d_ff {cfg.moe_d_ff})"
+        )
+    return ShardingPlan(cfg, mesh, attn, moe, fsdp, seq_parallel, notes)
+
+
+def param_shardings(plan: ShardingPlan, params_tree) -> object:
+    """Tree of NamedShardings matching a (shape-struct) params tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+
+    def path_names(kp):
+        out = []
+        for k in kp:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+        return tuple(out)
+
+    shardings = [
+        NamedSharding(plan.mesh, plan.param_spec(path_names(kp), v.shape))
+        for kp, v in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+__all__ = ["ShardingPlan", "make_plan", "param_shardings", "dp_axes"]

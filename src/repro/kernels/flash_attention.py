@@ -1,0 +1,116 @@
+"""UB-planned blockwise (flash) attention Pallas kernel.
+
+Unified-buffer view: the KV stream is *pushed* through VMEM block by block
+while the Q block and the running (m, l, acc) statistics stay resident —
+the same storage-minimization argument as the paper's line buffers: only one
+KV block is ever live, so the working set is O(bq*d + bkv*d) instead of
+O(S^2).  The grid's kv axis is the push-memory schedule; ``pl.when`` gates
+are the SG (schedule generator) enables.
+
+Causal masking assumes the query block at row qi attends to kv positions
+<= qi (self-attention layout, seq_q == seq_kv when causal=True).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ubplan import plan_attention
+
+NEG_INF = -1e30
+STATS_LANES = 128   # stats tiles keep full lane width for TPU layout
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, bq: int, bkv: int, n_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        run = (ki * bkv) <= (qi * bq + bq - 1)
+    else:
+        run = ki >= 0
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                    # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                           # (bq, bkv)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]                                 # (bq, LANES)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new[:, :1])                       # (bq, bkv)
+        alpha = jnp.exp(m_prev - m_new)                     # (bq, LANES)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / l_ref[:, :1])[None].astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, Sq, D)  — batch*heads folded into B
+    k: jax.Array,   # (B, Skv, D)
+    v: jax.Array,   # (B, Skv, D)
+    *,
+    causal: bool = True,
+    block_q: int | None = None,
+    block_kv: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, d = q.shape
+    _, skv, _ = k.shape
+    if causal:
+        assert sq == skv, "causal masking assumes self-attention layout"
+    plan = plan_attention(sq, skv, d, dtype_bytes=q.dtype.itemsize)
+    bq = block_q or min(plan.notes["bq"], sq)
+    bkv = block_kv or min(plan.notes["bkv"], skv)
+    assert sq % bq == 0 and skv % bkv == 0
+    n_kv = skv // bkv
+    grid = (b, sq // bq, n_kv)
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, bq=bq, bkv=bkv, n_kv=n_kv
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bi, qi, ki: (bi, qi, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bi, qi, ki: (bi, ki, 0)),
+            pl.BlockSpec((1, bkv, d), lambda bi, qi, ki: (bi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bi, qi, ki: (bi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, STATS_LANES), jnp.float32),   # running max
+            pltpu.VMEM((bq, STATS_LANES), jnp.float32),   # running sum
+            pltpu.VMEM((bq, d), jnp.float32),             # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+__all__ = ["flash_attention"]

@@ -1,0 +1,76 @@
+"""UB-planned tiled matmul Pallas kernel.
+
+The (grid, BlockSpec) pair realizes the paper's physical unified buffer on
+TPU: the LHS/RHS streams are pushed HBM->VMEM block by block under an affine
+access map, double-buffered by the Pallas pipeline (the AGG/TB role), and the
+fp32 accumulator block lives in VMEM scratch until its K loop completes
+(storage minimization: only one (bm, bn) output block is ever live).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ubplan import plan_matmul
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N), fp32 accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    plan = plan_matmul(m, n, k, dtype_bytes=a.dtype.itemsize)
+    bm = block_m or min(plan.notes["bm"], m)
+    bn = block_n or min(plan.notes["bn"], n)
+    bk = block_k or min(plan.notes["bk"], k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"matmul dims ({m},{n},{k}) must divide blocks ({bm},{bn},{bk})"
+    )
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        # fp32 accumulator block persists across the K loop (grid iterates
+        # k innermost; Pallas TPU grids are sequential, so scratch carries)
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+__all__ = ["matmul"]

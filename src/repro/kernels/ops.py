@@ -1,0 +1,54 @@
+"""Jit'd public wrappers for the Pallas kernels (the ``ops.py`` layer).
+
+On CPU (this container) the kernels run in interpret mode; on TPU the same
+code paths compile natively.  ``use_pallas=False`` falls back to the pure-jnp
+oracle — the dry-run path uses the oracles' chunked XLA equivalents so the
+whole model still compiles for the host-platform mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .matmul import matmul
+from .ssd import ssd_scan
+from .stencil import stencil3x3
+
+_ON_TPU = jax.default_backend() == "tpu"
+_INTERPRET = not _ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def matmul_op(a, b, use_pallas: bool = True):
+    if use_pallas:
+        return matmul(a, b, interpret=_INTERPRET)
+    return ref.matmul_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def stencil3x3_op(x, weights, use_pallas: bool = True):
+    if use_pallas:
+        return stencil3x3(x, weights, interpret=_INTERPRET)
+    return ref.stencil3x3_ref(x, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def attention_op(q, k, v, causal: bool = True, use_pallas: bool = True):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, interpret=_INTERPRET)
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def ssd_op(x, dt, a, b, c, use_pallas: bool = True):
+    if use_pallas:
+        return ssd_scan(x, dt, a, b, c, interpret=_INTERPRET)
+    return ref.ssd_ref(x, dt, a, b, c)
+
+
+__all__ = ["matmul_op", "stencil3x3_op", "attention_op", "ssd_op"]

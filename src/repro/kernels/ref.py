@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` of each).
+
+These are the golden semantics the kernels are validated against in
+``tests/test_kernels.py`` across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# stencil: 3x3 weighted convolution, 'valid' padding
+# ---------------------------------------------------------------------------
+
+
+def stencil3x3_ref(x: jax.Array, weights: jax.Array) -> jax.Array:
+    """x: (H+2, W+2) padded input; weights: (3, 3) -> out (H, W)."""
+    h, w = x.shape[0] - 2, x.shape[1] - 2
+    out = jnp.zeros((h, w), x.dtype)
+    for dy in range(3):
+        for dx in range(3):
+            out = out + weights[dy, dx] * x[dy : dy + h, dx : dx + w]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    ).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (single head batch folded): q (B, Sq, D), k/v (B, Skv, D)
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        # align the causal diagonal to the *end* of the KV window
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD: sequential state-space recurrence (the exact semantics)
+# ---------------------------------------------------------------------------
+
+
+def ssd_ref(
+    x: jax.Array,      # (S, H, P)   inputs per head
+    dt: jax.Array,     # (S, H)      softplus-activated step sizes (> 0)
+    a: jax.Array,      # (H,)        negative state decay rate per head
+    b: jax.Array,      # (S, N)      input projection (shared across heads)
+    c: jax.Array,      # (S, N)      output projection
+) -> jax.Array:
+    """y_t = C_t^T h_t with  h_t = exp(a*dt_t) h_{t-1} + dt_t * B_t x_t^T.
+
+    Returns y: (S, H, P).  fp32 recurrence — the oracle for the chunked
+    (state-space duality) kernel.
+    """
+    s, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(hstate, t):
+        decay = jnp.exp(af * dtf[t])[:, None, None]          # (H,1,1)
+        upd = dtf[t][:, None, None] * (
+            xf[t][:, :, None] * bf[t][None, None, :]          # (H,P,N)
+        )
+        hstate = decay * hstate + upd
+        y = jnp.einsum("hpn,n->hp", hstate, cf[t])
+        return hstate, y
+
+    h0 = jnp.zeros((h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.astype(x.dtype)
+
+
+__all__ = ["stencil3x3_ref", "matmul_ref", "attention_ref", "ssd_ref"]

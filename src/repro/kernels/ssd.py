@@ -1,0 +1,103 @@
+"""UB-planned Mamba2 SSD (state-space duality) chunked Pallas kernel.
+
+The SSD insight: the SSM recurrence over a chunk factors into dense matmuls
+(MXU-friendly) plus a tiny carried state.  Unified-buffer view: the chunk
+stream is the push memory's iteration domain; the carried (H, P, N) state is
+the storage-minimized buffer (the only live data between chunks) — the DNN
+double-buffer policy of paper §V-B with a state register instead of a tile.
+
+Semantics (per head h, step t):
+    h_t = exp(a_h * dt_t) h_{t-1} + dt_t * x_t B_t^T
+    y_t = h_t C_t
+matching ``ref.ssd_ref`` exactly (fp32 chunk math).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ubplan import plan_ssd
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, n_chunks: int
+):
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # (L, H, P)
+    dt = dt_ref[...].astype(jnp.float32)      # (L, H)
+    a = a_ref[...].astype(jnp.float32)        # (H,)
+    b = b_ref[...].astype(jnp.float32)        # (L, N)
+    c = c_ref[...].astype(jnp.float32)        # (L, N)
+    h_in = h_ref[...]                         # (H, P, N) fp32
+
+    # cumulative log-decay within the chunk: s[l, h] = sum_{j<=l} a_h dt_j
+    s = jnp.cumsum(a[None, :] * dt, axis=0)   # (L, H)
+    l_len = x.shape[0]
+
+    # ---- intra-chunk (the dense "dual" form): y_intra = (G * M) @ x
+    g = jnp.einsum("ln,mn->lm", c, b)                       # (L, L)
+    gap = s[:, None, :] - s[None, :, :]                     # (L, L, H) s_i - s_j
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (l_len, l_len), 1)
+        <= jax.lax.broadcasted_iota(jnp.int32, (l_len, l_len), 0)
+    )
+    m = jnp.where(mask[:, :, None], jnp.exp(gap) * dt[None, :, :], 0.0)  # (L,L,H)
+    y_intra = jnp.einsum("lm,lmh,mhp->lhp", g, m, x)
+
+    # ---- inter-chunk: contribution of the carried state
+    y_inter = jnp.exp(s)[:, :, None] * jnp.einsum("ln,hpn->lhp", c, h_in)
+
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update for the next chunk
+    tail = jnp.exp(s[-1][None, :] - s) * dt                 # (L, H)
+    h_new = jnp.exp(s[-1])[:, None, None] * h_in + jnp.einsum(
+        "lh,lhp,ln->hpn", tail, x, b
+    )
+    h_ref[...] = h_new
+
+
+def ssd_scan(
+    x: jax.Array,    # (S, H, P)
+    dt: jax.Array,   # (S, H)
+    a: jax.Array,    # (H,)
+    b: jax.Array,    # (S, N)
+    c: jax.Array,    # (S, N)
+    *,
+    chunk: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    s_len, h, p = x.shape
+    n = b.shape[-1]
+    plan = plan_ssd(s_len, h, p, n)
+    l = chunk or min(plan.notes["chunk"], s_len)
+    assert s_len % l == 0, f"seq {s_len} must divide chunk {l}"
+    n_chunks = s_len // l
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=n_chunks),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((l, h, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((l, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((l, n), lambda i: (i, 0)),
+            pl.BlockSpec((l, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((l, h, p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_len, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+
+
+__all__ = ["ssd_scan"]

@@ -1,0 +1,65 @@
+"""UB-planned 2-D stencil (3x3 convolution) Pallas kernel.
+
+This is the paper's core domain re-targeted to TPU.  The CGRA implementation
+streams pixels through shift registers + a line-delay SRAM; the TPU-native
+formulation streams *row panels* HBM->VMEM and realizes the halo reuse by
+pushing three row-shifted views of the padded input through three block
+streams (the same values, offset by one row — exactly the shift-register
+chain of Fig. 8a, lifted from pixels to rows).  Column taps become intra-
+block static slices (register-level shifts within a VREG row).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.ubplan import plan_stencil
+
+
+def _stencil_kernel(r0_ref, r1_ref, r2_ref, w_ref, o_ref, *, width: int):
+    w = w_ref[...]
+    rows = (r0_ref[...], r1_ref[...], r2_ref[...])
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for dy in range(3):
+        r = rows[dy].astype(jnp.float32)
+        for dx in range(3):
+            acc = acc + w[dy, dx] * r[:, dx : dx + width]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def stencil3x3(
+    x: jax.Array,
+    weights: jax.Array,
+    *,
+    block_h: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (H+2, W+2) padded input, weights: (3, 3) -> (H, W) output."""
+    hp, wp = x.shape
+    h, w = hp - 2, wp - 2
+    plan = plan_stencil(h, w, halo=1, dtype_bytes=x.dtype.itemsize)
+    bh = block_h or min(plan.notes["bh"], h)
+    while h % bh:          # fall back to the largest dividing block height
+        bh -= 1
+    assert h % bh == 0, f"height {h} must divide block {bh}"
+    grid = (h // bh,)
+    # three row-shifted views: view r covers rows [r, r + H) of the padded
+    # input — the row-level shift-register chain
+    views = [jax.lax.slice(x, (r, 0), (r + h, wp)) for r in range(3)]
+    row_spec = pl.BlockSpec((bh, wp), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_stencil_kernel, width=w),
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec,
+                  pl.BlockSpec((3, 3), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bh, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=interpret,
+    )(*views, weights)
+
+
+__all__ = ["stencil3x3"]

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the production step program is lowered with ShapeDtypeStruct
+stand-ins (no allocation), compiled for the 16x16 single-pod / 2x16x16
+multi-pod mesh, and the compiled artifact yields:
+
+  * ``memory_analysis()``  — proves the program fits per-chip HBM,
+  * ``cost_analysis()``    — HLO FLOPs / bytes for the roofline terms,
+  * HLO text               — collective bytes (roofline collective term).
+
+Results are cached as JSON under ``results/dryrun`` for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.context import sharding_context
+from repro.distributed.sharding import dp_axes, make_plan, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import forward_prefill, init_kv_cache, init_params
+from repro.models.config import ModelConfig
+from repro.models.model import PREFIX_LEN
+from repro.roofline import analyze_compiled
+from repro.serve.engine import kv_cache_specs, make_serve_step
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import TrainState, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# per-arch train_4k settings (hillclimbed in EXPERIMENTS.md §Perf):
+# fewer microbatches => fewer per-microbatch gradient reductions (the
+# dominant collective) at the price of activation memory — the II-search
+# trade of paper §V-B at pod scale
+MICROBATCHES = {
+    "dbrx_132b": 16,     # + bf16 grad accumulator (see TRAIN_OVERRIDES)
+    "qwen3_14b": 4,
+    "pixtral_12b": 16,
+    "glm4_9b": 8,
+    "zamba2_7b": 16,
+    "qwen2_moe_a2_7b": 8,
+    "mamba2_2_7b": 8,
+    "default": 8,
+}
+
+# extra per-arch train-step options (EXPERIMENTS.md §Perf iteration log)
+TRAIN_OVERRIDES = {
+    "dbrx_132b": {"grad_acc_dtype": "bfloat16"},
+}
+
+# multi-pod microbatch overrides: the microbatch must divide the doubled
+# data parallelism (pod x data = 32) for full batch sharding
+MICROBATCHES_MP = {
+    "dbrx_132b": 8,
+}
+
+# per-arch sharding-plan overrides (§Perf B4: the sequence-parallel residual
+# stream reshards dbrx's vocab-sharded embedding gather through full
+# replication under FSDP — 29.9 GB/chip vs 6.9 GB — so it is off for dbrx)
+PLAN_OVERRIDES = {
+    "dbrx_132b": {"seq_parallel": False},
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "skipped: pure full-attention arch — 500k-token contexts need "
+            "sub-quadratic attention (DESIGN.md §4)"
+        )
+    return True, ""
+
+
+def eval_shape_tree(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def batch_specs(cfg: ModelConfig, plan, batch: int, seq: int) -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStructs, NamedShardings) for a train/prefill batch."""
+    mesh = plan.mesh
+    toks = seq - (PREFIX_LEN if cfg.frontend != "none" else 0)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, toks), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, toks), jnp.int32),
+    }
+    if cfg.frontend != "none":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, PREFIX_LEN, cfg.d_model), jnp.bfloat16
+        )
+    shardings = {
+        k: NamedSharding(mesh, plan.batch_spec(k, v.shape)) for k, v in specs.items()
+    }
+    return specs, shardings
+
+
+def lower_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    mesh=None,
+    kv_chunk: int = 512,
+    microbatches: Optional[int] = None,
+    remat: bool = True,
+    plan_overrides: Optional[Dict] = None,
+    zero_grads: bool = True,
+    grad_comm_dtype=None,
+    grad_acc_dtype=None,
+):
+    """Build + lower + compile one cell.  Returns (compiled, report dict)."""
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, {"arch": arch, "shape": shape, "status": "skipped", "why": why}
+
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    key0 = arch.replace("-", "_").replace(".", "_")
+    merged_overrides = dict(PLAN_OVERRIDES.get(key0, {}))
+    merged_overrides.update(plan_overrides or {})
+    plan = make_plan(cfg, mesh, **merged_overrides)
+    info = SHAPES[shape]
+    seq, batch = info["seq"], info["batch"]
+    chips = mesh.size
+
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    )
+    p_shardings = param_shardings(plan, params_shape)
+
+    t0 = time.time()
+    with sharding_context(mesh, plan):
+        if info["kind"] == "train":
+            key = arch.replace("-", "_").replace(".", "_")
+            mb = microbatches or (
+                MICROBATCHES_MP.get(key) if multi_pod and key in MICROBATCHES_MP
+                else MICROBATCHES.get(key, MICROBATCHES["default"])
+            )
+            ov = TRAIN_OVERRIDES.get(key, {})
+            if grad_acc_dtype is None and "grad_acc_dtype" in ov:
+                grad_acc_dtype = jnp.dtype(ov["grad_acc_dtype"]).type
+            opt_cfg = AdamWConfig()
+            # opt-state shardings: ZeRO over data on top of the param spec
+            flat_p, tdef = jax.tree_util.tree_flatten(params_shape)
+            flat_ps = tdef.flatten_up_to(p_shardings)
+            flat_os = [
+                NamedSharding(mesh, plan.zero_spec(sh.spec, leaf.shape))
+                for leaf, sh in zip(flat_p, flat_ps)
+            ]
+            zero_sh = tdef.unflatten(flat_os)
+            step = make_train_step(
+                cfg, opt_cfg, microbatches=mb, kv_chunk=kv_chunk, remat=remat,
+                grad_shardings=zero_sh if zero_grads else None,
+                comm_dtype=grad_comm_dtype,
+                acc_dtype=grad_acc_dtype,
+            )
+            opt_sh = {
+                "m": zero_sh,
+                "v": zero_sh,
+                "step": NamedSharding(mesh, P()),
+            }
+            state_shape = TrainState(
+                params_shape,
+                jax.eval_shape(adamw_init, params_shape),
+                jax.ShapeDtypeStruct((2,), jnp.uint32),
+            )
+            bspecs, bshard = batch_specs(cfg, plan, batch, seq)
+            jit_step = jax.jit(
+                step,
+                in_shardings=(
+                    TrainState(p_shardings, opt_sh, NamedSharding(mesh, P())),
+                    bshard,
+                ),
+                out_shardings=(
+                    TrainState(p_shardings, opt_sh, NamedSharding(mesh, P())),
+                    None,
+                ),
+                donate_argnums=(0,),
+            )
+            lowered = jit_step.lower(state_shape, bspecs)
+            n_tokens = batch * seq
+            model_flops = 6.0 * cfg.active_param_count() * n_tokens
+        elif info["kind"] == "prefill":
+            def prefill(params, b):
+                return forward_prefill(cfg, params, b, kv_chunk=kv_chunk)
+
+            bspecs, bshard = batch_specs(cfg, plan, batch, seq)
+            bspecs.pop("labels")
+            bshard.pop("labels")
+            lowered = jax.jit(
+                prefill, in_shardings=(p_shardings, bshard)
+            ).lower(params_shape, bspecs)
+            model_flops = 2.0 * cfg.active_param_count() * batch * seq
+        else:  # decode
+            serve_step = make_serve_step(cfg)
+            cache_shape = jax.eval_shape(
+                lambda: init_kv_cache(cfg, batch, seq, dtype=jnp.bfloat16)
+            )
+            cspecs = kv_cache_specs(plan, cache_shape)
+            c_shardings = {
+                k: NamedSharding(mesh, cspecs[k]) for k in cache_shape
+            }
+            dpn = 1
+            for a in dp_axes(mesh):
+                dpn *= mesh.shape[a]
+            tok_spec = P(dp_axes(mesh)) if batch % dpn == 0 else P()
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(
+                    p_shardings,
+                    c_shardings,
+                    NamedSharding(mesh, tok_spec),
+                    NamedSharding(mesh, P()),
+                ),
+                donate_argnums=(1,),
+            ).lower(
+                params_shape,
+                cache_shape,
+                jax.ShapeDtypeStruct((batch,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+            model_flops = 2.0 * cfg.active_param_count() * batch
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    report = analyze_compiled(f"{arch}/{shape}", compiled, chips, model_flops)
+    out = {
+        "arch": arch,
+        "shape": shape,
+        "status": "ok",
+        "multi_pod": multi_pod,
+        "chips": chips,
+        "mesh": dict(zip(mesh.axis_names, (int(v) for v in mesh.devices.shape))),
+        "plan": {
+            "attn": plan.attn_strategy,
+            "moe": plan.moe_strategy,
+            "fsdp": plan.fsdp,
+            **plan.notes,
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_chip": int(ma.argument_size_in_bytes),
+            "output_bytes_per_chip": int(ma.output_size_in_bytes),
+            "temp_bytes_per_chip": int(ma.temp_size_in_bytes),
+            "peak_gb_per_chip": round(
+                (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 1e9, 3
+            ),
+            "fits_16gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes) < 16e9,
+        },
+        "roofline": report.as_dict(),
+    }
+    return compiled, out
+
+
+def run_cell_cached(arch, shape, multi_pod=False, force=False, **kw):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}"
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        _, out = lower_cell(arch, shape, multi_pod=multi_pod, **kw)
+    except Exception as e:  # record the failure — these are bugs to fix
+        out = {
+            "arch": arch, "shape": shape, "status": "error",
+            "multi_pod": multi_pod,
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        a = a.replace("-", "_").replace(".", "_")
+        for s in shapes:
+            cells.append((a, s))
+
+    for a, s in cells:
+        out = run_cell_cached(a, s, multi_pod=args.multi_pod, force=args.force)
+        status = out["status"]
+        if status == "ok":
+            r = out["roofline"]
+            print(
+                f"{a:18s} {s:12s} {'MP' if args.multi_pod else 'SP'} OK  "
+                f"mem={out['memory']['peak_gb_per_chip']:6.2f}GB "
+                f"tc={r['t_compute']*1e3:8.3f}ms tm={r['t_memory']*1e3:8.3f}ms "
+                f"tcoll={r['t_collective']*1e3:8.3f}ms dom={r['dominant']:10s} "
+                f"frac={r['roofline_fraction']:.3f}"
+            )
+        elif status == "skipped":
+            print(f"{a:18s} {s:12s} SKIP ({out['why'][:60]}...)")
+        else:
+            print(f"{a:18s} {s:12s} ERROR {out['error'][:100]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  Single pod: 16x16 = 256 chips (data, model);
+multi-pod: 2x16x16 = 512 chips (pod, data, model) — the ``pod`` axis is an
+outer data-parallel axis by default (optionally a pipeline axis, see
+distributed/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,111 @@
+"""Training launcher: end-to-end driver with checkpoint/restart.
+
+On this CPU container it trains *reduced* configs (the quickstart/examples
+path); on a real pod the same driver runs the full configs — the only
+difference is the mesh and the config, both CLI-selectable.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.models.model import PREFIX_LEN
+from repro.train import (
+    AdamWConfig,
+    DataPipeline,
+    TrainState,
+    adamw_init,
+    latest_step,
+    make_train_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.fault import StragglerMonitor
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.2f}M params, "
+          f"family={cfg.family}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,
+                          compress_grads=args.compress_grads)
+    step_fn = jax.jit(
+        make_train_step(cfg, opt_cfg, microbatches=args.microbatches,
+                        kv_chunk=min(128, args.seq), remat=True),
+        donate_argnums=(0,),
+    )
+
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    opt = adamw_init(params)
+    state = TrainState(params, opt, jax.random.PRNGKey(1))
+    start = 0
+
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            p, o, meta = restore_checkpoint(args.ckpt_dir, last, params, opt)
+            state = TrainState(
+                jax.tree.map(jnp.asarray, p), jax.tree.map(jnp.asarray, o),
+                jax.random.PRNGKey(1),
+            )
+            start = meta["step"]
+            print(f"[train] restored step {start} from {args.ckpt_dir}")
+
+    data = DataPipeline(
+        cfg.vocab, args.batch, args.seq, seed=0, start_step=start,
+        prefix_dim=cfg.d_model if cfg.frontend != "none" else 0,
+    )
+    monitor = StragglerMonitor()
+    t_start = time.time()
+    try:
+        for step in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if monitor.observe(step, dt):
+                print(f"[train] step {step}: straggler ({dt:.3f}s)")
+            if step % args.log_every == 0 or step == args.steps - 1:
+                toks = args.batch * args.seq / dt
+                print(f"[train] step {step:5d} loss={loss:8.4f} "
+                      f"gnorm={float(metrics['grad_norm']):7.3f} "
+                      f"{dt*1e3:7.1f}ms {toks/1e3:7.1f}k tok/s")
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step + 1, state.params,
+                                state.opt, data.state(), async_save=True)
+    finally:
+        data.close()
+    print(f"[train] done in {time.time()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

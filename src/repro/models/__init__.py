@@ -1,0 +1,11 @@
+from .config import ModelConfig
+from .model import init_params, forward_train, forward_prefill, decode_step, init_kv_cache
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "forward_train",
+    "forward_prefill",
+    "decode_step",
+    "init_kv_cache",
+]

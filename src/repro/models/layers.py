@@ -1,0 +1,259 @@
+"""Transformer building blocks: RMSNorm, RoPE, chunked GQA attention, MLP.
+
+Attention is implemented *blockwise over the KV sequence* (running-softmax,
+the XLA twin of ``kernels/flash_attention.py``): only one KV chunk of scores
+is ever live, which is what lets the 32k-prefill shapes compile inside the
+dry-run memory budget.  This is the unified-buffer storage-minimization
+argument applied at the XLA level (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import hint
+
+NEG_INF = -1e30
+
+# attention score precision for the chunked path: f32 is the safe default;
+# bf16 halves the dominant HBM traffic of training attention (running-max
+# stats stay f32) — set via set_score_dtype, measured in EXPERIMENTS.md §Perf
+_SCORE_DTYPE = jnp.float32
+
+# attention implementation for the chunked train/prefill path:
+#   "xla"  — running-softmax scan over KV chunks (compiles everywhere)
+#   "ring" — collective-permute KV rotation over the model axis (forward
+#            only; requires an active sharding context with context strategy)
+_ATTN_IMPL = "xla"
+
+
+def set_score_dtype(dtype) -> None:
+    global _SCORE_DTYPE
+    _SCORE_DTYPE = dtype
+
+
+def set_attention_impl(impl: str) -> None:
+    global _ATTN_IMPL
+    assert impl in ("xla", "ring")
+    _ATTN_IMPL = impl
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                                # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def chunked_gqa_attention(
+    q: jax.Array,            # (B, Sq, Hq, D)
+    k: jax.Array,            # (B, Skv, Hkv, D)
+    v: jax.Array,            # (B, Skv, Hkv, D)
+    *,
+    q_offset=0,              # global position of q[0] (int or traced scalar)
+    window=None,             # traced or static: attend to [pos-window, pos]
+    kv_chunk: int = 512,
+    inner_remat: bool = True,
+) -> jax.Array:
+    """Causal blockwise attention with running softmax; O(Sq * kv_chunk)
+    score memory.  GQA via head grouping.  ``window`` of None/0 means full
+    causal attention.
+
+    ``inner_remat`` rematerializes each KV-chunk step in the backward pass —
+    without it, AD saves every chunk's score matrix (O(S^2) residuals),
+    exactly what flash-attention kernels avoid; with it, only the (m, l,
+    acc) running stats are saved.  This is the XLA-level twin of the Pallas
+    flash kernel's memory structure."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scale = 1.0 / (d ** 0.5)
+    n_chunks = max(1, skv // kv_chunk)
+    assert skv % n_chunks == 0
+    c = skv // n_chunks
+    kc = k.reshape(b, n_chunks, c, hkv, d).swapaxes(0, 1)    # (n, B, c, Hkv, D)
+    vc = v.reshape(b, n_chunks, c, hkv, d).swapaxes(0, 1)
+
+    q_pos = q_offset + jnp.arange(sq)                         # (Sq,)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kck, vck = inp
+        s = jnp.einsum(
+            "bshgd,bchd->bshgc", qg, kck,
+            preferred_element_type=_SCORE_DTYPE,
+        ) * jnp.asarray(scale, _SCORE_DTYPE)                  # (B,Sq,Hkv,G,c)
+        k_pos = ci * c + jnp.arange(c)                        # (c,)
+        mask = k_pos[None, :] <= q_pos[:, None]               # (Sq, c)
+        if window is not None:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(mask[None, :, None, None, :], s, jnp.asarray(NEG_INF, s.dtype))
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+        # p stays in the score dtype end-to-end (no materialized f32 copy);
+        # sums/accumulators stay f32 via dtype-accumulating reductions
+        p = jnp.exp(s - m_new[..., None].astype(s.dtype))
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bshgc,bchd->bshgd", p.astype(vck.dtype), vck,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, g, d), jnp.float32)
+    step_fn = jax.checkpoint(step) if inner_remat else step
+    (m, l, acc), _ = jax.lax.scan(
+        step_fn, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attention_block(
+    x: jax.Array,                    # (B, S, D)
+    p: dict,                         # attn params
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    qk_norm: bool,
+    norm_eps: float,
+    positions: jax.Array,            # (S,)
+    window=None,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"], norm_eps)
+        k = rms_norm(k, p["k_norm"], norm_eps)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    q = hint(q, "q_heads")
+    if _ATTN_IMPL == "ring":
+        from repro.distributed import context as _ctx
+        from repro.distributed.ring_attention import ring_attention
+        from repro.distributed.sharding import dp_axes
+
+        c = _ctx._CTX
+        if (
+            c is not None
+            and c.plan.attn_strategy == "context"
+            and s % c.mesh.shape["model"] == 0
+            and b % max(1, _dp_size(c.mesh)) == 0
+        ):
+            w = None if window is None else window
+            o = ring_attention(
+                q, k, v, c.mesh, axis="model", dp=dp_axes(c.mesh), window=w
+            )
+            o = hint(o, "q_heads")
+            return o.reshape(b, s, n_heads * head_dim) @ p["wo"]
+    k = hint(k, "kv_heads")
+    v = hint(v, "kv_heads")
+    o = chunked_gqa_attention(q, k, v, window=window, kv_chunk=min(kv_chunk, s))
+    o = hint(o, "q_heads")
+    return o.reshape(b, s, n_heads * head_dim) @ p["wo"]
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            n *= mesh.shape[a]
+    return n
+
+
+def swiglu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    h = hint(jax.nn.silu(x @ p["w1"]) * (x @ p["w3"]), "mlp_hidden")
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# decode-time attention against a KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, Hq, D)
+    k_cache: jax.Array,    # (B, Hkv, Smax, D) — holds positions < pos
+    v_cache: jax.Array,    # (B, Hkv, Smax, D)
+    pos,                   # scalar: index of the *current* token
+    *,
+    window=None,
+    k_new=None,            # (B, Hkv, 1, D): the current token's K (not yet
+    v_new=None,            #  in the cache — written back *after* the layer
+                           #  scan so the cache buffer updates in place once)
+) -> jax.Array:
+    """Cache layout (B, H, S, D): the QK^T / PV dots contract/stream along
+    the last two dims with no relayout of the (large) cache, and the self
+    term for the current token is merged via explicit max/sum algebra so a
+    sequence-sharded cache never gets gathered (flash-decoding)."""
+    b, _, hq, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum(
+        "bhgd,bhsd->bhgs", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    ) * scale                                                  # (B,Hkv,G,Smax)
+    k_pos = jnp.arange(smax)
+    mask = k_pos < pos if k_new is not None else k_pos <= pos
+    if window is not None:
+        mask = mask & (pos - k_pos < window)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    if k_new is None:
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bhgs,bhsd->bhgd", p.astype(v_cache.dtype), v_cache,
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        s_self = jnp.einsum(
+            "bhgd,bhsd->bhgs", qg, k_new, preferred_element_type=jnp.float32
+        ) * scale                                              # (B,Hkv,G,1)
+        m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), s_self)
+        p = jnp.exp(s - m)
+        p_self = jnp.exp(s_self - m)
+        denom = jnp.sum(p, axis=-1, keepdims=True) + p_self
+        o = (
+            jnp.einsum(
+                "bhgs,bhsd->bhgd", p.astype(v_cache.dtype), v_cache,
+                preferred_element_type=jnp.float32,
+            )
+            + p_self * v_new.astype(jnp.float32)
+        ) / denom
+    return o.reshape(b, 1, hq * d).astype(q.dtype)
+
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "chunked_gqa_attention",
+    "attention_block",
+    "swiglu_mlp",
+    "decode_attention",
+]

@@ -1,0 +1,519 @@
+"""Unified LM: init / train-forward / prefill / decode for all ten archs.
+
+One parameter pytree with layers stacked on a leading L axis and a single
+``lax.scan`` over layers (fast XLA compiles at 512 devices).  Families:
+
+  * dense / vlm / audio — GQA transformer (RoPE, optional qk-norm, optional
+    sliding window with periodic global layers); vlm/audio get a stubbed
+    modality frontend: a prefix of precomputed patch/frame embeddings.
+  * moe   — attention + grouped top-k expert MLPs (+ always-on shared experts).
+  * ssm   — Mamba2 (SSD) mixer stack, attention-free.
+  * hybrid — Mamba2 stack with one *weight-shared* attention block applied
+    every ``shared_attn_every`` layers (Zamba2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import hint
+
+from .config import ModelConfig
+from .layers import (
+    attention_block,
+    decode_attention,
+    rms_norm,
+    rope,
+    swiglu_mlp,
+)
+from .moe import moe_block
+from .ssm import mamba2_block, mamba2_decode_step
+
+PREFIX_LEN = 256   # stubbed modality frontends contribute this many positions
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _dense_init(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.bfloat16) -> Dict:
+    keys = iter(jax.random.split(key, 64))
+    d = cfg.d_model
+    L = cfg.n_layers
+    params: Dict = {
+        "embed": _dense_init(next(keys), (cfg.vocab, d), dtype),
+        "final_norm": _norm_init(next(keys), (d,), dtype),
+    }
+
+    def attn_params(k, prefix_shape=()):
+        ks = jax.random.split(k, 6)
+        p = {
+            "wq": _dense_init(ks[0], (*prefix_shape, d, cfg.q_dim), dtype),
+            "wk": _dense_init(ks[1], (*prefix_shape, d, cfg.kv_dim), dtype),
+            "wv": _dense_init(ks[2], (*prefix_shape, d, cfg.kv_dim), dtype),
+            "wo": _dense_init(ks[3], (*prefix_shape, cfg.q_dim, d), dtype),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.zeros((*prefix_shape, cfg.head_dim), dtype)
+            p["k_norm"] = jnp.zeros((*prefix_shape, cfg.head_dim), dtype)
+        return p
+
+    def mlp_params(k, ff, prefix_shape=()):
+        ks = jax.random.split(k, 3)
+        return {
+            "w1": _dense_init(ks[0], (*prefix_shape, d, ff), dtype),
+            "w3": _dense_init(ks[1], (*prefix_shape, d, ff), dtype),
+            "w2": _dense_init(ks[2], (*prefix_shape, ff, d), dtype),
+        }
+
+    def mamba_params(k, prefix_shape=()):
+        ks = jax.random.split(k, 10)
+        n, h = cfg.ssm_state, cfg.ssm_heads
+        w = cfg.conv_width
+        return {
+            # separate projections: shard-clean TP splits (see sharding.py)
+            "z_proj": _dense_init(ks[0], (*prefix_shape, d, cfg.d_inner), dtype),
+            "x_proj": _dense_init(ks[1], (*prefix_shape, d, cfg.d_inner), dtype),
+            "b_proj": _dense_init(ks[2], (*prefix_shape, d, n), dtype),
+            "c_proj": _dense_init(ks[3], (*prefix_shape, d, n), dtype),
+            "dt_proj": _dense_init(ks[4], (*prefix_shape, d, h), dtype),
+            "out_proj": _dense_init(ks[5], (*prefix_shape, cfg.d_inner, d), dtype),
+            "conv_x": _dense_init(ks[6], (*prefix_shape, w, cfg.d_inner), dtype, 0.2),
+            "conv_b": _dense_init(ks[7], (*prefix_shape, w, n), dtype, 0.2),
+            "conv_c": _dense_init(ks[8], (*prefix_shape, w, n), dtype, 0.2),
+            "dt_bias": jnp.zeros((*prefix_shape, h), dtype),
+            "a_log": jnp.zeros((*prefix_shape, h), dtype),
+            "d_skip": jnp.ones((*prefix_shape, h), dtype),
+        }
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        params["layers"] = {
+            "ln1": jnp.zeros((L, d), dtype),
+            "ln2": jnp.zeros((L, d), dtype),
+            "attn": attn_params(next(keys), (L,)),
+            "mlp": mlp_params(next(keys), cfg.d_ff, (L,)),
+        }
+    elif cfg.family == "moe":
+        moe = {
+            "router": _dense_init(next(keys), (L, d, cfg.n_experts), dtype),
+            "w1": _dense_init(next(keys), (L, cfg.n_experts, d, cfg.moe_d_ff), dtype),
+            "w3": _dense_init(next(keys), (L, cfg.n_experts, d, cfg.moe_d_ff), dtype),
+            "w2": _dense_init(next(keys), (L, cfg.n_experts, cfg.moe_d_ff, d), dtype),
+        }
+        layers = {
+            "ln1": jnp.zeros((L, d), dtype),
+            "ln2": jnp.zeros((L, d), dtype),
+            "attn": attn_params(next(keys), (L,)),
+            "moe": moe,
+        }
+        if cfg.n_shared_experts:
+            layers["shared_mlp"] = mlp_params(
+                next(keys), cfg.moe_d_ff * cfg.n_shared_experts, (L,)
+            )
+        params["layers"] = layers
+    elif cfg.family == "ssm":
+        params["layers"] = {
+            "ln": jnp.zeros((L, d), dtype),
+            "mixer": mamba_params(next(keys), (L,)),
+        }
+    elif cfg.family == "hybrid":
+        params["layers"] = {
+            "ln": jnp.zeros((L, d), dtype),
+            "mixer": mamba_params(next(keys), (L,)),
+        }
+        params["shared_attn"] = {
+            "ln": jnp.zeros((d,), dtype),
+            "ln2": jnp.zeros((d,), dtype),
+            "attn": attn_params(next(keys)),
+            "mlp": mlp_params(next(keys), cfg.d_ff),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application (shared by train/prefill)
+# ---------------------------------------------------------------------------
+
+
+def _window_for_layer(cfg: ModelConfig, idx) -> Optional[jax.Array]:
+    """Sliding-window size per layer: gemma3 runs 5 local : 1 global."""
+    if not cfg.sliding_window:
+        return None
+    if not cfg.global_every:
+        return jnp.asarray(cfg.sliding_window)
+    is_global = (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.where(is_global, jnp.asarray(1 << 30), jnp.asarray(cfg.sliding_window))
+
+
+def _transformer_layer(cfg: ModelConfig, x, lp, idx, positions, kv_chunk):
+    window = _window_for_layer(cfg, idx)
+    h = x + attention_block(
+        rms_norm(x, lp["ln1"], cfg.norm_eps),
+        lp["attn"],
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm,
+        norm_eps=cfg.norm_eps,
+        positions=positions,
+        window=window,
+        kv_chunk=kv_chunk,
+    )
+    hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        y, aux = moe_block(
+            hn, lp["moe"],
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+        )
+        if "shared_mlp" in lp:
+            y = y + swiglu_mlp(hn, lp["shared_mlp"])
+    else:
+        y = swiglu_mlp(hn, lp["mlp"])
+    return hint(h + y, "act"), aux
+
+
+def _mamba_layer(cfg: ModelConfig, x, lp):
+    return hint(x, "act") + mamba2_block(
+        rms_norm(x, lp["ln"], cfg.norm_eps),
+        lp["mixer"],
+        d_inner=cfg.d_inner,
+        ssm_heads=cfg.ssm_heads,
+        ssm_head_dim=cfg.ssm_head_dim,
+        ssm_state=cfg.ssm_state,
+        conv_width=cfg.conv_width,
+    )
+
+
+def _shared_attn(cfg: ModelConfig, x, sp, positions, kv_chunk):
+    h = x + attention_block(
+        rms_norm(x, sp["ln"], cfg.norm_eps),
+        sp["attn"],
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+        qk_norm=False,
+        norm_eps=cfg.norm_eps,
+        positions=positions,
+        window=None,
+        kv_chunk=kv_chunk,
+    )
+    return h + swiglu_mlp(rms_norm(h, sp["ln2"], cfg.norm_eps), sp["mlp"])
+
+
+# ---------------------------------------------------------------------------
+# embedding (with stubbed modality frontends)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params, batch: Dict) -> jax.Array:
+    """batch: {"tokens": (B,S)} and, for vlm/audio, {"prefix_embeds":
+    (B, PREFIX_LEN, D)} produced by the (stubbed) modality frontend."""
+    tok = params["embed"][batch["tokens"]]
+    if cfg.frontend != "none":
+        x = jnp.concatenate([batch["prefix_embeds"].astype(tok.dtype), tok], axis=1)
+    else:
+        x = tok
+    return x
+
+
+def _backbone(cfg: ModelConfig, params, x, *, kv_chunk: int, remat: bool = False):
+    """Scan layers over stacked params; returns (hidden, aux_loss)."""
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+
+        def body(carry, inp):
+            xc, aux = carry
+            lp, idx = inp
+            y, a = _transformer_layer(cfg, xc, lp, idx, positions, kv_chunk)
+            return (y, aux + a), None
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), _ = jax.lax.scan(
+            fn, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], jnp.arange(cfg.n_layers)),
+        )
+    elif cfg.family == "ssm":
+
+        def body(carry, lp):
+            return _mamba_layer(cfg, carry, lp), None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        sp = params["shared_attn"]
+        every = cfg.shared_attn_every
+
+        def body(carry, inp):
+            lp, idx = inp
+            y = _mamba_layer(cfg, carry, lp)
+            y = jax.lax.cond(
+                (idx % every) == (every - 1),
+                lambda v: _shared_attn(cfg, v, sp, positions, kv_chunk),
+                lambda v: v,
+                y,
+            )
+            return y, None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, (params["layers"], jnp.arange(cfg.n_layers)))
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+    return x, aux
+
+
+def forward_train(
+    cfg: ModelConfig,
+    params,
+    batch: Dict,
+    *,
+    kv_chunk: int = 512,
+    remat: bool = True,
+) -> Tuple[jax.Array, Dict]:
+    """Next-token loss over the batch.  Returns (loss, metrics)."""
+    x = hint(embed_inputs(cfg, params, batch), "act")
+    h, aux = _backbone(cfg, params, x, kv_chunk=kv_chunk, remat=remat)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.frontend != "none":
+        h = h[:, PREFIX_LEN:]           # loss only over token positions
+    logits = hint(
+        jnp.einsum("bsd,vd->bsv", h, params["embed"]).astype(jnp.float32), "logits"
+    )
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = nll.size
+    loss = jnp.sum(nll) / denom + 0.01 * aux
+    return loss, {"nll": jnp.sum(nll) / denom, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with caches
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Dict:
+    L = cfg.n_layers
+    cache: Dict = {}
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        # (L, B, H, S, D): QK^T/PV stream along (S, D) with no cache relayout
+        cache["k"] = jnp.zeros((L, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros((L, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        w = cfg.conv_width - 1
+        cache["ssm_h"] = jnp.zeros(
+            (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+        cache["conv_x"] = jnp.zeros((L, batch, w, cfg.d_inner), dtype)
+        cache["conv_b"] = jnp.zeros((L, batch, w, cfg.ssm_state), dtype)
+        cache["conv_c"] = jnp.zeros((L, batch, w, cfg.ssm_state), dtype)
+    if cfg.family == "hybrid":
+        napp = (cfg.n_layers + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+        cache["shared_k"] = jnp.zeros(
+            (napp, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype
+        )
+        cache["shared_v"] = jnp.zeros(
+            (napp, batch, cfg.n_kv_heads, max_seq, cfg.head_dim), dtype
+        )
+    return cache
+
+
+def _proj_qkv(cfg: ModelConfig, x, ap, pos):
+    b = x.shape[0]
+    q = (x @ ap["wq"]).reshape(b, -1, cfg.n_heads, cfg.head_dim)
+    k = (x @ ap["wk"]).reshape(b, -1, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ ap["wv"]).reshape(b, -1, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm and "q_norm" in ap:
+        q = rms_norm(q, ap["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, ap["k_norm"], cfg.norm_eps)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    cache: Dict,
+    tokens: jax.Array,     # (B,) current token ids
+    pos,                   # scalar int: position being generated
+) -> Tuple[jax.Array, Dict]:
+    """One decode step: returns (logits (B, V), updated cache)."""
+    x = params["embed"][tokens][:, None, :]        # (B, 1, D)
+    posv = jnp.asarray(pos)[None]
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        # Cache layers stream through the scan as xs (reads only); each layer
+        # emits just the new token's (k, v) as ys, and the cache is updated
+        # with ONE dynamic-update-slice after the scan — in-place on the
+        # donated buffer, no per-layer stacking/carry copies (storage
+        # minimization at pod scale).
+
+        def body(xc, inp):
+            lp, kc, vc, idx = inp
+            window = _window_for_layer(cfg, idx)
+            hn = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+            q, k, v = _proj_qkv(cfg, hn, lp["attn"], posv)
+            kn = jnp.swapaxes(k, 1, 2).astype(kc.dtype)   # (B, Hkv, 1, D)
+            vn = jnp.swapaxes(v, 1, 2).astype(vc.dtype)
+            o = decode_attention(q, kc, vc, pos, window=window, k_new=kn, v_new=vn)
+            h = xc + o @ lp["attn"]["wo"]
+            hn2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                y, _ = moe_block(
+                    hn2, lp["moe"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+                    capacity_factor=4.0, group_size=hn2.shape[0],
+                )
+                if "shared_mlp" in lp:
+                    y = y + swiglu_mlp(hn2, lp["shared_mlp"])
+            else:
+                y = swiglu_mlp(hn2, lp["mlp"])
+            return h + y, (kn, vn)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x,
+            (params["layers"], cache["k"], cache["v"], jnp.arange(cfg.n_layers)),
+        )
+        cache = dict(
+            cache,
+            k=jax.lax.dynamic_update_slice(
+                cache["k"], k_new, (0, 0, 0, pos, 0)
+            ),
+            v=jax.lax.dynamic_update_slice(
+                cache["v"], v_new, (0, 0, 0, pos, 0)
+            ),
+        )
+
+    elif cfg.family in ("ssm", "hybrid"):
+        sp = params.get("shared_attn")
+        every = cfg.shared_attn_every or (cfg.n_layers + 1)
+
+        napp = (cfg.n_layers + every - 1) // every if cfg.shared_attn_every else 0
+
+        def body(xc, inp):
+            lp, hS, cx, cb, cc, idx = inp
+            hn = rms_norm(xc, lp["ln"], cfg.norm_eps)
+            y, new_state = mamba2_decode_step(
+                hn, lp["mixer"],
+                {"h": hS, "conv_x": cx, "conv_b": cb, "conv_c": cc},
+                d_inner=cfg.d_inner, ssm_heads=cfg.ssm_heads,
+                ssm_head_dim=cfg.ssm_head_dim, ssm_state=cfg.ssm_state,
+                conv_width=cfg.conv_width,
+            )
+            xc = xc + y
+            zk = jnp.zeros((1, xc.shape[0], cfg.n_kv_heads, 1, cfg.head_dim), xc.dtype)
+            k_out = v_out = zk
+            if cfg.family == "hybrid":
+                app = idx // every
+
+                def with_attn(xin):
+                    hn2 = rms_norm(xin, sp["ln"], cfg.norm_eps)
+                    q, k, v = _proj_qkv(cfg, hn2, sp["attn"], posv)
+                    kc = jax.lax.dynamic_index_in_dim(
+                        cache["shared_k"], app, 0, keepdims=False
+                    )
+                    vc = jax.lax.dynamic_index_in_dim(
+                        cache["shared_v"], app, 0, keepdims=False
+                    )
+                    kn = jnp.swapaxes(k, 1, 2).astype(kc.dtype)
+                    vn = jnp.swapaxes(v, 1, 2).astype(vc.dtype)
+                    o = decode_attention(q, kc, vc, pos, k_new=kn, v_new=vn)
+                    hx = xin + o @ sp["attn"]["wo"]
+                    hx = hx + swiglu_mlp(
+                        rms_norm(hx, sp["ln2"], cfg.norm_eps), sp["mlp"]
+                    )
+                    return hx, kn[None], vn[None]
+
+                xc, k_out, v_out = jax.lax.cond(
+                    (idx % every) == (every - 1),
+                    with_attn,
+                    lambda xin: (xin, zk, zk),
+                    xc,
+                )
+            return xc, (
+                new_state["h"], new_state["conv_x"],
+                new_state["conv_b"], new_state["conv_c"], k_out, v_out,
+            )
+
+        x, (new_h, new_cx, new_cb, new_cc, k_outs, v_outs) = jax.lax.scan(
+            body, x,
+            (params["layers"], cache["ssm_h"], cache["conv_x"],
+             cache["conv_b"], cache["conv_c"], jnp.arange(cfg.n_layers)),
+        )
+        cache = dict(cache, ssm_h=new_h, conv_x=new_cx, conv_b=new_cb, conv_c=new_cc)
+        if cfg.family == "hybrid":
+            # scatter the per-application K/V (one DUS per shared-block app)
+            sk, sv = cache["shared_k"], cache["shared_v"]
+            for a in range(napp):
+                li = a * every + every - 1
+                if li >= cfg.n_layers:
+                    break
+                sk = jax.lax.dynamic_update_slice(
+                    sk, k_outs[li], (a, 0, 0, pos, 0)
+                )
+                sv = jax.lax.dynamic_update_slice(
+                    sv, v_outs[li], (a, 0, 0, pos, 0)
+                )
+            cache = dict(cache, shared_k=sk, shared_v=sv)
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])[:, 0].astype(jnp.float32)
+    return logits, cache
+
+
+def forward_prefill(
+    cfg: ModelConfig,
+    params,
+    batch: Dict,
+    *,
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Prefill forward (no cache write-out — used for the prefill dry-run
+    shape; serving fills caches incrementally or via this + re-projection)."""
+    x = embed_inputs(cfg, params, batch)
+    h, _ = _backbone(cfg, params, x, kv_chunk=kv_chunk, remat=False)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bd,vd->bv", h[:, -1], params["embed"]
+    ).astype(jnp.float32)
+    return logits
+
+
+__all__ = [
+    "PREFIX_LEN",
+    "init_params",
+    "forward_train",
+    "forward_prefill",
+    "decode_step",
+    "init_kv_cache",
+]

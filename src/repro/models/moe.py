@@ -1,0 +1,83 @@
+"""Mixture-of-experts block: grouped GShard-style top-k dispatch.
+
+Tokens are split into groups (so the dispatch one-hots stay small), routed
+top-k with a capacity limit, pushed through the experts with einsums whose
+FLOPs equal the *active* compute, and combined with the router gates.
+Overflowing tokens are dropped (standard capacity semantics); an auxiliary
+load-balance loss is returned for training.
+
+Sharding (applied by distributed/sharding.py via constraints on the expert
+weight specs): expert-parallel when n_experts divides the model axis (dbrx:
+16 experts), tensor-parallel inside each expert otherwise (qwen2-moe:
+d_ff 1408 = 16 x 88).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import hint
+
+
+def moe_block(
+    x: jax.Array,          # (B, S, D)
+    p: dict,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    gsz = min(group_size, t)
+    assert t % gsz == 0, (t, gsz)
+    ng = t // gsz
+    # pin the grouped-token layout once: groups ride the data axes, avoiding
+    # GSPMD "involuntary full rematerialization" reshards inside the dispatch
+    xg = hint(tokens.reshape(ng, gsz, d), "moe_groups")
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (G, T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)         # (G, T, k)
+
+    cap = max(1, int(capacity_factor * gsz * top_k / n_experts))
+
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.float32)  # (G,T,k,E)
+    flat = onehot.reshape(ng, gsz * top_k, n_experts)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat           # (G, T*k, E)
+    pos = jnp.einsum("gte,gte->gt", pos_in_expert, flat).reshape(ng, gsz, top_k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # dispatch/combine one-hots: (G, T, k, E, C) contracted immediately
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (G,T,k,C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot * keep[..., None], cap_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, cap_oh, gate_vals)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg.astype(jnp.float32))
+    expert_in = hint(expert_in.astype(x.dtype), "expert_in")  # (G, E, C, D)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["w1"])) * jnp.einsum(
+        "gecd,edf->gecf", expert_in, p["w3"]
+    )
+    h = hint(h, "expert_hidden")
+    expert_out = hint(
+        jnp.einsum("gecf,efd->gecd", h, p["w2"]), "expert_in"
+    )                                                          # (G, E, C, D)
+    out = jnp.einsum(
+        "gtec,gecd->gtd", combine, expert_out.astype(jnp.float32)
+    ).astype(x.dtype)
+
+    # Switch-style load-balance auxiliary loss
+    frac_tokens = jnp.mean(onehot[:, :, 0, :], axis=1)        # top-1 assignment share
+    frac_probs = jnp.mean(probs, axis=1)
+    aux = n_experts * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    return out.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+__all__ = ["moe_block"]

@@ -1,0 +1,181 @@
+"""Mamba2 (SSD) block: chunked state-space scan, causal conv, gating.
+
+The chunked scan reuses exactly the math of ``kernels/ssd.py`` (state-space
+duality: dense intra-chunk matmuls + a small carried state) in differentiable
+XLA form; the Pallas kernel is the TPU fast path for the same computation.
+Unified-buffer framing: the carried (B, H, P, N) state is the storage-
+minimized buffer between chunk "tiles" — the DNN pipeline policy of §V-B.
+
+Projections are kept as *separate* weights (z/x/B/C/dt and per-stream convs)
+rather than one fused ``in_proj``: fused projections force tensor-parallel
+splits at shard-misaligned boundaries, while separate weights shard cleanly
+(see distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import hint
+
+# SSD chunk length: intra-chunk cost grows with L, carried-state passes
+# shrink with L (EXPERIMENTS.md §Perf cell D sweeps this)
+_SSD_CHUNK = 256
+
+
+def set_ssd_chunk(n: int) -> None:
+    global _SSD_CHUNK
+    _SSD_CHUNK = n
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C).  ``tail``: (B, W-1, C)
+    carried context for decode.  Returns (y, new_tail)."""
+    b, s, c = x.shape
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((b, width - 1, c), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)                   # (B, S+W-1, C)
+    y = jnp.zeros((b, s, c), jnp.float32)
+    for i in range(width):
+        y = y + w[i].astype(jnp.float32) * xp[:, i : i + s].astype(jnp.float32)
+    new_tail = xp[:, s:]
+    return jax.nn.silu(y).astype(x.dtype), new_tail
+
+
+def ssd_chunked(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)  (post-softplus, > 0)
+    a: jax.Array,     # (H,) negative decay
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 256,
+    h0: Optional[jax.Array] = None,   # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final state (B,H,P,N)). fp32 scan math."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0
+    nc = s // l
+    xf = x.astype(jnp.float32).reshape(b, nc, l, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, l, h)
+    bf = bmat.astype(jnp.float32).reshape(b, nc, l, n)
+    cf = cmat.astype(jnp.float32).reshape(b, nc, l, n)
+    af = a.astype(jnp.float32)
+
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+        <= jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    )
+
+    def step(hstate, inp):
+        xc, dtc, bc, cc = inp                        # (B,l,H,P) (B,l,H) (B,l,N)
+        sgl = jnp.cumsum(af[None, None, :] * dtc, axis=1)     # (B,l,H)
+        g = jnp.einsum("bln,bmn->blm", cc, bc)                # (B,l,l)
+        gap = sgl[:, :, None, :] - sgl[:, None, :, :]         # (B,l,l,H)
+        m = jnp.where(mask[None, :, :, None], jnp.exp(gap) * dtc[:, None, :, :], 0.0)
+        y_intra = jnp.einsum("blm,blmh,bmhp->blhp", g, m, xc)
+        y_inter = jnp.exp(sgl)[..., None] * jnp.einsum("bln,bhpn->blhp", cc, hstate)
+        tail = jnp.exp(sgl[:, -1][:, None, :] - sgl) * dtc    # (B,l,H)
+        h_new = jnp.exp(sgl[:, -1])[:, :, None, None] * hstate + jnp.einsum(
+            "blh,blhp,bln->bhpn", tail, xc, bc
+        )
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    # rematerialize chunk internals in the backward pass: only the carried
+    # state is saved per chunk (the SSD twin of flash attention's remat)
+    hT, ys = jax.lax.scan(
+        jax.checkpoint(step),
+        h0,
+        (
+            xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+            bf.swapaxes(0, 1), cf.swapaxes(0, 1),
+        ),
+    )
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return y.astype(x.dtype), hT
+
+
+def _project(x, p):
+    """Separate z/x/B/C/dt projections + per-stream causal convs."""
+    z = x @ p["z_proj"]
+    xs = x @ p["x_proj"]
+    bm = x @ p["b_proj"]
+    cm = x @ p["c_proj"]
+    dt = x @ p["dt_proj"]
+    return z, xs, bm, cm, dt
+
+
+def mamba2_block(
+    x: jax.Array,          # (B, S, D)
+    p: Dict,
+    *,
+    d_inner: int,
+    ssm_heads: int,
+    ssm_head_dim: int,
+    ssm_state: int,
+    conv_width: int,
+    chunk: int = 0,
+) -> jax.Array:
+    """Full Mamba2 mixer (training/prefill path)."""
+    chunk = chunk or _SSD_CHUNK
+    b, s, d = x.shape
+    z, xs, bm, cm, dt = _project(x, p)
+    xs = hint(xs, "ssm_inner")
+    z = hint(z, "ssm_inner")
+    xs, _ = causal_conv1d(xs, p["conv_x"])
+    bm, _ = causal_conv1d(bm, p["conv_b"])
+    cm, _ = causal_conv1d(cm, p["conv_c"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # (H,)
+    xh = xs.reshape(b, s, ssm_heads, ssm_head_dim)
+    xh = hint(xh, "ssm_heads")
+    y, _ = ssd_chunked(xh, dt, a, bm, cm, chunk=min(chunk, s))
+    y = hint(y, "ssm_heads")
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba2_decode_step(
+    x: jax.Array,          # (B, 1, D)
+    p: Dict,
+    state: Dict,           # {"h": (B,H,P,N) fp32, "conv_*": (B, W-1, C)}
+    *,
+    d_inner: int,
+    ssm_heads: int,
+    ssm_head_dim: int,
+    ssm_state: int,
+    conv_width: int,
+) -> Tuple[jax.Array, Dict]:
+    b, _, d = x.shape
+    z, xs, bm, cm, dt = _project(x, p)
+    xs, tail_x = causal_conv1d(xs, p["conv_x"], tail=state["conv_x"])
+    bm, tail_b = causal_conv1d(bm, p["conv_b"], tail=state["conv_b"])
+    cm, tail_c = causal_conv1d(cm, p["conv_c"], tail=state["conv_c"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, ssm_heads, ssm_head_dim).astype(jnp.float32)
+    decay = jnp.exp(a[None, :, None, None] * dt[:, 0, :, None, None])   # (B,H,1,1)
+    upd = dt[:, 0, :, None, None] * (
+        xh[:, :, :, None] * bm[:, 0, None, None, :].astype(jnp.float32)
+    )
+    h_new = decay * state["h"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cm[:, 0].astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], {
+        "h": h_new, "conv_x": tail_x, "conv_b": tail_b, "conv_c": tail_c
+    }
+
+
+__all__ = ["causal_conv1d", "ssd_chunked", "mamba2_block", "mamba2_decode_step"]

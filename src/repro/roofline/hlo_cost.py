@@ -1,0 +1,314 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**
+regardless of its trip count, which makes it useless for scanned layers /
+microbatch loops (verified empirically; see EXPERIMENTS.md §Roofline).
+This module re-derives the roofline inputs directly from the compiled HLO:
+
+  * **FLOPs** — ``dot``/``convolution`` ops (the MFU convention): 2 x
+    |result| x |contracted dims|, found inside fusion bodies too;
+  * **HBM bytes** — operands + results of top-level (post-fusion) ops,
+    a standard proxy for HBM traffic of the fused program;
+  * **collective bytes** — result shapes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops;
+
+with every quantity multiplied by the product of enclosing ``while`` trip
+counts (``backend_config={"known_trip_count":{"n":...}}``) and taking the
+max over ``conditional`` branches.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# shape group is lazy up to the first "opcode(" token: tuple shapes may
+# contain /*index=N*/ comments (which contain '='), so no [^=] tricks
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.*?)\s*([\w-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[\\\s]*"?:?[\s\\]*{[\\\s]*"?n[\\"\s]*:[\s\\]*"?(\d+)')
+_CALLED = re.compile(r"(?:calls|body|to_apply)=%?([\w.-]+)")
+_BRANCHES = re.compile(r"branch_computations={([^}]*)}")
+_CONTRACT = re.compile(r"lhs_contracting_dims={([\d,]*)}")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shape_dims(s: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _parse_shape_dims(s):
+        if dt in _DTYPE_BYTES:
+            total += math.prod(dims) * _DTYPE_BYTES[dt] if dims else _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(s: str) -> int:
+    total = 0
+    for dt, dims in _parse_shape_dims(s):
+        if dt in _DTYPE_BYTES and dt != "token":
+            total += math.prod(dims) if dims else 1
+    return total
+
+
+@dataclass
+class OpLine:
+    name: str
+    shape: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    transcendentals: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[OpLine]] = {}
+        self.shapes: Dict[str, Dict[str, str]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[Tuple[str, str], Cost] = {}
+        self._fusion_memo: Dict[str, tuple] = {}
+        self.entry = self._find_entry(hlo_text)
+
+    # -- parsing ---------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            m = _COMP_RE.match(raw)
+            if m:
+                cur = m.group(1)
+                self.comps[cur] = []
+                self.shapes[cur] = {}
+                continue
+            if cur is None:
+                continue
+            if raw.strip() == "}":
+                cur = None
+                continue
+            om = _OP_RE.match(raw)
+            if om:
+                name, shape, opcode, rest = om.groups()
+                self.comps[cur].append(OpLine(name, shape, opcode, rest))
+                self.shapes[cur][name] = shape
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.-]+)", text, re.M)
+        return m.group(1) if m else next(iter(self.comps))
+
+    # -- cost -------------------------------------------------------------------
+    def cost(self, comp: Optional[str] = None, mode: str = "top") -> Cost:
+        """mode 'top': bytes from top-level ops (fused view) + recurse into
+        control flow; dot flops pulled from fusion bodies as well."""
+        comp = comp or self.entry
+        key = (comp, mode)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        self._memo[key] = total   # guards accidental recursion
+        table = self.shapes.get(comp, {})
+        for op in self.comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                body = _CALLED.search(op.rest)
+                trips = 1
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                if body:
+                    total.add(self.cost(body.group(1), mode), trips)
+            elif oc == "conditional":
+                bm = _BRANCHES.search(op.rest)
+                if bm:
+                    branches = [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                    costs = [self.cost(b, mode) for b in branches]
+                    best = max(costs, key=lambda c: c.flops + c.bytes)
+                    total.add(best)
+            elif oc in ("call", "async-start"):
+                cm = _CALLED.search(op.rest)
+                if cm:
+                    total.add(self.cost(cm.group(1), mode))
+            elif oc == "fusion":
+                total.bytes += self._op_bytes(op, table)
+                cm = _CALLED.search(op.rest)
+                if cm:
+                    total.flops += self._dot_flops_in(cm.group(1))
+            elif oc in ("dot", "convolution"):
+                total.bytes += self._op_bytes(op, table)
+                total.flops += self._dot_flops(op, table)
+            elif any(oc.startswith(c) for c in COLLECTIVES):
+                if oc.endswith("-done"):
+                    continue
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                total.collectives[kind] = (
+                    total.collectives.get(kind, 0.0) + _shape_bytes(op.shape)
+                )
+            elif oc in ("copy", "copy-start", "transpose", "reshape", "bitcast",
+                        "broadcast", "parameter", "constant", "tuple",
+                        "get-tuple-element", "iota", "partition-id"):
+                continue
+            else:
+                # leftover unfused top-level op: count its data movement
+                total.bytes += self._op_bytes(op, table)
+        self._memo[key] = total
+        return total
+
+    def _op_bytes(self, op: OpLine, table: Dict[str, str]) -> int:
+        """HBM traffic of one (possibly fused) op.
+
+        Refinements that matter for scanned programs:
+          * a fusion operand consumed only through ``dynamic-slice`` inside
+            the fused computation is charged the *slice* bytes, not the full
+            (e.g. stacked-layer-weights) array;
+          * a fusion whose root is ``dynamic-update-slice`` writes only the
+            update region (XLA updates in place), so the result is charged
+            at the update's size.
+        """
+        args = op.rest.split(")", 1)[0]
+        operands = re.findall(r"%([\w.-]+)", args)
+        if op.opcode == "dynamic-slice":
+            return _shape_bytes(op.shape) * 2
+        if op.opcode == "dynamic-update-slice":
+            upd = operands[1] if len(operands) > 1 else None
+            return 2 * (_shape_bytes(table.get(upd, "")) if upd else 0)
+        if op.opcode != "fusion":
+            b = _shape_bytes(op.shape)
+            for a in operands:
+                if a in table:
+                    b += _shape_bytes(table[a])
+            return b
+
+        cm = _CALLED.search(op.rest)
+        param_slice, dus_update = self._fusion_access_summary(
+            cm.group(1) if cm else None
+        )
+        b = 2 * dus_update if dus_update is not None else _shape_bytes(op.shape)
+        for i, a in enumerate(operands):
+            if a not in table:
+                continue
+            sliced = param_slice.get(i)
+            b += sliced if sliced is not None else _shape_bytes(table[a])
+        return b
+
+    def _fusion_access_summary(self, comp: Optional[str]):
+        """Returns (param index -> slice bytes for params consumed only via
+        dynamic-slice, total update bytes if the fusion root is a DUS)."""
+        if comp is None or comp not in self.comps:
+            return {}, None
+        if comp in self._fusion_memo:
+            return self._fusion_memo[comp]
+        ops = self.comps[comp]
+        table = self.shapes[comp]
+        param_of: Dict[str, int] = {}
+        for op in ops:
+            if op.opcode == "parameter":
+                m = re.match(r"(\d+)", op.rest)
+                if m:
+                    param_of[op.name] = int(m.group(1))
+        consumers: Dict[str, List[OpLine]] = {}
+        for op in ops:
+            for a in re.findall(r"%([\w.-]+)", op.rest.split(")", 1)[0]):
+                consumers.setdefault(a, []).append(op)
+        param_slice: Dict[int, int] = {}
+        for pname, idx in param_of.items():
+            cons = consumers.get(pname, [])
+            if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                param_slice[idx] = sum(_shape_bytes(c.shape) for c in cons)
+            elif cons and all(
+                c.opcode == "dynamic-update-slice"
+                and re.findall(r"%([\w.-]+)", c.rest.split(")", 1)[0])[:1] == [pname]
+                for c in cons
+            ):
+                # in-place updated buffer: reads/writes only the update region
+                param_slice[idx] = 0
+        root = ops[-1] if ops else None
+        dus_total = None
+        if root is not None:
+            roots = [root]
+            if root.opcode == "tuple":
+                names = re.findall(r"%([\w.-]+)", root.rest.split(")", 1)[0])
+                by_name = {o.name: o for o in ops}
+                roots = [by_name[n] for n in names if n in by_name]
+            if roots and all(r.opcode == "dynamic-update-slice" for r in roots):
+                tot = 0
+                for r in roots:
+                    rops = re.findall(r"%([\w.-]+)", r.rest.split(")", 1)[0])
+                    if len(rops) > 1 and rops[1] in table:
+                        tot += _shape_bytes(table[rops[1]])
+                dus_total = tot
+        self._fusion_memo[comp] = (param_slice, dus_total)
+        return param_slice, dus_total
+
+    def _dot_flops(self, op: OpLine, table: Dict[str, str]) -> float:
+        result_elems = _shape_elems(op.shape)
+        cm = _CONTRACT.search(op.rest)
+        contract = 1
+        if cm:
+            dims = [int(d) for d in cm.group(1).split(",") if d]
+            args = re.findall(r"%([\w.-]+)", op.rest.split(")", 1)[0])
+            if args and args[0] in table:
+                shapes = _parse_shape_dims(table[args[0]])
+                if shapes:
+                    _, lhs_dims = shapes[0]
+                    for d in dims:
+                        if d < len(lhs_dims):
+                            contract *= lhs_dims[d]
+        if op.opcode == "convolution":
+            # approximate: |result| x |kernel spatial x in-features| via
+            # operand-1 elems / out-features — conservative, convs are rare
+            contract = max(contract, 1)
+        return 2.0 * result_elems * contract
+
+    def _dot_flops_in(self, comp: str) -> float:
+        table = self.shapes.get(comp, {})
+        total = 0.0
+        for op in self.comps.get(comp, []):
+            if op.opcode in ("dot", "convolution"):
+                total += self._dot_flops(op, table)
+            elif op.opcode == "fusion":
+                cm = _CALLED.search(op.rest)
+                if cm:
+                    total += self._dot_flops_in(cm.group(1))
+        return total
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).cost()
+
+
+__all__ = ["HloCostModel", "analyze_hlo", "Cost"]

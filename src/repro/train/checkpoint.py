@@ -1,0 +1,131 @@
+"""Checkpointing: atomic, async-capable, mesh-independent restore.
+
+Arrays are saved *logically* (unsharded host copies, flattened tree paths in
+one ``.npz``), so a restart may use a different mesh/topology — the restore
+path ``device_put``s each array with the new plan's sharding (elastic
+restart after node failure).  Writes go to a temp file + atomic rename, a
+metadata JSON carries step/data-cursor, and ``keep_last`` old checkpoints
+are retained for corruption fallback.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "||"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(
+    ckpt_dir: str,
+    step: int,
+    params,
+    opt_state,
+    data_state: Dict,
+    *,
+    keep_last: int = 3,
+    async_save: bool = False,
+) -> threading.Thread | None:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = {f"params{SEP}{k}": v for k, v in _flatten(params).items()}
+    arrays.update({f"opt{SEP}{k}": v for k, v in _flatten(opt_state).items()})
+    meta = {"step": step, "data": data_state}
+
+    def write():
+        tmp = os.path.join(ckpt_dir, f".tmp-{step}.npz")
+        final = os.path.join(ckpt_dir, f"step-{step:08d}.npz")
+        np.savez(tmp, **arrays)
+        # verify readable before commit
+        with np.load(tmp) as z:
+            assert len(z.files) == len(arrays)
+        os.replace(tmp, final)
+        with open(os.path.join(ckpt_dir, f"step-{step:08d}.json"), "w") as f:
+            json.dump(meta, f)
+        _gc(ckpt_dir, keep_last)
+
+    if async_save:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _gc(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep_last]:
+        for ext in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(ckpt_dir, f"step-{s:08d}{ext}"))
+            except FileNotFoundError:
+                pass
+
+
+def latest_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for f in os.listdir(ckpt_dir):
+        if f.startswith("step-") and f.endswith(".npz"):
+            out.append(int(f[5:13]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    step: int,
+    params_template,
+    opt_template,
+    shardings=None,
+) -> Tuple[object, object, Dict]:
+    """Rebuild (params, opt_state, meta).  ``shardings``: optional matching
+    tree of NamedShardings for the (possibly different) target mesh."""
+    path = os.path.join(ckpt_dir, f"step-{step:08d}.npz")
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+    with open(os.path.join(ckpt_dir, f"step-{step:08d}.json")) as f:
+        meta = json.load(f)
+
+    def rebuild(prefix, template, shard_tree):
+        flat, tdef = jax.tree_util.tree_flatten_with_path(template)
+        shards = (
+            tdef.flatten_up_to(shard_tree) if shard_tree is not None else [None] * len(flat)
+        )
+        leaves = []
+        for (kp, leaf), sh in zip(flat, shards):
+            key = prefix + SEP + SEP.join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+            )
+            arr = data[key].astype(leaf.dtype) if hasattr(leaf, "dtype") else data[key]
+            leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+        return jax.tree_util.tree_unflatten(tdef, leaves)
+
+    p_sh = o_sh = None
+    if shardings is not None:
+        p_sh, o_sh = shardings
+    params = rebuild("params", params_template, p_sh)
+    opt = rebuild("opt", opt_template, o_sh)
+    return params, opt, meta
+
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "latest_steps"]

@@ -1,0 +1,113 @@
+"""Train-step builder: remat + microbatch gradient accumulation + AdamW.
+
+The step is one XLA program (pjit-style): the microbatch loop is a
+``lax.scan`` whose per-step gradients accumulate in fp32 (optionally bf16
+with stochastic rounding — gradient compression).  XLA's latency-hiding
+scheduler overlaps each microbatch's collectives with the next microbatch's
+compute — the coarse-grained double-buffered pipeline of paper §V-B at pod
+scale.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward_train
+from repro.models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_update, stochastic_round_bf16
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: Dict
+    rng: jax.Array
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    kv_chunk: int = 512,
+    remat: bool = True,
+    grad_shardings=None,     # ZeRO-grad: accumulator tree of NamedShardings
+    comm_dtype=None,         # e.g. jnp.bfloat16: per-micro grads cross the
+                             # network at half width (EXPERIMENTS.md §Perf)
+    acc_dtype=None,          # gradient-accumulator dtype (default fp32;
+                             # bf16 halves accumulator HBM for huge models)
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch["tokens"]/["labels"]``: (B, S) with B divisible by microbatches.
+
+    ZeRO-grad: constraining the accumulator to a data-sharded spec turns the
+    per-microbatch gradient all-reduce into a reduce-scatter (half the
+    collective bytes); the optimizer runs on sharded grads and the updated
+    params all-gather once per step.
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = forward_train(cfg, params, mb, kv_chunk=kv_chunk, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda g, sh: jax.lax.with_sharding_constraint(g, sh),
+            tree, grad_shardings,
+        )
+
+    def train_step(state: TrainState, batch: Dict):
+        b = batch["tokens"].shape[0]
+        assert b % microbatches == 0
+        mbs = b // microbatches
+
+        def split(x):
+            return x.reshape(microbatches, mbs, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        adt = acc_dtype or jnp.float32
+        zeros = _constrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, adt), state.params
+        ))
+
+        def accum(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = grad_fn(state.params, mb)
+            if comm_dtype is not None:
+                grads = jax.tree.map(lambda g: g.astype(comm_dtype), grads)
+            grads = _constrain(
+                jax.tree.map(lambda g: g.astype(adt), grads)
+            )
+            acc = _constrain(jax.tree.map(jnp.add, acc, grads))
+            return (acc, loss_acc + loss), None
+
+        (gsum, loss_sum), _ = jax.lax.scan(accum, (zeros, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+
+        rng = state.rng
+        if opt_cfg.compress_grads:
+            rng, sub = jax.random.split(rng)
+            leaves, tdef = jax.tree.flatten(grads)
+            keys = jax.random.split(sub, len(leaves))
+            leaves = [
+                stochastic_round_bf16(g, k).astype(jnp.float32)
+                for g, k in zip(leaves, keys)
+            ]
+            grads = tdef.unflatten(leaves)
+
+        new_params, new_opt, om = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics = {"loss": loss_sum / microbatches, **om}
+        return TrainState(new_params, new_opt, rng), metrics
+
+    return train_step
+
+
+__all__ = ["TrainState", "make_train_step"]

@@ -1,0 +1,186 @@
+"""Frontend tests: lowering, bounds inference, inlining, reference interpreter."""
+
+import numpy as np
+import pytest
+
+from repro.apps import make_app
+from repro.frontend import Func, RDom, Var, execute_pipeline, lower_pipeline
+from repro.frontend.expr import count_ops
+
+x, y = Var("x"), Var("y")
+
+
+def table_to_array(tbl, shape):
+    a = np.zeros(shape)
+    for idx, v in tbl.items():
+        a[idx] = v
+    return a
+
+
+# ---------------------------------------------------------------------------
+# brighten/blur — the paper's running example (Fig. 1)
+# ---------------------------------------------------------------------------
+
+
+def build_brighten_blur(size=8):
+    inp = Func.input("input", 2)
+    brighten = Func("brighten")
+    brighten[x, y] = inp[x, y] * 2
+    blur = Func("blur")
+    blur[x, y] = (
+        brighten[x, y] + brighten[x + 1, y]
+        + brighten[x, y + 1] + brighten[x + 1, y + 1]
+    ) / 4
+    brighten.store_root()
+    blur.hw_accelerate()
+    return inp, brighten, blur
+
+
+def test_brighten_blur_lowering():
+    inp, brighten, blur = build_brighten_blur()
+    pipe = lower_pipeline(blur, [inp, brighten, blur], {"x": 8, "y": 8})
+    assert [s.name for s in pipe.stages] == ["brighten", "blur"]
+    br = pipe.stage("brighten")
+    # blur reads a 2x2 window -> brighten must cover 9x9
+    assert br.domain.extents == (9, 9)
+    assert pipe.buffer_boxes["input"].extents == (9, 9)
+    bl = pipe.stage("blur")
+    assert bl.domain.extents == (8, 8)
+    assert len(bl.loads) == 4
+
+
+def test_brighten_blur_execution():
+    inp, brighten, blur = build_brighten_blur()
+    pipe = lower_pipeline(blur, [inp, brighten, blur], {"x": 8, "y": 8})
+    rng = np.random.default_rng(0)
+    img = rng.integers(0, 128, (9, 9)).astype(float)
+    vals = execute_pipeline(pipe, {"input": img})
+    got = table_to_array(vals["blur"], (8, 8))
+    bright = img * 2
+    want = (bright[:-1, :-1] + bright[:-1, 1:] + bright[1:, :-1] + bright[1:, 1:]) / 4
+    np.testing.assert_allclose(got, want)
+
+
+def test_inlined_producer_disappears():
+    inp, brighten, blur = build_brighten_blur()
+    brighten.inline()
+    pipe = lower_pipeline(blur, [inp, brighten, blur], {"x": 8, "y": 8})
+    assert [s.name for s in pipe.stages] == ["blur"]
+    # inlining doubles the arithmetic (mul by 2 recomputed per tap)
+    assert count_ops(pipe.stage("blur").value) >= 8
+
+
+# ---------------------------------------------------------------------------
+# paper apps
+# ---------------------------------------------------------------------------
+
+
+def _run_app(name, **kw):
+    app = make_app(name, **kw)
+    rng = np.random.default_rng(42)
+    inputs = {
+        n: rng.integers(1, 64, shape).astype(float)
+        for n, shape in app.input_extents.items()
+    }
+    vals = execute_pipeline(app.pipeline, inputs)
+    out_stage = app.pipeline.stage(app.output.name)
+    shape = tuple(
+        app.pipeline.buffer_boxes[app.output.name].extents
+    )
+    return app, table_to_array(vals[app.output.name], shape), inputs
+
+
+def test_gaussian_matches_numpy():
+    app, got, inputs = _run_app("gaussian", size=16)   # input tile 16 -> out 14
+    img = inputs["input"]
+    k = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]]) / 16
+    want = np.zeros((14, 14))
+    for dy in range(3):
+        for dx in range(3):
+            want += k[dy, dx] * img[dy : dy + 14, dx : dx + 14]
+    np.testing.assert_allclose(got, want)
+
+
+def test_upsample_repeats_pixels():
+    app, got, inputs = _run_app("upsample", size=8)
+    img = inputs["input"]
+    # output dims loop-order: (y, yi, x, xi)
+    assert got.shape == (8, 2, 8, 2)
+    want = np.broadcast_to(img[:, None, :, None], (8, 2, 8, 2))
+    np.testing.assert_allclose(got, want)
+
+
+def test_harris_all_schedules_lower():
+    for sch in ["sch1", "sch2", "sch3", "sch4", "sch5", "sch6"]:
+        app = make_app("harris", schedule=sch, size=16)
+        names = [s.name for s in app.pipeline.stages]
+        if sch == "sch1":
+            assert names == ["harris"]
+        if sch in ("sch3", "sch4"):
+            assert set(names) == {"grad_x", "grad_y", "sxx", "syy", "sxy", "harris"}
+        if sch == "sch6":
+            assert [s.name for s in app.pipeline.host_stages] == ["harris"]
+            assert "response" in names
+
+
+def test_harris_schedules_agree_numerically():
+    outs = {}
+    for sch in ["sch1", "sch2", "sch3"]:
+        app = make_app("harris", schedule=sch, size=12)
+        rng = np.random.default_rng(7)
+        inputs = {
+            n: rng.integers(1, 32, shape).astype(float)
+            for n, shape in app.input_extents.items()
+        }
+        vals = execute_pipeline(app.pipeline, inputs)
+        outs[sch] = table_to_array(
+            vals["harris"], app.pipeline.buffer_boxes["harris"].extents
+        )
+    np.testing.assert_allclose(outs["sch1"], outs["sch2"])
+    np.testing.assert_allclose(outs["sch1"], outs["sch3"])
+
+
+def test_resnet_matches_numpy_conv():
+    app, got, inputs = _run_app("resnet", img=6, cin=3, cout=4)
+    ifmap = inputs["ifmap"]       # (ci, y, x)
+    wgt = inputs["weights"]       # (co, ci, ky, kx)
+    want = np.zeros((4, 6, 6))    # (co, y, x)
+    for co_ in range(4):
+        for ci_ in range(3):
+            for ky in range(3):
+                for kx in range(3):
+                    want[co_] += (
+                        wgt[co_, ci_, ky, kx]
+                        * ifmap[ci_, ky : ky + 6, kx : kx + 6]
+                    )
+    np.testing.assert_allclose(got, want)
+
+
+def test_mobilenet_matches_numpy():
+    app, got, inputs = _run_app("mobilenet", img=6, cin=2, cout=2)
+    ifmap = inputs["ifmap"]           # loop order (y, x, c)
+    wdw = inputs["dw_weights"]        # (c, ky, kx)
+    wpw = inputs["pw_weights"]        # (co, c)
+    dw = np.zeros((6, 6, 2))          # (y, x, c)
+    for c_ in range(2):
+        for ky in range(3):
+            for kx in range(3):
+                dw[:, :, c_] += wdw[c_, ky, kx] * ifmap[ky : ky + 6, kx : kx + 6, c_]
+    # output loop order (y, x, co)
+    want = np.einsum("oc,yxc->yxo", wpw, dw)
+    np.testing.assert_allclose(got, want)
+
+
+def test_camera_executes_and_is_bounded():
+    app, got, inputs = _run_app("camera", size=6)
+    assert got.shape == (6, 2, 6, 2)
+    assert np.all(got >= 0) and np.all(got <= 255)
+
+
+def test_dnn_policy_predicate():
+    resnet = make_app("resnet", img=6, cin=3, cout=4)
+    st = resnet.pipeline.stage("resnet")
+    # spatial reduction loops rolled -> NOT fully unrolled -> DNN policy
+    assert not st.reduction_fully_unrolled()
+    gauss = make_app("gaussian", size=8)
+    assert gauss.pipeline.stage("gaussian").reduction_fully_unrolled()

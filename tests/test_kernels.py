@@ -1,0 +1,164 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ubplan import plan_attention, plan_matmul, plan_ssd, plan_stencil
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul
+from repro.kernels.ssd import ssd_scan
+from repro.kernels.stencil import stencil3x3
+
+
+def rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,k", [(32, 32, 32), (64, 128, 32), (128, 64, 256), (16, 16, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(m, n, k, dtype):
+    rng = np.random.default_rng(0)
+    a, b = rand(rng, (m, k), dtype), rand(rng, (k, n), dtype)
+    got = matmul(a, b, block_m=16, block_n=16, block_k=16, interpret=True)
+    want = ref.matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_matmul_plan_fits_vmem():
+    plan = plan_matmul(8192, 8192, 8192, dtype_bytes=2)
+    assert plan.fits()
+    assert plan.notes["bm"] % 8 == 0 and plan.notes["bn"] % 128 == 0
+
+
+# ---------------------------------------------------------------------------
+# stencil
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,w", [(16, 16), (32, 64), (64, 62)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_stencil_matches_ref(h, w, dtype):
+    rng = np.random.default_rng(1)
+    x = rand(rng, (h + 2, w + 2), dtype)
+    wts = jnp.asarray(np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]]) / 16.0, dtype)
+    got = stencil3x3(x, wts, block_h=8, interpret=True)
+    want = ref.stencil3x3_ref(x, wts)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_stencil_matches_paper_gaussian_app():
+    """The Pallas kernel computes the same gaussian as the CGRA pipeline."""
+    from repro.apps import make_app
+    from repro.frontend import execute_pipeline
+
+    app = make_app("gaussian", size=18)
+    rng = np.random.default_rng(2)
+    img = rng.integers(0, 64, (18, 18)).astype(np.float32)
+    vals = execute_pipeline(app.pipeline, {"input": img})
+    cgra = np.zeros((16, 16), np.float32)
+    for idx, v in vals["gaussian"].items():
+        cgra[idx] = v
+    wts = jnp.asarray(np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]]) / 16.0, jnp.float32)
+    tpu = stencil3x3(jnp.asarray(img), wts, block_h=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(tpu), cgra, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,d", [(2, 128, 64), (1, 256, 32), (4, 64, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, s, d, causal, dtype):
+    rng = np.random.default_rng(3)
+    q, k, v = (rand(rng, (b, s, d), dtype) for _ in range(3))
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_kv=32,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        got.astype(np.float32), want.astype(np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_cross_attention_rectangular():
+    rng = np.random.default_rng(4)
+    q = rand(rng, (2, 64, 32), jnp.float32)
+    k = rand(rng, (2, 256, 32), jnp.float32)
+    v = rand(rng, (2, 256, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=32, block_kv=64,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,h,p,n", [(64, 2, 8, 16), (128, 4, 16, 32), (32, 1, 4, 8)])
+def test_ssd_matches_recurrence(s, h, p, n):
+    rng = np.random.default_rng(5)
+    x = rand(rng, (s, h, p), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((s, h))) * 0.1 + 0.01, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal(h)) - 0.1, jnp.float32)
+    b = rand(rng, (s, n), jnp.float32)
+    c = rand(rng, (s, n), jnp.float32)
+    got = ssd_scan(x, dt, a, b, c, chunk=16, interpret=True)
+    want = ref.ssd_ref(x, dt, a, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is an implementation detail: results must not depend on it."""
+    rng = np.random.default_rng(6)
+    s, h, p, n = 64, 2, 8, 16
+    x = rand(rng, (s, h, p), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((s, h))) * 0.1 + 0.01, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.standard_normal(h)) - 0.1, jnp.float32)
+    b = rand(rng, (s, n), jnp.float32)
+    c = rand(rng, (s, n), jnp.float32)
+    y8 = ssd_scan(x, dt, a, b, c, chunk=8, interpret=True)
+    y32 = ssd_scan(x, dt, a, b, c, chunk=32, interpret=True)
+    np.testing.assert_allclose(y8, y32, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# planners
+# ---------------------------------------------------------------------------
+
+
+def test_planners_respect_vmem_budget():
+    tiny = 1 << 20  # 1 MiB
+    for plan in [
+        plan_matmul(4096, 4096, 4096, 2, vmem_budget=tiny),
+        plan_attention(32768, 32768, 128, 2, vmem_budget=tiny),
+        plan_stencil(4096, 4096, 1, 4, vmem_budget=tiny),
+    ]:
+        assert plan.fits(tiny), plan
+    # SSD's carried state alone is 1 MiB at these dims: the planner must
+    # shrink the chunk and keep the irreducible state resident
+    ssd_budget = 4 << 20
+    plan = plan_ssd(32768, 32, 64, 128, vmem_budget=ssd_budget)
+    assert plan.fits(ssd_budget), plan
+
+
+def test_attention_plan_scales_blocks_down():
+    big = plan_attention(32768, 32768, 128, 2)
+    assert big.notes["bq"] * big.notes["bkv"] > 0
+    assert big.fits()

@@ -1,0 +1,214 @@
+"""Mapping, recurrence-AG, simulator, and hardware-model tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import make_app
+from repro.core.extraction import extract_buffers
+from repro.core.mapping import HardwareSpec, map_design, map_unified_buffer
+from repro.core.poly import AffineExpr, Box
+from repro.core.recurrence import ag_matches_affine, ag_values, make_ag
+from repro.core.scheduling import schedule_pipeline
+from repro.core.simulator import (
+    simulate,
+    validate_against_reference,
+    validate_mapped_buffers,
+)
+from repro.core.hwmodel import design_cost, table2_variants
+
+
+# ---------------------------------------------------------------------------
+# Recurrence address generators (Fig. 5c)
+# ---------------------------------------------------------------------------
+
+
+def test_downsample_example_from_figure6():
+    """Fig. 6: downsample-by-2 over an 8x8 image: strides (16, 2), and the
+    x-delta folds the row skip."""
+    box = Box.make(y=(0, 3), x=(0, 3))
+    expr = 16 * AffineExpr.var("y") + 2 * AffineExpr.var("x")
+    cfg = make_ag(expr, box)
+    assert cfg.strides == (16, 2)
+    # d_y = s_y - s_x*(r_x - 1) = 16 - 2*3 = 10 (Fig. 6's delta)
+    assert cfg.deltas[0] == 10
+    assert ag_matches_affine(expr, box)
+    vals = list(ag_values(cfg))
+    assert vals[:5] == [0, 2, 4, 6, 16]
+
+
+@given(
+    st.integers(1, 6), st.integers(1, 6), st.integers(1, 6),
+    st.integers(-9, 9), st.integers(-9, 9), st.integers(-9, 9),
+    st.integers(-50, 50),
+)
+@settings(max_examples=60)
+def test_recurrence_equals_affine_property(r0, r1, r2, s0, s1, s2, off):
+    box = Box.make(a=(0, r0 - 1), b=(0, r1 - 1), c=(0, r2 - 1))
+    expr = (
+        AffineExpr.var("a") * s0 + AffineExpr.var("b") * s1
+        + AffineExpr.var("c") * s2 + off
+    )
+    assert ag_matches_affine(expr, box)
+
+
+# ---------------------------------------------------------------------------
+# Mapping structure
+# ---------------------------------------------------------------------------
+
+
+def _mapped(name, **kw):
+    app = make_app(name, **kw)
+    sch = schedule_pipeline(app.pipeline, tile_count=1)
+    ex = extract_buffers(app.pipeline, sch)
+    return app, sch, ex, map_design(ex.buffers)
+
+
+def test_gaussian_maps_to_one_mem_with_sr_chain():
+    app, sch, ex, mapped = _mapped("gaussian")
+    mb = mapped["input"]
+    # paper Fig. 1/8a: 3x3 window -> SR taps + line-delay SRAM, 1 MEM tile
+    assert mb.mem_tiles == 1
+    assert len(mb.sr_taps) >= 6
+    assert 120 <= mb.sram_words <= 140   # ~2 lines of 64 (paper: 128)
+
+
+def test_upsample_maps_to_single_small_mem():
+    app, sch, ex, mapped = _mapped("upsample")
+    mb = mapped["input"]
+    assert mb.mem_tiles == 1
+    assert 60 <= mb.sram_words <= 80     # paper: 67
+
+
+def test_chaining_splits_large_buffers():
+    """Eqs. 5-6: a buffer bigger than one 2048-word tile chains tiles."""
+    app, sch, ex, mapped = _mapped("harris", size=132)  # 128x128 output tile
+    total_tiles = sum(m.mem_tiles for m in mapped.values())
+    any_chained = any(b.tiles > 1 for m in mapped.values() for b in m.banks)
+    # 128-wide lines: 2 lines = 256+ words still < 2048, so force check via
+    # capacity accounting instead: every bank's tiles == ceil(cap/2048)
+    import math
+
+    for m in mapped.values():
+        for b in m.banks:
+            if b.tiles > 0:
+                assert b.tiles == math.ceil(b.capacity / 2048)
+
+
+def test_chaining_on_synthetic_deep_fifo():
+    from repro.core.poly import AffineMap, Schedule
+    from repro.core.ubuffer import IN, OUT, Port, UnifiedBuffer
+
+    # 4096-element delay fifo: write raster, read 5000 cycles later
+    box = Box.make(i=(0, 4095))
+    acc = AffineMap.identity(["i"])
+    ub = UnifiedBuffer("fifo")
+    ub.add_port(Port("w", IN, box, acc, Schedule(AffineExpr.var("i"), box)))
+    ub.add_port(Port("r", OUT, box, acc, Schedule(AffineExpr.var("i") + 5000, box)))
+    mb = map_unified_buffer(ub)
+    # 4096 live words > 2048 -> chained into >= 2 tiles (Eq. 5/6)
+    assert mb.mem_tiles >= 2
+
+
+def test_banking_spreads_many_ports():
+    app, sch, ex, mapped = _mapped("resnet", img=8, cin=4, cout=4)
+    wb = mapped["weights"]
+    # 16 weight read ports cannot share one single-port SRAM
+    assert len(wb.banks) > 1
+
+
+def test_sr_taps_have_valid_chain_structure():
+    for name in ["gaussian", "harris", "unsharp"]:
+        app, sch, ex, mapped = _mapped(name)
+        for mb in mapped.values():
+            for tap in mb.sr_taps:
+                assert tap.delay >= 0
+                assert tap.origin_delay >= tap.delay
+
+
+# ---------------------------------------------------------------------------
+# Cycle-accurate simulation (stream semantics)
+# ---------------------------------------------------------------------------
+
+
+APPS_SMALL = [
+    ("gaussian", dict(size=12)),
+    ("harris", dict(size=14)),
+    ("upsample", dict(size=6)),
+    ("unsharp", dict(size=10)),
+    ("camera", dict(size=5)),
+    ("resnet", dict(img=5, cin=2, cout=2)),
+    ("mobilenet", dict(img=6, cin=2, cout=2)),
+]
+
+
+@pytest.mark.parametrize("name,kw", APPS_SMALL)
+def test_simulation_matches_reference(name, kw):
+    app = make_app(name, **kw)
+    sch = schedule_pipeline(app.pipeline, tile_count=1)
+    rng = np.random.default_rng(11)
+    inputs = {
+        n: rng.integers(1, 40, shape).astype(float)
+        for n, shape in app.input_extents.items()
+    }
+    problems = validate_against_reference(app.pipeline, sch, inputs)
+    assert problems == []
+
+
+@pytest.mark.parametrize("name,kw", APPS_SMALL)
+def test_mapped_sr_chains_reproduce_streams(name, kw):
+    app = make_app(name, **kw)
+    sch = schedule_pipeline(app.pipeline, tile_count=1)
+    ex = extract_buffers(app.pipeline, sch)
+    mapped = map_design(ex.buffers)
+    assert validate_mapped_buffers(ex, mapped) == []
+
+
+def test_simulation_of_unrolled_schedule():
+    app = make_app("harris", schedule="sch4", size=16)
+    sch = schedule_pipeline(app.pipeline)
+    rng = np.random.default_rng(5)
+    inputs = {
+        n: rng.integers(1, 40, shape).astype(float)
+        for n, shape in app.input_extents.items()
+    }
+    assert validate_against_reference(app.pipeline, sch, inputs) == []
+
+
+def test_sim_cycle_count_matches_schedule():
+    app = make_app("gaussian", size=16)
+    sch = schedule_pipeline(app.pipeline)
+    rng = np.random.default_rng(1)
+    inputs = {
+        n: rng.integers(1, 9, shape).astype(float)
+        for n, shape in app.input_extents.items()
+    }
+    sim = simulate(app.pipeline, sch, inputs)
+    assert sim.cycles == sch.completion
+
+
+# ---------------------------------------------------------------------------
+# Hardware model (Table II shape)
+# ---------------------------------------------------------------------------
+
+
+def test_table2_ordering_matches_paper():
+    v = table2_variants()
+    base, ag, ub = v["dp_sram_pes"], v["dp_sram_ag"], v["wide_sp_ub"]
+    # area strictly improves down the table (34k -> 23k -> 17k)
+    assert base.total_area_um2 > ag.total_area_um2 > ub.total_area_um2
+    # energy strictly improves (4.8 -> 3.6 -> 2.5 pJ)
+    assert base.energy_pj_per_access > ag.energy_pj_per_access > ub.energy_pj_per_access
+    # final UB is about half the baseline's area and energy (paper: "half")
+    assert 0.35 < ub.total_area_um2 / base.total_area_um2 < 0.65
+    assert 0.35 < ub.energy_pj_per_access / base.energy_pj_per_access < 0.65
+    # SRAM array efficiency drops for the specialized design (82% -> ~32%)
+    assert ub.sram_fraction < base.sram_fraction
+
+
+def test_design_cost_cgra_beats_fpga():
+    app, sch, ex, mapped = _mapped("gaussian")
+    cost = design_cost(ex.total_pe_ops(), mapped, sch.completion,
+                       statements=62 * 62)
+    assert cost.fpga_energy_per_op_pj / cost.cgra_energy_per_op_pj > 2.0
+    assert cost.fpga_runtime_s / cost.cgra_runtime_s == pytest.approx(4.5)

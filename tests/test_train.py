@@ -1,0 +1,178 @@
+"""Training-stack tests: optimizer, train step, data, checkpoint, fault."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.train import (
+    AdamWConfig,
+    DataPipeline,
+    TrainState,
+    adamw_init,
+    latest_step,
+    make_train_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.fault import (
+    SimulatedFailure,
+    StragglerMonitor,
+    run_with_restarts,
+)
+from repro.train.optimizer import global_norm, stochastic_round_bf16
+
+
+def tiny_cfg():
+    return get_config("tinyllama_1_1b").reduced(n_layers=2, d_model=32,
+                                                vocab=64, d_ff=64)
+
+
+def make_state(cfg, seed=0):
+    params = init_params(cfg, jax.random.PRNGKey(seed), dtype=jnp.float32)
+    return TrainState(params, adamw_init(params), jax.random.PRNGKey(1))
+
+
+def make_batch(cfg, b=4, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, (b, s + 1))
+    return {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+    }
+
+
+def test_train_step_decreases_loss():
+    cfg = tiny_cfg()
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-2, warmup_steps=1),
+                                   microbatches=2, kv_chunk=8))
+    state = make_state(cfg)
+    batch = make_batch(cfg)   # same batch -> loss must drop fast
+    losses = []
+    for _ in range(12):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_microbatching_matches_single_batch():
+    """Gradient accumulation must equal the full-batch gradient step."""
+    cfg = tiny_cfg()
+    batch = make_batch(cfg, b=4)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1)
+    s1 = make_state(cfg)
+    s2 = make_state(cfg)
+    step1 = jax.jit(make_train_step(cfg, opt, microbatches=1, kv_chunk=8))
+    step4 = jax.jit(make_train_step(cfg, opt, microbatches=4, kv_chunk=8))
+    s1, m1 = step1(s1, batch)
+    s2, m4 = step4(s2, batch)
+    d1 = jax.tree.leaves(s1.params)
+    d2 = jax.tree.leaves(s2.params)
+    for a, b in zip(d1, d2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_grad_compression_still_learns():
+    cfg = tiny_cfg()
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=1e-2, warmup_steps=1, compress_grads=True),
+        microbatches=1, kv_chunk=8,
+    ))
+    state = make_state(cfg)
+    batch = make_batch(cfg)
+    losses = []
+    for _ in range(10):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_stochastic_rounding_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jnp.full((20000,), 1.0 + 2 ** -10, jnp.float32)  # between bf16 grid points
+    r = stochastic_round_bf16(x, key).astype(jnp.float32)
+    assert abs(float(jnp.mean(r)) - float(x[0])) < 1e-4
+    assert len(np.unique(np.asarray(r))) == 2
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    cfg = tiny_cfg()
+    d1 = DataPipeline(cfg.vocab, 2, 8, seed=3)
+    b1 = [next(d1) for _ in range(3)]
+    d1.close()
+    # resume from step 2
+    d2 = DataPipeline(cfg.vocab, 2, 8, seed=3, start_step=2)
+    b2 = next(d2)
+    d2.close()
+    np.testing.assert_array_equal(b1[2]["tokens"], b2["tokens"])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = tiny_cfg()
+    state = make_state(cfg)
+    save_checkpoint(str(tmp_path), 7, state.params, state.opt, {"step": 7})
+    assert latest_step(str(tmp_path)) == 7
+    p, o, meta = restore_checkpoint(str(tmp_path), 7, state.params, state.opt)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention(tmp_path):
+    cfg = tiny_cfg()
+    state = make_state(cfg)
+    for s in [10, 20, 30, 40]:
+        save_checkpoint(str(tmp_path), s, state.params, state.opt, {}, keep_last=2)
+    from repro.train.checkpoint import latest_steps
+
+    assert latest_steps(str(tmp_path)) == [30, 40]
+
+
+def test_run_with_restarts_recovers():
+    """Driver survives injected failures and finishes all steps."""
+    cfg = tiny_cfg()
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1),
+                                      microbatches=1, kv_chunk=8))
+    saved = {}
+
+    def make_state_fn():
+        if "state" in saved:
+            return saved["state"], saved["data"], saved["step"]
+        data = iter(lambda: make_batch(cfg, seed=np.random.randint(1 << 30)), None)
+        return make_state(cfg), data, 0
+
+    def run_step(state, batch, step):
+        return step_fn(state, batch)
+
+    def save(state, data, step):
+        saved.update(state=state, data=data, step=step)
+
+    fails = {5: True, 12: True}
+
+    def fault_hook(step):
+        if fails.pop(step, None):
+            raise SimulatedFailure(f"injected at {step}")
+
+    out = run_with_restarts(
+        total_steps=15, make_state=make_state_fn, run_step=run_step,
+        save=save, ckpt_every=3, fault_hook=fault_hook,
+    )
+    assert out["final_step"] == 15
+    assert out["restarts"] == 2
+
+
+def test_straggler_monitor_flags_outliers():
+    m = StragglerMonitor(threshold=3.0)
+    for i in range(10):
+        m.observe(i, 0.1)
+    assert m.observe(10, 1.0)          # 10x slower than EWMA
+    assert m.flagged == [10]
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert abs(float(global_norm(t)) - np.sqrt(3 + 16)) < 1e-6
