@@ -17,6 +17,87 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def backend_rows() -> list:
+    """Generated (Stage->Pallas codegen) kernels vs their hand-written
+    counterparts, interpret mode.  Returned as dicts so ``benchmarks/run.py``
+    can serialize them to BENCH_backend.json."""
+    from repro.apps.paper_apps import make_app
+    from repro.backend import compile_pipeline, max_abs_error
+    from repro.kernels.matmul import matmul
+    from repro.kernels.stencil import stencil3x3
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        out = fn()
+        jnp.asarray(out).block_until_ready()
+        return out, (time.perf_counter() - t0) * 1e6
+
+    def timed_run(pp, inputs):
+        t0 = time.perf_counter()
+        got = pp.run(inputs)
+        got[pp.pipeline.output].block_until_ready()
+        return got, (time.perf_counter() - t0) * 1e6
+
+    # gaussian 3x3 stencil: generated pipeline vs hand-written stencil3x3
+    app = make_app("gaussian")          # 64x64 input tile
+    pp = compile_pipeline(app.pipeline)
+    inputs = {"input": rng.integers(0, 64, (64, 64)).astype(np.float32)}
+    got, gen_us = timed_run(pp, inputs)
+    out = got[pp.pipeline.output]
+    errs = max_abs_error(pp, inputs, got=got)
+    w = jnp.asarray(np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]]) / 16.0, jnp.float32)
+    hand, hand_us = timed(
+        lambda: stencil3x3(jnp.asarray(inputs["input"]), w, block_h=31, interpret=True)
+    )
+    vs_hand = float(jnp.max(jnp.abs(jnp.asarray(out) - hand)))
+    cs = pp.stage("gaussian")
+    rows.append({
+        "kernel": "gaussian", "case": "64x64",
+        "us_generated": round(gen_us), "us_handwritten": round(hand_us),
+        "max_err_ref": max(errs.values()), "max_err_vs_hand": vs_hand,
+        "grid": list(cs.grid), "vmem_kib": cs.plan.vmem_bytes // 1024,
+    })
+
+    # matmul tile: generated pipeline vs hand-written Pallas matmul
+    m, n, k = 64, 64, 32
+    app = make_app("matmul", m=m, n=n, k=k)
+    pp = compile_pipeline(app.pipeline)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    out, gen_us = timed(lambda: pp({"A": a, "B": b}))
+    err_ref = float(np.max(np.abs(np.asarray(out) - a @ b)))
+    hand, hand_us = timed(
+        lambda: matmul(jnp.asarray(a), jnp.asarray(b), block_m=32, block_n=32,
+                       block_k=32, interpret=True)
+    )
+    vs_hand = float(jnp.max(jnp.abs(jnp.asarray(out) - hand)))
+    cs = pp.stage("matmul")
+    rows.append({
+        "kernel": "matmul", "case": f"{m}x{n}x{k}",
+        "us_generated": round(gen_us), "us_handwritten": round(hand_us),
+        "max_err_ref": err_ref, "max_err_vs_hand": vs_hand,
+        "grid": list(cs.grid), "vmem_kib": cs.plan.vmem_bytes // 1024,
+    })
+
+    # cascade pipeline (no hand-written counterpart): generated only
+    app = make_app("unsharp")
+    pp = compile_pipeline(app.pipeline)
+    inputs = {"input": rng.integers(0, 64, (64, 64)).astype(np.float32)}
+    got, gen_us = timed_run(pp, inputs)
+    errs = max_abs_error(pp, inputs, got=got)
+    rows.append({
+        "kernel": "unsharp", "case": "64x64-cascade",
+        "us_generated": round(gen_us), "us_handwritten": None,
+        "max_err_ref": max(errs.values()), "max_err_vs_hand": None,
+        "grid": [list(cs.grid) for cs in pp.stages],
+        "vmem_kib": sum(cs.plan.vmem_bytes for cs in pp.stages) // 1024,
+    })
+    return rows
+
+
 def main() -> None:
     from repro.core.ubplan import plan_attention, plan_matmul, plan_ssd, plan_stencil
     from repro.kernels import ref
@@ -78,6 +159,17 @@ def main() -> None:
     err = float(jnp.max(jnp.abs(got - ref.ssd_ref(x, dtv, av, bv, cv))))
     plan = plan_ssd(s_, h_, p_, n_)
     print(f"ssd,s{s_}h{h_}p{p_}n{n_},{dt:.0f},{err:.2e},{plan.grid},{plan.vmem_bytes//1024}")
+
+    # generated backend kernels: hand-written vs codegen throughput
+    print()
+    print("kernel,case,us_generated,us_handwritten,max_err_ref,max_err_vs_hand,grid,vmem_kib")
+    for r in backend_rows():
+        hand = r["us_handwritten"] if r["us_handwritten"] is not None else "-"
+        vs = f"{r['max_err_vs_hand']:.2e}" if r["max_err_vs_hand"] is not None else "-"
+        print(
+            f"backend_{r['kernel']},{r['case']},{r['us_generated']},{hand},"
+            f"{r['max_err_ref']:.2e},{vs},\"{r['grid']}\",{r['vmem_kib']}"
+        )
 
 
 if __name__ == "__main__":

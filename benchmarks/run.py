@@ -22,6 +22,23 @@ def main() -> None:
             print(row)
         print()
 
+    write_backend_bench()
+
+
+def write_backend_bench(path: str | None = None) -> str:
+    """Benchmark the generated backend kernels and persist BENCH_backend.json."""
+    import json
+
+    from benchmarks.kernel_bench import backend_rows
+
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..", "BENCH_backend.json")
+    rows = backend_rows()
+    with open(path, "w") as f:
+        json.dump({"generated_kernels": rows}, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)} ({len(rows)} generated-kernel entries)")
+    return path
+
 
 if __name__ == "__main__":
     main()

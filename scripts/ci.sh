@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verification + backend smoke test.
+#
+#   bash scripts/ci.sh          # full suite
+#   bash scripts/ci.sh --fast   # skip the slow end-to-end system tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(--ignore=tests/test_system.py --ignore=tests/test_train.py)
+fi
+
+python -m pytest "${PYTEST_ARGS[@]}"
+
+# backend smoke: compile 3 paper apps through lower -> ubplan -> Pallas
+# (interpret mode) and diff against the reference interpreter
+python -m repro.backend.demo --smoke

@@ -383,7 +383,37 @@ def build_mobilenet(
 
 
 # ---------------------------------------------------------------------------
+# matmul — (M, K) x (K, N) tile, the GEMM-shaped workload for the backend
+# ---------------------------------------------------------------------------
+
+
+def build_matmul(m: int = 32, n: int = 32, k: int = 32) -> AppBundle:
+    """One accelerator tile of C = A @ B (loop order: A is (M, K), B is
+    (K, N), C is (M, N)).  Not one of the paper's seven Table III apps — it
+    exists so the generated-kernel backend is exercised on a matmul-shaped
+    iteration space (reduction-only operand axes, broadcast streams)."""
+    a = Func.input("A", 2)
+    b = Func.input("B", 2)
+    i, j = Var("i"), Var("j")
+    r = RDom(k, name="k")
+    c = Func("matmul")
+    c[j, i] = 0                      # j fastest -> loop order (i, j)
+    c.update((j, i), c[j, i] + a[r[0], i] * b[j, r[0]], r)
+    c.hw_accelerate()
+    funcs = [a, b, c]
+    pipe = lower_pipeline(c, funcs, {"j": n, "i": m})
+    return AppBundle(
+        "matmul", "dnn", pipe, funcs, c,
+        {"j": n, "i": m},
+        {"A": (m, k), "B": (k, n)},
+        description="dense matmul tile (backend workload)",
+    )
+
+
+# ---------------------------------------------------------------------------
 ALL_APPS = ["gaussian", "harris", "upsample", "unsharp", "camera", "resnet", "mobilenet"]
+# additional backend workloads, not part of the paper's Table III set
+EXTRA_APPS = ["matmul"]
 
 
 def make_app(name: str, **kw) -> AppBundle:
@@ -395,8 +425,11 @@ def make_app(name: str, **kw) -> AppBundle:
         "camera": build_camera,
         "resnet": build_resnet,
         "mobilenet": build_mobilenet,
+        "matmul": build_matmul,
     }
     return builders[name](**kw)
 
 
-__all__ = ["AppBundle", "ALL_APPS", "make_app"] + [f"build_{n}" for n in ALL_APPS]
+__all__ = ["AppBundle", "ALL_APPS", "EXTRA_APPS", "make_app"] + [
+    f"build_{n}" for n in ALL_APPS + EXTRA_APPS
+]

@@ -1,0 +1,31 @@
+"""Pallas code generator for lowered Halide pipelines.
+
+Bridges the paper's compiler front half (``frontend.lower`` -> ``Stage`` IR,
+the input of unified-buffer extraction) to an executable push-memory target:
+every realized stage becomes a ``pallas_call`` whose grid and BlockSpecs are
+derived from the stage's affine access maps.  See README.md in this package
+for the Stage -> grid/BlockSpec correspondence.
+"""
+
+from .access import AxisAccess, LoadAccess, UnsupportedAccessError, decompose_stage
+from .codegen import CompiledStage, ViewGroup, compile_stage
+from .runner import (
+    PallasPipeline,
+    compile_pipeline,
+    max_abs_error,
+    reference_arrays,
+)
+
+__all__ = [
+    "AxisAccess",
+    "LoadAccess",
+    "UnsupportedAccessError",
+    "decompose_stage",
+    "CompiledStage",
+    "ViewGroup",
+    "compile_stage",
+    "PallasPipeline",
+    "compile_pipeline",
+    "max_abs_error",
+    "reference_arrays",
+]

@@ -72,6 +72,45 @@ class KernelPlan:
 
 
 # ---------------------------------------------------------------------------
+# generic stage planning (backend codegen: plan from affine access structure)
+# ---------------------------------------------------------------------------
+
+
+def plan_affine_stage(
+    grid_extent: int,
+    bytes_per_row: int,
+    fixed_bytes: int,
+    *,
+    vmem_budget: int = VMEM_BYTES,
+    max_bh: int = 256,
+    prefer_stream: bool = True,
+) -> int:
+    """Pick the block height for a generated stage kernel.
+
+    The backend streams row panels of the outermost pure loop dim through
+    VMEM; ``bytes_per_row`` is the double-buffered working set that scales
+    with the block height (blocked input streams + the output panel) and
+    ``fixed_bytes`` the resident broadcast views (weights, whole buffers).
+
+    Unlike the named-shape planners above, the extent here comes from a
+    stage's iteration domain, which is rarely a power of two (e.g. 62 for a
+    64-input 3x3 stencil), so candidates are *divisors* of the extent —
+    Pallas grids must tile the array exactly.  ``prefer_stream`` caps the
+    block at a quarter of the extent so pipelines actually exercise the
+    multi-step push schedule instead of degenerating to one giant block.
+    """
+    divisors = [d for d in range(1, grid_extent + 1) if grid_extent % d == 0]
+    cap = min(max_bh, grid_extent)
+    if prefer_stream and grid_extent > 8:
+        cap = min(cap, max(grid_extent // 4, 8))
+    candidates = [d for d in reversed(divisors) if d <= cap] or [1]
+    for bh in candidates:
+        if 2 * bytes_per_row * bh + fixed_bytes <= vmem_budget:
+            return bh
+    return candidates[-1]
+
+
+# ---------------------------------------------------------------------------
 # matmul: (M, K) x (K, N) -> (M, N)
 # ---------------------------------------------------------------------------
 
@@ -236,6 +275,7 @@ __all__ = [
     "MXU",
     "StreamPlan",
     "KernelPlan",
+    "plan_affine_stage",
     "plan_matmul",
     "plan_attention",
     "plan_stencil",

@@ -332,6 +332,116 @@ def _make_stage(
 
 
 # ---------------------------------------------------------------------------
+# Normalized (codegen-friendly) stage view
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NormalizedStage:
+    """Zero-based view of a :class:`Stage` for code generators.
+
+    ``Stage`` records carry *absolute* coordinates: the iteration domain is
+    the required buffer box (whose lower bounds need not be 0) and access
+    maps index producer buffers by absolute element.  Backends that realize
+    buffers as dense arrays want everything rebased to 0:
+
+      * the iteration domain becomes pure extents x reduction extents,
+      * each load's access map sends zero-based stage dims to zero-based
+        producer elements (producer-box lower bounds subtracted),
+      * the store map is the identity on the pure dims (element == pure
+        iteration point), which :func:`normalize_stage` verifies.
+
+    ``dim_lower`` retains each stage dim's original lower bound so value
+    expressions reading iteration variables (``IterVal``) can reconstruct
+    absolute coordinates.
+    """
+
+    name: str
+    pure_dims: Tuple[str, ...]          # outermost first; [0] is the loop var
+    pure_extents: Tuple[int, ...]
+    red_dims: Tuple[str, ...]
+    red_extents: Tuple[int, ...]
+    value: Expr                         # FuncRefs pair 1:1, in refs_in order,
+                                        # with ``loads`` entries
+    init: Optional[Expr]                # reduction init, None for pure stages
+    loads: Tuple[Tuple[str, AffineMap], ...]   # zero-based access maps
+    dim_lower: Tuple[Tuple[str, int], ...]
+    on_host: bool = False
+
+    @property
+    def dims(self) -> Tuple[str, ...]:
+        return self.pure_dims + self.red_dims
+
+    def extent(self, dim: str) -> int:
+        if dim in self.pure_dims:
+            return self.pure_extents[self.pure_dims.index(dim)]
+        return self.red_extents[self.red_dims.index(dim)]
+
+    def lower_of(self, dim: str) -> int:
+        return dict(self.dim_lower).get(dim, 0)
+
+
+def normalize_stage(stage: Stage, buffer_boxes: Mapping[str, Box]) -> NormalizedStage:
+    """Rebase a stage and its access maps to zero-based coordinates."""
+    buf_box = buffer_boxes[stage.name]
+    if tuple(buf_box.dims) != stage.pure_dims:
+        raise ValueError(
+            f"{stage.name}: buffer box dims {buf_box.dims} != pure dims "
+            f"{stage.pure_dims}"
+        )
+    dim_lower: Dict[str, int] = {
+        d: lo for d, (lo, _) in zip(buf_box.dims, buf_box.intervals)
+    }
+    red_dims: Tuple[str, ...] = ()
+    red_extents: Tuple[int, ...] = ()
+    init: Optional[Expr] = None
+    if stage.reduction is not None:
+        red_dims = tuple(stage.reduction.rvars)
+        red_extents = tuple(stage.reduction.rextents)
+        init = stage.reduction.init
+        for rv in red_dims:
+            dim_lower[rv] = 0
+    # the store map must be the identity on the pure dims for the rebasing
+    # (element == iteration point) to be sound
+    for e, d in zip(stage.store.exprs, stage.pure_dims):
+        if e != AffineExpr.var(d):
+            raise ValueError(f"{stage.name}: non-identity store map {stage.store}")
+    shift = {
+        d: AffineExpr.var(d) + lo for d, lo in dim_lower.items() if lo != 0
+    }
+    loads: List[Tuple[str, AffineMap]] = []
+    for buf, acc in stage.loads:
+        pbox = buffer_boxes[buf]
+        if acc.n_out != len(pbox.dims):
+            raise ValueError(f"{stage.name}: load of {buf} rank mismatch")
+        exprs = []
+        for e, (plo, _) in zip(acc.exprs, pbox.intervals):
+            e2 = e.substitute(shift) if shift else e
+            exprs.append(e2 - plo)
+        loads.append((buf, AffineMap(tuple(stage.dims), tuple(exprs))))
+    return NormalizedStage(
+        name=stage.name,
+        pure_dims=tuple(stage.pure_dims),
+        pure_extents=tuple(buf_box.extents),
+        red_dims=red_dims,
+        red_extents=red_extents,
+        value=stage.value,
+        init=init,
+        loads=tuple(loads),
+        dim_lower=tuple(sorted(dim_lower.items())),
+        on_host=stage.on_host,
+    )
+
+
+def normalize_pipeline(pipe: "Pipeline") -> List[NormalizedStage]:
+    """Normalized stages in execution order (device stages, then host)."""
+    return [
+        normalize_stage(s, pipe.buffer_boxes)
+        for s in list(pipe.stages) + list(pipe.host_stages)
+    ]
+
+
+# ---------------------------------------------------------------------------
 # Reference interpreter (golden model for all backends)
 # ---------------------------------------------------------------------------
 
@@ -380,4 +490,12 @@ def _first_rpoint(p: Mapping[str, int], red: Reduction) -> bool:
     return all(p[rv] == 0 for rv in red.rvars)
 
 
-__all__ = ["Stage", "Pipeline", "lower_pipeline", "execute_pipeline"]
+__all__ = [
+    "Stage",
+    "Pipeline",
+    "NormalizedStage",
+    "lower_pipeline",
+    "normalize_stage",
+    "normalize_pipeline",
+    "execute_pipeline",
+]

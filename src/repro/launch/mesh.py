@@ -5,27 +5,84 @@ never touches jax device state.  Single pod: 16x16 = 256 chips (data, model);
 multi-pod: 2x16x16 = 512 chips (pod, data, model) — the ``pod`` axis is an
 outer data-parallel axis by default (optionally a pipeline axis, see
 distributed/pipeline.py).
+
+All mesh construction in this repo goes through :func:`make_mesh` /
+:func:`make_abstract_mesh` / :func:`mesh_context`: ``jax.sharding.AxisType``
+and ``jax.set_mesh`` only exist in newer jax releases, and passing
+``axis_types`` to ``jax.make_mesh`` crashes on jax 0.4.x.  These helpers use
+the new API surface when present and degrade gracefully otherwise, so the
+same call sites run on every supported jax.
 """
 
 from __future__ import annotations
 
+from typing import ContextManager, Sequence
+
 import jax
+
+
+def _auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` when the installed jax has AxisType, else None."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices=None,
+) -> jax.sharding.Mesh:
+    """Version-compatible ``jax.make_mesh`` (``axis_types`` only when available)."""
+    kwargs = {}
+    types = _auto_axis_types(len(axis_names))
+    if types is not None:
+        kwargs["axis_types"] = types
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def make_abstract_mesh(
+    axis_shapes: Sequence[int], axis_names: Sequence[str]
+) -> "jax.sharding.AbstractMesh":
+    """Abstract (device-free) mesh for sharding-spec math, on any jax.
+
+    New jax takes ``(axis_sizes, axis_names, axis_types=...)``; jax 0.4.x
+    takes a single ``((name, size), ...)`` shape tuple.
+    """
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    types = _auto_axis_types(len(names))
+    if types is not None:
+        return jax.sharding.AbstractMesh(shapes, names, axis_types=types)
+    return jax.sharding.AbstractMesh(tuple(zip(names, shapes)))
+
+
+def mesh_context(mesh: jax.sharding.Mesh) -> ContextManager:
+    """``jax.set_mesh(mesh)`` when available, else the legacy Mesh context
+    manager (on jax 0.4.x entering the Mesh itself installs it)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """1-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((1, 1), ("data", "model"))
 
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = [
+    "make_mesh",
+    "make_abstract_mesh",
+    "mesh_context",
+    "make_production_mesh",
+    "make_host_mesh",
+]

@@ -134,6 +134,15 @@ class RooflineReport:
         }
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a per-device *list* of dicts on
+    jax 0.4.x and a plain dict on newer jax; normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def analyze_compiled(
     name: str,
     compiled,
@@ -148,7 +157,7 @@ def analyze_compiled(
 
     text = compiled.as_text()
     cost = HloCostModel(text).cost()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     rep = RooflineReport(
         name, chips, cost.flops, cost.bytes,
         {k: int(v) for k, v in cost.collectives.items()}, model_flops,
@@ -160,4 +169,4 @@ def analyze_compiled(
     return rep
 
 
-__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes_from_hlo", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+__all__ = ["RooflineReport", "analyze_compiled", "cost_analysis_dict", "collective_bytes_from_hlo", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -8,17 +8,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed.sharding import dp_axes, make_plan, param_shardings
+from repro.launch.mesh import make_abstract_mesh, make_mesh
 from repro.models import init_params
 
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
     """Abstract mesh for spec math (no devices needed)."""
-    import numpy as np
-
-    devs = np.asarray(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
-    return jax.sharding.AbstractMesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_abstract_mesh(shape, axes)
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
@@ -97,8 +93,7 @@ def test_spmd_forward_on_local_mesh():
     from repro.models import forward_train
 
     cfg = get_config("tinyllama_1_1b").reduced()
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     plan = make_plan(cfg, mesh)
     params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
     rng = np.random.default_rng(0)

@@ -15,9 +15,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.pipeline import pipeline_forward
+from repro.launch.mesh import make_mesh, mesh_context
 
-mesh = jax.make_mesh((4,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("pod",))
 
 D = 16
 rng = np.random.default_rng(0)
@@ -29,7 +29,7 @@ def apply_stage(w, x, stage):
 fn = pipeline_forward(apply_stage, mesh)
 micro = jnp.asarray(rng.standard_normal((6, 8, D)).astype(np.float32))
 
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     got = jax.jit(fn)(Ws, micro)
 
 # reference: apply the 4 stages sequentially to every microbatch

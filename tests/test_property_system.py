@@ -3,6 +3,8 @@ must always schedule legally, validate, and simulate to the reference."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.extraction import extract_buffers

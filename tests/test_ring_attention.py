@@ -13,9 +13,9 @@ import numpy as np
 
 from repro.distributed.ring_attention import ring_attention
 from repro.kernels import ref
+from repro.launch.mesh import make_mesh, mesh_context
 
-mesh = jax.make_mesh((4,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("model",))
 
 rng = np.random.default_rng(0)
 b, s, hq, hkv, d = 2, 64, 4, 2, 16
@@ -23,7 +23,7 @@ q = jnp.asarray(rng.standard_normal((b, s, hq, d)).astype(np.float32))
 k = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
 v = jnp.asarray(rng.standard_normal((b, s, hkv, d)).astype(np.float32))
 
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     got = jax.jit(lambda q, k, v: ring_attention(q, k, v, mesh))(q, k, v)
 
 # reference: dense causal GQA attention
@@ -38,7 +38,7 @@ want = ref.attention_ref(
 np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
 
 # windowed variant
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     got_w = jax.jit(lambda q, k, v: ring_attention(q, k, v, mesh, window=16))(q, k, v)
 from repro.models.layers import chunked_gqa_attention
 want_w = chunked_gqa_attention(q, k, v, window=16, kv_chunk=16, inner_remat=False)

@@ -118,8 +118,9 @@ def test_dryrun_cell_on_host_mesh():
     from repro.models import forward_prefill
 
     cfg = get_config("gemma3_1b").reduced()
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     plan = make_plan(cfg, mesh)
     params_shape = jax.eval_shape(
         lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
