@@ -18,9 +18,12 @@ import numpy as np
 
 
 def backend_rows() -> list:
-    """Generated (Stage->Pallas codegen) kernels vs their hand-written
-    counterparts, interpret mode.  Returned as dicts so ``benchmarks/run.py``
-    can serialize them to BENCH_backend.json."""
+    """Generated (plan/emit) kernels vs their baselines, interpret mode:
+    hand-written Pallas counterparts, the per-stage (unfused) plan, and the
+    fully-unrolled reduction path.  Every row carries the plan's HBM-traffic
+    estimate (bytes moved per pipeline invocation) alongside wall-clock.
+    Returned as dicts so ``benchmarks/run.py`` can serialize them to
+    BENCH_backend.json."""
     from repro.apps.paper_apps import make_app
     from repro.backend import compile_pipeline, max_abs_error
     from repro.kernels.matmul import matmul
@@ -55,10 +58,11 @@ def backend_rows() -> list:
     vs_hand = float(jnp.max(jnp.abs(jnp.asarray(out) - hand)))
     cs = pp.stage("gaussian")
     rows.append({
-        "kernel": "gaussian", "case": "64x64",
-        "us_generated": round(gen_us), "us_handwritten": round(hand_us),
-        "max_err_ref": max(errs.values()), "max_err_vs_hand": vs_hand,
+        "kernel": "gaussian", "case": "64x64", "baseline": "handwritten",
+        "us_generated": round(gen_us), "us_baseline": round(hand_us),
+        "max_err_ref": max(errs.values()), "max_err_vs_baseline": vs_hand,
         "grid": list(cs.grid), "vmem_kib": cs.plan.vmem_bytes // 1024,
+        "hbm_kib": pp.plan.hbm_bytes() // 1024, "hbm_kib_baseline": None,
     })
 
     # matmul tile: generated pipeline vs hand-written Pallas matmul
@@ -76,24 +80,60 @@ def backend_rows() -> list:
     vs_hand = float(jnp.max(jnp.abs(jnp.asarray(out) - hand)))
     cs = pp.stage("matmul")
     rows.append({
-        "kernel": "matmul", "case": f"{m}x{n}x{k}",
-        "us_generated": round(gen_us), "us_handwritten": round(hand_us),
-        "max_err_ref": err_ref, "max_err_vs_hand": vs_hand,
+        "kernel": "matmul", "case": f"{m}x{n}x{k}", "baseline": "handwritten",
+        "us_generated": round(gen_us), "us_baseline": round(hand_us),
+        "max_err_ref": err_ref, "max_err_vs_baseline": vs_hand,
         "grid": list(cs.grid), "vmem_kib": cs.plan.vmem_bytes // 1024,
+        "hbm_kib": pp.plan.hbm_bytes() // 1024, "hbm_kib_baseline": None,
     })
 
-    # cascade pipeline (no hand-written counterpart): generated only
-    app = make_app("unsharp")
-    pp = compile_pipeline(app.pipeline)
-    inputs = {"input": rng.integers(0, 64, (64, 64)).astype(np.float32)}
-    got, gen_us = timed_run(pp, inputs)
-    errs = max_abs_error(pp, inputs, got=got)
+    # fused cascades vs the per-stage (HBM round-trip) plan
+    for name, kw, case in [
+        ("unsharp", {}, "64x64-cascade"),
+        ("harris", {"schedule": "sch3", "size": 36}, "32x32-cascade"),
+    ]:
+        app = make_app(name, **kw)
+        pp_f = compile_pipeline(app.pipeline)
+        pp_u = compile_pipeline(app.pipeline, fuse=False)
+        inputs = {
+            nm: rng.integers(0, 64, s).astype(np.float32)
+            for nm, s in app.input_extents.items()
+        }
+        got_f, fused_us = timed_run(pp_f, inputs)
+        _, unfused_us = timed_run(pp_u, inputs)
+        errs = max_abs_error(pp_f, inputs, got=got_f)
+        rows.append({
+            "kernel": f"{name}_fused", "case": case, "baseline": "unfused",
+            "us_generated": round(fused_us), "us_baseline": round(unfused_us),
+            "max_err_ref": max(errs.values()), "max_err_vs_baseline": None,
+            "grid": [list(ck.grid) for ck in pp_f.kernels],
+            "vmem_kib": sum(ck.plan.vmem_bytes for ck in pp_f.kernels) // 1024,
+            "hbm_kib": pp_f.plan.hbm_bytes() // 1024,
+            "hbm_kib_baseline": pp_u.plan.hbm_bytes() // 1024,
+            "kernels": pp_f.plan.n_kernels, "stages": pp_f.plan.n_stages,
+        })
+
+    # grid-level reduction vs full in-kernel unrolling (large-K matmul)
+    m, n, k = 16, 16, 512
+    app = make_app("matmul", m=m, n=n, k=k)
+    pp_g = compile_pipeline(app.pipeline)            # K=512 >= threshold
+    pp_u = compile_pipeline(app.pipeline, grid_reduction=False)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    out_g, grid_us = timed(lambda: pp_g({"A": a, "B": b}))
+    _, unrolled_us = timed(lambda: pp_u({"A": a, "B": b}))
+    err_ref = float(np.max(np.abs(
+        np.asarray(out_g) - a.astype(np.float64) @ b.astype(np.float64)
+    )))
+    ck = pp_g.kernels[0]
     rows.append({
-        "kernel": "unsharp", "case": "64x64-cascade",
-        "us_generated": round(gen_us), "us_handwritten": None,
-        "max_err_ref": max(errs.values()), "max_err_vs_hand": None,
-        "grid": [list(cs.grid) for cs in pp.stages],
-        "vmem_kib": sum(cs.plan.vmem_bytes for cs in pp.stages) // 1024,
+        "kernel": "matmul_gridred", "case": f"{m}x{n}x{k}", "baseline": "unrolled",
+        "us_generated": round(grid_us), "us_baseline": round(unrolled_us),
+        "max_err_ref": err_ref, "max_err_vs_baseline": None,
+        "grid": list(ck.grid), "vmem_kib": ck.plan.vmem_bytes // 1024,
+        "hbm_kib": pp_g.plan.hbm_bytes() // 1024,
+        "hbm_kib_baseline": pp_u.plan.hbm_bytes() // 1024,
+        "red_chunk": ck.red_grid.chunk if ck.red_grid else None,
     })
     return rows
 
@@ -160,15 +200,23 @@ def main() -> None:
     plan = plan_ssd(s_, h_, p_, n_)
     print(f"ssd,s{s_}h{h_}p{p_}n{n_},{dt:.0f},{err:.2e},{plan.grid},{plan.vmem_bytes//1024}")
 
-    # generated backend kernels: hand-written vs codegen throughput
+    # generated backend kernels vs baselines (hand-written / unfused / unrolled)
     print()
-    print("kernel,case,us_generated,us_handwritten,max_err_ref,max_err_vs_hand,grid,vmem_kib")
+    print(
+        "kernel,case,baseline,us_generated,us_baseline,max_err_ref,"
+        "max_err_vs_baseline,grid,vmem_kib,hbm_kib,hbm_kib_baseline"
+    )
     for r in backend_rows():
-        hand = r["us_handwritten"] if r["us_handwritten"] is not None else "-"
-        vs = f"{r['max_err_vs_hand']:.2e}" if r["max_err_vs_hand"] is not None else "-"
+        base = r["us_baseline"] if r["us_baseline"] is not None else "-"
+        vs = (
+            f"{r['max_err_vs_baseline']:.2e}"
+            if r["max_err_vs_baseline"] is not None else "-"
+        )
+        hbm_b = r["hbm_kib_baseline"] if r["hbm_kib_baseline"] is not None else "-"
         print(
-            f"backend_{r['kernel']},{r['case']},{r['us_generated']},{hand},"
-            f"{r['max_err_ref']:.2e},{vs},\"{r['grid']}\",{r['vmem_kib']}"
+            f"backend_{r['kernel']},{r['case']},{r['baseline']},"
+            f"{r['us_generated']},{base},{r['max_err_ref']:.2e},{vs},"
+            f"\"{r['grid']}\",{r['vmem_kib']},{r['hbm_kib']},{hbm_b}"
         )
 
 

@@ -1,12 +1,23 @@
 #!/usr/bin/env bash
 # Tier-1 verification + backend smoke test.
 #
-#   bash scripts/ci.sh          # full suite
-#   bash scripts/ci.sh --fast   # skip the slow end-to-end system tests
+#   bash scripts/ci.sh            # full suite
+#   bash scripts/ci.sh --fast     # skip the slow end-to-end system tests
+#   bash scripts/ci.sh --backend  # backend (plan/emit) suite standalone
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--backend" ]]; then
+    # the Stage->Pallas plan/emit suite on its own (marker-gated), then the
+    # fusion smoke path: compile paper apps through lower -> plan -> Pallas
+    # (interpret mode), diff against the reference interpreter, and assert
+    # the plan shape (fused kernel counts, grid-level reduction for big K)
+    python -m pytest -q -m backend
+    python -m repro.backend.demo --smoke
+    exit 0
+fi
 
 PYTEST_ARGS=(-x -q)
 if [[ "${1:-}" == "--fast" ]]; then
@@ -15,6 +26,7 @@ fi
 
 python -m pytest "${PYTEST_ARGS[@]}"
 
-# backend smoke: compile 3 paper apps through lower -> ubplan -> Pallas
-# (interpret mode) and diff against the reference interpreter
+# backend smoke: compile paper apps through lower -> plan -> Pallas
+# (interpret mode), diff against the reference interpreter, and fail on any
+# plan regression from fused back to per-stage compilation
 python -m repro.backend.demo --smoke

@@ -1,14 +1,26 @@
-"""Pallas code generator for lowered Halide pipelines.
+"""Pallas code generator for lowered Halide pipelines (plan/emit).
 
 Bridges the paper's compiler front half (``frontend.lower`` -> ``Stage`` IR,
-the input of unified-buffer extraction) to an executable push-memory target:
-every realized stage becomes a ``pallas_call`` whose grid and BlockSpecs are
-derived from the stage's affine access maps.  See README.md in this package
-for the Stage -> grid/BlockSpec correspondence.
+the input of unified-buffer extraction) to an executable push-memory target
+in two phases: ``plan.build_pipeline_plan`` makes every memory decision
+(view streams, stage fusion into VMEM scratch, grid-level reductions,
+scheduler-driven block heights) symbolically, and ``codegen.emit_kernel``
+lowers each planned kernel group to a ``pallas_call``.  See README.md in
+this package for the Stage -> plan -> grid/BlockSpec correspondence.
 """
 
 from .access import AxisAccess, LoadAccess, UnsupportedAccessError, decompose_stage
-from .codegen import CompiledStage, ViewGroup, compile_stage
+from .codegen import CompiledKernel, CompiledStage, compile_stage, emit_kernel
+from .plan import (
+    FusionInfeasible,
+    KernelGroup,
+    PipelinePlan,
+    RedGrid,
+    StagePlan,
+    ViewGroup,
+    build_pipeline_plan,
+    scheduler_cost,
+)
 from .runner import (
     PallasPipeline,
     compile_pipeline,
@@ -21,9 +33,18 @@ __all__ = [
     "LoadAccess",
     "UnsupportedAccessError",
     "decompose_stage",
+    "CompiledKernel",
     "CompiledStage",
     "ViewGroup",
     "compile_stage",
+    "emit_kernel",
+    "FusionInfeasible",
+    "KernelGroup",
+    "PipelinePlan",
+    "RedGrid",
+    "StagePlan",
+    "build_pipeline_plan",
+    "scheduler_cost",
     "PallasPipeline",
     "compile_pipeline",
     "max_abs_error",

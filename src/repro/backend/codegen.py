@@ -1,244 +1,135 @@
-"""Stage -> Pallas kernel code generation.
+"""Plan -> Pallas kernel emission (the *emit* half of plan/emit).
 
-Each realized stage becomes one ``pallas_call`` whose (grid, BlockSpec)
-structure is derived from the stage's affine access maps, the same objects
-the CGRA unified-buffer extraction consumes (``core/extraction.py``):
+All placement decisions — view groups, fusion, scratch residency, grid
+reductions, block heights — are made by ``backend/plan.py``; this module is
+a pure emitter from a :class:`~repro.backend.plan.KernelGroup` to an
+executable ``pallas_call``:
 
-  * the **grid** is the stage's iteration domain: the outermost pure loop
-    dim, tiled into row panels of ``bh`` rows (``ubplan.plan_affine_stage``
-    picks ``bh`` so the double-buffered working set fits VMEM),
-  * each load's **access map** becomes a *view group* — an offset/strided
-    view of the producer buffer plus a ``BlockSpec`` index map that advances
-    the view in lock-step with the output panel.  Distinct row offsets of
-    the blocked dim get their own view: the row-shifted block streams of
-    ``kernels/stencil.py``, generated instead of hand-written (the paper's
-    shift-register chain of Fig. 8a lifted from pixels to rows),
-  * column taps and reduction offsets stay *inside* the kernel as static
-    slices of the delivered block (register-level shifts within a panel),
+  * each **view group** becomes one input stream: an offset/strided view of
+    a producer buffer plus a ``BlockSpec`` index map advancing in lock-step
+    with the output panel (and, under a grid reduction, with the reduction
+    chunk),
+  * each fused **non-output stage** is evaluated once per panel shift into
+    a VMEM scratch buffer (``scratch_shapes``); consumers tap the scratch
+    panels exactly as they would tap a delivered block — the intermediate
+    never round-trips HBM (the paper's coarse pipeline, Fig. 7),
+  * a **grid reduction** appends the chunked reduction dim to the grid and
+    accumulates into the revisited output block (``@pl.when`` init on chunk
+    0), preserving the reference interpreter's accumulation order
+    bit-for-bit in f32,
   * the value expression (``frontend.expr`` AST) is compiled to jnp ops;
-    reduction loops are fully unrolled in lexicographic order, matching the
-    accumulation order of the reference interpreter bit-for-bit in f32.
+    in-kernel reduction loops are unrolled in lexicographic order, matching
+    the reference interpreter's accumulation order.
 
-Loads whose access does not involve the blocked dim (weights, whole small
-buffers) are delivered as resident broadcast streams: their index map pins
-block (0, ..., 0) for every grid step.
-
-When a stage's accesses cannot be streamed along the outer dim (e.g. a
-reduction offset riding on a strided blocked axis in a way the view cannot
-absorb), the stage degrades to a single-block kernel (grid ``(1,)``) rather
-than failing: same kernel body, whole-buffer views.
+Column taps and reduction offsets stay *inside* the kernel as static slices
+of the delivered block or scratch panel (register-level shifts within a
+panel, the paper's Fig. 8a chain lifted from pixels to rows).
 """
 
 from __future__ import annotations
 
 import itertools
-import math
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.ubplan import KernelPlan, StreamPlan, VMEM_BYTES, plan_affine_stage
-from repro.frontend.expr import BinOp, Const, Expr, FuncRef, IterVal, Select, refs_in
+from repro.core.ubplan import KernelPlan, VMEM_BYTES
+from repro.frontend.expr import BinOp, Const, Expr, FuncRef, IterVal, Select
 from repro.frontend.lower import NormalizedStage
 
-from .access import LoadAccess, UnsupportedAccessError, decompose_stage
+from .access import UnsupportedAccessError, decompose_stage
+from .plan import (
+    KernelGroup,
+    RED_GRID_THRESHOLD,
+    StagePlan,
+    ViewGroup,
+    _build_kernel_group,
+    _stream_ok,
+)
 
 
 # ---------------------------------------------------------------------------
-# View groups: producer views + BlockSpec delivery
+# Per-stage emission context
 # ---------------------------------------------------------------------------
 
 
-@dataclass
-class ViewGroup:
-    """One HBM->VMEM stream: a (possibly shifted/strided) view of a producer
-    buffer, delivered in blocks by a BlockSpec."""
+class _StageCtx:
+    """Emission context for one stage inside a kernel."""
 
-    buffer: str
-    ndim: int
-    blocked_axis: Optional[int]       # producer axis tiled over the grid
-    k0: int = 0                       # blocked-axis view start (row shift)
-    stride0: int = 1                  # blocked-axis stride baked into the view
-    base: List[int] = field(default_factory=list)   # per-axis view start
-    span: List[int] = field(default_factory=list)   # per-axis view length
-
-    def view_slices(self, e0: int) -> Tuple[slice, ...]:
-        out = []
-        for j in range(self.ndim):
-            if j == self.blocked_axis:
-                out.append(
-                    slice(self.k0, self.k0 + self.stride0 * (e0 - 1) + 1, self.stride0)
-                )
-            else:
-                out.append(slice(self.base[j], self.base[j] + self.span[j]))
-        return tuple(out)
-
-    def block_shape(self, bh: int) -> Tuple[int, ...]:
-        return tuple(
-            bh if j == self.blocked_axis else self.span[j] for j in range(self.ndim)
-        )
-
-    def index_map(self) -> Callable:
-        blocked, nd = self.blocked_axis, self.ndim
-        if blocked is None:
-            return lambda i, nd=nd: (0,) * nd
-        return lambda i, blocked=blocked, nd=nd: tuple(
-            i if j == blocked else 0 for j in range(nd)
-        )
-
-
-def _stream_ok(accesses: Sequence[LoadAccess], d0: str) -> bool:
-    """Streamable iff no load indexes two producer axes by the outer dim."""
-    return all(
-        sum(1 for ax in la.axes if ax.pure_dim == d0) <= 1 for la in accesses
-    )
-
-
-def _plan_views(
-    nstage: NormalizedStage,
-    accesses: Sequence[LoadAccess],
-    buffer_shapes: Mapping[str, Tuple[int, ...]],
-    streamed: bool,
-):
-    """Group loads into view streams.
-
-    Returns ``(groups, bindings, blocked_axis_of)`` where ``bindings[k]``
-    maps a blocked-axis row offset (or None for whole delivery) to the group
-    index serving load ``k`` at that offset.
-    """
-    d0 = nstage.pure_dims[0]
-    e0 = nstage.pure_extents[0]
-    red_ext = dict(zip(nstage.red_dims, nstage.red_extents))
-
-    groups: List[ViewGroup] = []
-    by_key: Dict[tuple, int] = {}
-    bindings: List[Dict[Optional[int], int]] = []
-    blocked_axis_of: List[Optional[int]] = []
-
-    def group_for(key, buffer, ndim, blocked, k0, stride0) -> int:
-        if key not in by_key:
-            by_key[key] = len(groups)
-            groups.append(
-                ViewGroup(
-                    buffer, ndim, blocked, k0, stride0,
-                    base=[None] * ndim, span=[0] * ndim,  # type: ignore[list-item]
-                )
-            )
-        return by_key[key]
-
-    for la in accesses:
-        tags = [ax.pure_dim for ax in la.axes if ax.pure_dim is not None]
-        if len(tags) != len(set(tags)):
-            raise UnsupportedAccessError(
-                f"load of {la.buffer} indexes one pure dim on two axes"
-            )
-        j0: Optional[int] = None
-        if streamed:
-            for j, ax in enumerate(la.axes):
-                if ax.pure_dim == d0:
-                    j0 = j
-        blocked_axis_of.append(j0)
-        binding: Dict[Optional[int], int] = {}
-        ndim = len(la.axes)
-        if j0 is not None:
-            stride0 = la.axes[j0].stride
-            for k0 in la.axes[j0].offsets(red_ext):
-                key = (la.buffer, j0, stride0, k0)
-                binding[k0] = group_for(key, la.buffer, ndim, j0, k0, stride0)
-        else:
-            key = (la.buffer, None)
-            binding[None] = group_for(key, la.buffer, ndim, None, 0, 1)
-        bindings.append(binding)
-
-        # hull the non-blocked axes of every group this load touches
-        for gidx in set(binding.values()):
-            g = groups[gidx]
-            for j, ax in enumerate(la.axes):
-                if j == g.blocked_axis:
-                    g.span[j] = e0
-                    continue
-                lo, hi = ax.offset_range(red_ext)
-                top = hi
-                if ax.pure_dim is not None:
-                    top = hi + ax.stride * (nstage.extent(ax.pure_dim) - 1)
-                if g.base[j] is None:
-                    g.base[j], g.span[j] = lo, top - lo + 1
-                else:
-                    new_base = min(g.base[j], lo)
-                    new_top = max(g.base[j] + g.span[j] - 1, top)
-                    g.base[j], g.span[j] = new_base, new_top - new_base + 1
-
-    # bounds inference guarantees accesses stay inside producer boxes; check
-    # anyway so a codegen bug fails loudly instead of silently mis-slicing
-    for g in groups:
-        shape = buffer_shapes[g.buffer]
-        if g.blocked_axis is not None:
-            g.base[g.blocked_axis] = g.k0
-        for j in range(g.ndim):
-            top = (
-                g.k0 + g.stride0 * (e0 - 1)
-                if j == g.blocked_axis
-                else g.base[j] + g.span[j] - 1
-            )
-            if g.base[j] < 0 or top >= shape[j]:
-                raise UnsupportedAccessError(
-                    f"view of {g.buffer} axis {j} [{g.base[j]}, {top}] exceeds "
-                    f"extent {shape[j]}"
-                )
-    return groups, bindings, blocked_axis_of
-
-
-# ---------------------------------------------------------------------------
-# Expression compilation (frontend.expr AST -> jnp)
-# ---------------------------------------------------------------------------
-
-
-class _KernelCtx:
-    def __init__(self, nstage, accesses, groups, bindings, blocked_axis_of,
-                 streamed, bh):
-        self.nstage = nstage
-        self.accesses = accesses
-        self.groups = groups
-        self.bindings = bindings
-        self.blocked_axis_of = blocked_axis_of
-        self.streamed = streamed
-        self.bh = bh
-        self.d0 = nstage.pure_dims[0]
-        self.pure_pos = {d: i for i, d in enumerate(nstage.pure_dims)}
-        self.block_shape = (bh,) + tuple(nstage.pure_extents[1:])
-        self.lower = dict(nstage.dim_lower)
+    def __init__(self, kg: KernelGroup, sp: StagePlan):
+        self.kg = kg
+        self.sp = sp
+        self.nstage = sp.nstage
+        self.bh = kg.bh
+        self.streamed = kg.streamed and sp.streamed
+        self.d0 = sp.d0
+        self.pure_pos = {d: i for i, d in enumerate(sp.nstage.pure_dims)}
+        self.block_shape = sp.panel_shape(kg.bh)
+        self.lower = dict(sp.nstage.dim_lower)
 
     def extent(self, dim: str) -> int:
-        if dim == self.d0:
-            return self.bh if self.streamed else self.nstage.pure_extents[0]
+        if dim == self.d0 and self.streamed:
+            return self.bh
         return self.nstage.extent(dim)
 
+    def red_ranges(self) -> List[range]:
+        rg = self.kg.red_grid
+        out = []
+        for rd, ex in zip(self.nstage.red_dims, self.nstage.red_extents):
+            out.append(range(rg.chunk if rg is not None and rd == rg.dim else ex))
+        return out
 
-def _tap(ctx: _KernelCtx, refs, load_idx: int, rho: Mapping[str, int]):
-    """Extract one load's value lattice from its group's delivered block and
-    align it with the output block (transpose + broadcast axes)."""
-    la = ctx.accesses[load_idx]
-    j0 = ctx.blocked_axis_of[load_idx]
-    binding = ctx.bindings[load_idx]
-    gidx = binding[la.axes[j0].offset_at(rho)] if j0 is not None else binding[None]
-    g = ctx.groups[gidx]
-    block = refs[gidx][...]
+
+def _tap(
+    ctx: _StageCtx,
+    refs,
+    scratch: Mapping[Tuple[str, int], object],
+    load_idx: int,
+    rho: Mapping[str, int],
+    shift: int,
+):
+    """Extract one load's value lattice — from a delivered view block or an
+    in-kernel scratch panel — and align it with the stage's output block
+    (transpose + broadcast axes)."""
+    sp = ctx.sp
+    la = sp.accesses[load_idx]
     idx: List[object] = []
     tags: List[str] = []
-    for j, ax in enumerate(la.axes):
-        if j0 is not None and j == j0:
-            idx.append(slice(None))                 # full panel: the blocked dim
-            tags.append(ctx.d0)
-        elif ax.pure_dim is not None:
-            ep = ctx.nstage.extent(ax.pure_dim) if ax.pure_dim != ctx.d0 else ctx.extent(ctx.d0)
-            start = ax.offset_at(rho) - g.base[j]
-            idx.append(slice(start, start + ax.stride * (ep - 1) + 1, ax.stride))
-            tags.append(ax.pure_dim)
-        else:
-            idx.append(ax.offset_at(rho) - g.base[j])   # squeezed static index
+    if sp.load_kind[load_idx] == "scratch":
+        pname = sp.scratch_producer[load_idx]
+        slot = la.axes[0].offset_at(rho) + shift
+        block = scratch[(pname, slot)][...]
+        for j, ax in enumerate(la.axes):
+            if j == 0:
+                idx.append(slice(None))             # full panel: the blocked dim
+                tags.append(ctx.d0)
+            elif ax.pure_dim is not None:
+                ep = ctx.extent(ax.pure_dim)
+                start = ax.offset_at(rho)           # scratch axes are zero-based
+                idx.append(slice(start, start + ax.stride * (ep - 1) + 1, ax.stride))
+                tags.append(ax.pure_dim)
+            else:
+                idx.append(ax.offset_at(rho))       # squeezed static index
+    else:
+        j0 = sp.blocked_axis_of[load_idx]
+        key = (shift, la.axes[j0].offset_at(rho)) if j0 is not None else (shift, None)
+        g = ctx.kg.groups[sp.view_binding[load_idx][key]]
+        block = refs[sp.view_binding[load_idx][key]][...]
+        for j, ax in enumerate(la.axes):
+            if j0 is not None and j == j0:
+                idx.append(slice(None))             # full panel: the blocked dim
+                tags.append(ctx.d0)
+            elif ax.pure_dim is not None:
+                ep = ctx.extent(ax.pure_dim)
+                start = ax.offset_at(rho) - g.base[j]
+                idx.append(slice(start, start + ax.stride * (ep - 1) + 1, ax.stride))
+                tags.append(ax.pure_dim)
+            else:
+                idx.append(ax.offset_at(rho) - g.base[j])
     tap = block[tuple(idx)]
     order = sorted(range(len(tags)), key=lambda t: ctx.pure_pos[tags[t]])
     if order != list(range(len(tags))):
@@ -250,25 +141,37 @@ def _tap(ctx: _KernelCtx, refs, load_idx: int, rho: Mapping[str, int]):
     return tap.reshape(newshape)
 
 
-def _emit(e: Expr, ctx: _KernelCtx, refs, rho: Mapping[str, int], counter: List[int]):
+def _emit(
+    e: Expr,
+    ctx: _StageCtx,
+    refs,
+    scratch,
+    rho: Mapping[str, int],
+    shift: int,
+    counter: List[int],
+):
     if isinstance(e, Const):
         return float(e.value)
     if isinstance(e, IterVal):
         lo = ctx.lower.get(e.name, 0)
         if e.name in ctx.nstage.red_dims:
+            rg = ctx.kg.red_grid
+            if rg is not None and e.name == rg.dim:
+                k = pl.program_id(len(ctx.kg.grid) - 1)
+                return (k * rg.chunk + rho[e.name] + lo).astype(jnp.float32)
             return float(rho[e.name] + lo)
         ax = ctx.pure_pos[e.name]
         iota = jax.lax.broadcasted_iota(jnp.int32, ctx.block_shape, ax)
         if ctx.streamed and ax == 0:
-            iota = iota + pl.program_id(0) * ctx.bh
+            iota = iota + pl.program_id(0) * ctx.bh + shift
         return (iota + lo).astype(jnp.float32)
     if isinstance(e, FuncRef):
         k = counter[0]
         counter[0] += 1
-        return _tap(ctx, refs, k, rho)
+        return _tap(ctx, refs, scratch, k, rho, shift)
     if isinstance(e, BinOp):
-        a = _emit(e.a, ctx, refs, rho, counter)
-        b = _emit(e.b, ctx, refs, rho, counter)
+        a = _emit(e.a, ctx, refs, scratch, rho, shift, counter)
+        b = _emit(e.b, ctx, refs, scratch, rho, shift, counter)
         if e.op == "add":
             return a + b
         if e.op == "sub":
@@ -293,57 +196,133 @@ def _emit(e: Expr, ctx: _KernelCtx, refs, rho: Mapping[str, int], counter: List[
             return jnp.where(jnp.asarray(a) > b, 1.0, 0.0)
         raise UnsupportedAccessError(f"binop {e.op} not supported by codegen")
     if isinstance(e, Select):
-        c = _emit(e.cond, ctx, refs, rho, counter)
-        t = _emit(e.if_true, ctx, refs, rho, counter)
-        f = _emit(e.if_false, ctx, refs, rho, counter)
+        c = _emit(e.cond, ctx, refs, scratch, rho, shift, counter)
+        t = _emit(e.if_true, ctx, refs, scratch, rho, shift, counter)
+        f = _emit(e.if_false, ctx, refs, scratch, rho, shift, counter)
         return jnp.where(jnp.asarray(c) != 0, t, f)
     raise UnsupportedAccessError(f"cannot compile {e!r}")
 
 
+def _stage_panel(ctx: _StageCtx, refs, scratch, shift: int):
+    """One stage's panel value at ``shift`` (in-kernel reductions unrolled)."""
+    ns = ctx.nstage
+    if ns.red_dims:
+        acc = _emit(ns.init, ctx, refs, scratch, {}, shift, [0])
+        acc = jnp.broadcast_to(
+            jnp.asarray(acc, jnp.float32), ctx.block_shape
+        ).astype(jnp.float32)
+        for combo in itertools.product(*ctx.red_ranges()):
+            rho = dict(zip(ns.red_dims, combo))
+            acc = acc + _emit(ns.value, ctx, refs, scratch, rho, shift, [0])
+    else:
+        acc = _emit(ns.value, ctx, refs, scratch, {}, shift, [0])
+    return jnp.broadcast_to(jnp.asarray(acc, jnp.float32), ctx.block_shape)
+
+
 # ---------------------------------------------------------------------------
-# Stage compilation
+# Kernel emission
 # ---------------------------------------------------------------------------
 
 
 @dataclass
-class CompiledStage:
-    """An executable Pallas kernel for one stage, plus its UB-plan metadata."""
+class CompiledKernel:
+    """An executable Pallas kernel for one plan group (1..N fused stages)."""
 
-    name: str
-    nstage: NormalizedStage
-    accesses: List[LoadAccess]
-    groups: List[ViewGroup]
-    bindings: List[Dict[Optional[int], int]]
-    blocked_axis_of: List[Optional[int]]
-    streamed: bool
-    bh: int
-    grid: Tuple[int, ...]
-    block: Tuple[int, ...]
-    plan: KernelPlan
+    name: str                         # output stage / buffer written
+    kg: KernelGroup
+    nstage: NormalizedStage           # output stage
+    plan: KernelPlan                  # unified-buffer introspection
     _call: Callable
 
     def __call__(self, buffers: Mapping[str, jax.Array]) -> jax.Array:
         return self._call(buffers)
 
+    # -- introspection (plan passthrough) -------------------------------------
+    @property
+    def stage_names(self) -> List[str]:
+        return self.kg.stage_names
+
+    @property
+    def fused(self) -> bool:
+        return self.kg.fused
+
+    @property
+    def groups(self) -> List[ViewGroup]:
+        return self.kg.groups
+
+    @property
+    def bh(self) -> int:
+        return self.kg.bh
+
+    @property
+    def grid(self) -> Tuple[int, ...]:
+        return self.kg.grid
+
+    @property
+    def streamed(self) -> bool:
+        return self.kg.streamed
+
+    @property
+    def red_grid(self):
+        return self.kg.red_grid
+
+    @property
+    def block(self) -> Tuple[int, ...]:
+        return self.kg.output.panel_shape(self.kg.bh)
+
+    @property
+    def accesses(self):
+        return self.kg.output.accesses
+
+    @property
+    def blocked_axis_of(self):
+        return self.kg.output.blocked_axis_of
+
+    @property
+    def bindings(self) -> List[Dict[Optional[int], int]]:
+        """Pre-refactor binding view (offset -> group) of the output stage."""
+        return [
+            {off: g for (s, off), g in vb.items() if s == 0}
+            for vb in self.kg.output.view_binding
+        ]
+
     # -- delivery arithmetic (mirrors the kernel; used by property tests) -----
+    def _group_of(self, load_idx: int, rho: Mapping[str, int]) -> ViewGroup:
+        sp = self.kg.output
+        la = sp.accesses[load_idx]
+        j0 = sp.blocked_axis_of[load_idx]
+        key = (0, la.axes[j0].offset_at(rho)) if j0 is not None else (0, None)
+        return self.kg.groups[sp.view_binding[load_idx][key]]
+
     def element_for(self, load_idx: int, point: Mapping[str, int]) -> Tuple[int, ...]:
         """Producer element the generated kernel reads for load ``load_idx``
         at zero-based iteration ``point``, reconstructed by composing the
         stored delivery objects exactly as the runtime does: in-kernel tap
         coordinate -> BlockSpec block offset -> view slice.  A bookkeeping
         bug in the group binding, ``k0``/stride, block shape, or index map
-        shows up as a mismatch against the stage's access map."""
-        la = self.accesses[load_idx]
-        j0 = self.blocked_axis_of[load_idx]
-        d0 = self.nstage.pure_dims[0]
-        rho = {r: point[r] for r in self.nstage.red_dims}
-        binding = self.bindings[load_idx]
-        gidx = binding[la.axes[j0].offset_at(rho)] if j0 is not None else binding[None]
-        g = self.groups[gidx]
-        slices = g.view_slices(self.nstage.pure_extents[0])
+        shows up as a mismatch against the stage's access map.  (Fused
+        kernels expose only their output stage here.)"""
+        if self.kg.fused:
+            raise NotImplementedError("element_for covers unfused kernels only")
+        sp = self.kg.output
+        ns = self.nstage
+        la = sp.accesses[load_idx]
+        d0 = ns.pure_dims[0]
+        rg = self.kg.red_grid
+        rho = {r: point[r] for r in ns.red_dims}
+        if rg is not None:
+            rho = dict(rho)
+            rho[rg.dim] = point[rg.dim] % rg.chunk
+        g = self._group_of(load_idx, rho)
+        slices = g.view_slices(self.kg.e0)
         block_shape = g.block_shape(self.bh)
-        grid_step = point[d0] // self.bh if g.blocked_axis is not None else 0
-        block_idx = g.index_map()(grid_step)
+        step0 = point[d0] // self.bh if g.blocked_axis is not None else 0
+        stepk = point[rg.dim] // rg.chunk if g.red_axis is not None else 0
+        block_idx = (
+            g.index_map(len(self.grid))(step0, stepk)
+            if len(self.grid) > 1
+            else g.index_map(1)(step0)
+        )
         elem = []
         for j, ax in enumerate(la.axes):
             if j == g.blocked_axis:
@@ -361,15 +340,108 @@ class CompiledStage:
     ) -> Tuple[int, int, int]:
         """(lo, hi, step) of producer elements the BlockSpec delivers on
         ``axis_j`` at ``grid_step`` for this load."""
-        la = self.accesses[load_idx]
-        j0 = self.blocked_axis_of[load_idx]
-        binding = self.bindings[load_idx]
-        gidx = binding[la.axes[j0].offset_at(rho)] if j0 is not None else binding[None]
-        g = self.groups[gidx]
+        if self.kg.fused:
+            raise NotImplementedError("delivered_interval covers unfused kernels only")
+        rg = self.kg.red_grid
+        rho_l = dict(rho)
+        if rg is not None and rg.dim in rho_l:
+            rho_l[rg.dim] = rho[rg.dim] % rg.chunk
+        g = self._group_of(load_idx, rho_l)
         if axis_j == g.blocked_axis:
             lo = g.k0 + g.stride0 * grid_step * self.bh
             return lo, lo + g.stride0 * (self.bh - 1), g.stride0
+        if axis_j == g.red_axis:
+            lo = (rho[rg.dim] // rg.chunk) * rg.chunk
+            return lo, lo + rg.chunk - 1, 1
         return g.base[axis_j], g.base[axis_j] + g.span[axis_j] - 1, 1
+
+
+def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
+    """Emit one executable ``pallas_call`` from a planned kernel group.
+    All shape information (and its bounds validation) lives in the plan."""
+    ctxs = {sp.name: _StageCtx(kg, sp) for sp in kg.stages}
+    scratch_entries = kg.scratch_entries()
+    n_groups = len(kg.groups)
+    n_grid = len(kg.grid)
+    out_sp = kg.output
+    out_ctx = ctxs[out_sp.name]
+    rg = kg.red_grid
+
+    def kernel(*args):
+        refs = args[:n_groups]
+        out_ref = args[n_groups]
+        scratch = {
+            (sp.name, s): ref
+            for (sp, s), ref in zip(scratch_entries, args[n_groups + 1:])
+        }
+        # fused intermediates: one panel per demanded shift, topo order
+        for sp, s in scratch_entries:
+            ctx = ctxs[sp.name]
+            scratch[(sp.name, s)][...] = _stage_panel(ctx, refs, scratch, s)
+        ns = out_sp.nstage
+        if rg is not None:
+            # grid-level reduction: accumulate into the revisited output
+            # block, element update order identical to the unrolled path
+            k = pl.program_id(n_grid - 1)
+            init = _emit(ns.init, out_ctx, refs, scratch, {}, 0, [0])
+
+            @pl.when(k == 0)
+            def _init():
+                out_ref[...] = jnp.broadcast_to(
+                    jnp.asarray(init, jnp.float32), out_ctx.block_shape
+                ).astype(out_ref.dtype)
+
+            for combo in itertools.product(*out_ctx.red_ranges()):
+                rho = dict(zip(ns.red_dims, combo))
+                term = _emit(ns.value, out_ctx, refs, scratch, rho, 0, [0])
+                out_ref[...] += jnp.broadcast_to(
+                    jnp.asarray(term, jnp.float32), out_ctx.block_shape
+                )
+        else:
+            out_ref[...] = _stage_panel(out_ctx, refs, scratch, 0).astype(
+                out_ref.dtype
+            )
+
+    in_specs = [
+        pl.BlockSpec(g.block_shape(kg.bh), g.index_map(n_grid)) for g in kg.groups
+    ]
+    out_nd = len(out_ctx.block_shape)
+    if n_grid == 1:
+        out_index = lambda i, nd=out_nd: (i,) + (0,) * (nd - 1)
+    else:
+        out_index = lambda i, k, nd=out_nd: (i,) + (0,) * (nd - 1)
+    out_spec = pl.BlockSpec(out_ctx.block_shape, out_index)
+    out_shape = jax.ShapeDtypeStruct(tuple(out_sp.nstage.pure_extents), jnp.float32)
+    call_kwargs: Dict[str, object] = {}
+    if scratch_entries:
+        call_kwargs["scratch_shapes"] = [
+            pltpu.VMEM(sp.panel_shape(kg.bh), jnp.float32)
+            for sp, _ in scratch_entries
+        ]
+    e0 = kg.e0
+
+    def call(buffers: Mapping[str, jax.Array]) -> jax.Array:
+        views = [
+            jnp.asarray(buffers[g.buffer], jnp.float32)[g.view_slices(e0)]
+            for g in kg.groups
+        ]
+        return pl.pallas_call(
+            kernel,
+            grid=kg.grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+            **call_kwargs,
+        )(*views)
+
+    return CompiledKernel(
+        name=out_sp.name,
+        kg=kg,
+        nstage=out_sp.nstage,
+        plan=kg.ub_plan(),
+        _call=call,
+    )
 
 
 def compile_stage(
@@ -379,112 +451,38 @@ def compile_stage(
     interpret: bool = True,
     block_h: Optional[int] = None,
     vmem_budget: int = VMEM_BYTES,
-) -> CompiledStage:
-    """Compile one normalized stage to a Pallas kernel."""
+    grid_reduction: bool = False,
+    red_grid_threshold: int = RED_GRID_THRESHOLD,
+    cost_model: str = "scheduler",
+) -> CompiledKernel:
+    """Compile one normalized stage to a Pallas kernel (plan + emit)."""
+    from repro.frontend.expr import refs_in
+
     if nstage.init is not None and refs_in(nstage.init):
         raise UnsupportedAccessError(
             f"{nstage.name}: reduction init with buffer reads is not supported"
         )
     accesses = decompose_stage(nstage)
-    d0, e0 = nstage.pure_dims[0], nstage.pure_extents[0]
-    streamed = _stream_ok(accesses, d0)
-    groups, bindings, blocked_axis_of = _plan_views(
-        nstage, accesses, buffer_shapes, streamed
+    streamed = _stream_ok(accesses, nstage.pure_dims[0])
+    kg = _build_kernel_group(
+        [(nstage, accesses, streamed)],
+        buffer_shapes,
+        block_h=block_h,
+        vmem_budget=vmem_budget,
+        cost_model=cost_model,
+        grid_reduction=grid_reduction,
+        red_grid_threshold=red_grid_threshold,
     )
-
-    elem_bytes = 4  # f32 streams
-    inner = math.prod(nstage.pure_extents[1:]) if len(nstage.pure_extents) > 1 else 1
-    bytes_per_row = inner * elem_bytes
-    fixed_bytes = 0
-    for g in groups:
-        sz = elem_bytes * math.prod(
-            g.span[j] for j in range(g.ndim) if j != g.blocked_axis
-        )
-        if g.blocked_axis is not None:
-            bytes_per_row += sz          # scales with the block height
-        else:
-            fixed_bytes += sz            # resident broadcast view
-
-    if not streamed:
-        bh = e0
-    elif block_h is not None:
-        if e0 % block_h:
-            raise ValueError(f"{nstage.name}: block_h {block_h} must divide {e0}")
-        bh = block_h
-    else:
-        bh = plan_affine_stage(e0, bytes_per_row, fixed_bytes, vmem_budget=vmem_budget)
-
-    grid = (e0 // bh,)
-    ctx = _KernelCtx(
-        nstage, accesses, groups, bindings, blocked_axis_of, streamed, bh
-    )
-    red_ranges = [range(ex) for ex in nstage.red_extents]
-
-    def kernel(*refs_and_out):
-        refs, out_ref = refs_and_out[:-1], refs_and_out[-1]
-        if nstage.red_dims:
-            acc = _emit(nstage.init, ctx, refs, {}, [0])
-            acc = jnp.broadcast_to(
-                jnp.asarray(acc, jnp.float32), ctx.block_shape
-            ).astype(jnp.float32)
-            for combo in itertools.product(*red_ranges):
-                rho = dict(zip(nstage.red_dims, combo))
-                acc = acc + _emit(nstage.value, ctx, refs, rho, [0])
-        else:
-            acc = _emit(nstage.value, ctx, refs, {}, [0])
-        out_ref[...] = jnp.broadcast_to(
-            jnp.asarray(acc, jnp.float32), ctx.block_shape
-        ).astype(out_ref.dtype)
-
-    in_specs = [pl.BlockSpec(g.block_shape(bh), g.index_map()) for g in groups]
-    out_spec = pl.BlockSpec(ctx.block_shape, lambda i: (i,) + (0,) * (len(ctx.block_shape) - 1))
-    out_shape = jax.ShapeDtypeStruct(tuple(nstage.pure_extents), jnp.float32)
-
-    def call(buffers: Mapping[str, jax.Array]) -> jax.Array:
-        views = [
-            jnp.asarray(buffers[g.buffer], jnp.float32)[g.view_slices(e0)]
-            for g in groups
-        ]
-        return pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=in_specs,
-            out_specs=out_spec,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(*views)
-
-    streams = [
-        StreamPlan(
-            f"{g.buffer}[{k}]",
-            g.block_shape(bh),
-            (0,) if g.blocked_axis is not None else (),
-            elem_bytes * math.prod(g.block_shape(bh)),
-            double_buffered=g.blocked_axis is not None,
-        )
-        for k, g in enumerate(groups)
-    ] + [
-        StreamPlan("out", ctx.block_shape, (0,), elem_bytes * math.prod(ctx.block_shape))
-    ]
-    plan = KernelPlan(
-        grid, streams,
-        {"bh": bh, "streamed": streamed, "stage": nstage.name},
-    )
-
-    return CompiledStage(
-        name=nstage.name,
-        nstage=nstage,
-        accesses=accesses,
-        groups=groups,
-        bindings=bindings,
-        blocked_axis_of=blocked_axis_of,
-        streamed=streamed,
-        bh=bh,
-        grid=grid,
-        block=ctx.block_shape,
-        plan=plan,
-        _call=call,
-    )
+    return emit_kernel(kg, interpret=interpret)
 
 
-__all__ = ["ViewGroup", "CompiledStage", "compile_stage"]
+# pre-refactor name: a single-stage CompiledKernel is the old CompiledStage
+CompiledStage = CompiledKernel
+
+__all__ = [
+    "CompiledKernel",
+    "CompiledStage",
+    "ViewGroup",
+    "compile_stage",
+    "emit_kernel",
+]

@@ -1,11 +1,17 @@
-"""End-to-end backend demo: compile paper apps to Pallas and validate.
+"""End-to-end backend demo: plan + compile paper apps to Pallas and validate.
 
     PYTHONPATH=src python -m repro.backend.demo [--apps a,b,c] [--smoke]
+                                                [--no-fuse]
 
-For each app: lower -> ubplan -> generated Pallas kernels (interpret mode on
-CPU), run on random inputs, and compare every realized buffer against the
-von-Neumann reference interpreter.  Exits non-zero on any mismatch, so CI
-can use it as the backend smoke test.
+For each app: lower -> plan (fusion / grid reductions / scheduler block
+heights) -> generated Pallas kernels (interpret mode on CPU), run on random
+inputs, and compare every materialized buffer against the von-Neumann
+reference interpreter.  Also asserts the *plan shape*: multi-stage paper
+apps must stay fused (fewer ``pallas_call``s than stages, intermediates in
+VMEM scratch) and the large-K matmul must carry its reduction dim in the
+grid — a regression from fused back to per-stage compilation fails the demo
+even if the numerics still match.  Exits non-zero on any mismatch, so CI
+uses it as the backend smoke test.
 """
 
 from __future__ import annotations
@@ -13,7 +19,7 @@ from __future__ import annotations
 import argparse
 import sys
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,13 +36,30 @@ DEMO_APPS: List[Tuple[str, Dict]] = [
     ("resnet", {"img": 8, "cin": 4, "cout": 4}),
     ("mobilenet", {"img": 8, "cin": 4, "cout": 4}),
     ("matmul", {"m": 32, "n": 32, "k": 16}),
+    ("matmul_bigk", {"m": 16, "n": 16, "k": 2048}),
 ]
 
-SMOKE_APPS = ["gaussian", "unsharp", "matmul"]
+SMOKE_APPS = ["gaussian", "unsharp", "matmul", "matmul_bigk"]
+
+# plan-shape expectations with fusion on: app -> (stages, kernels).  These
+# fail the demo (and CI) if the planner regresses to per-stage compilation.
+EXPECTED_PLANS: Dict[str, Tuple[int, int]] = {
+    "harris": (6, 1),
+    "unsharp": (4, 1),
+    "camera": (5, 2),
+    "mobilenet": (2, 1),
+}
 
 
-def run_demo(app_names=None, smoke: bool = False) -> List[Dict]:
+def _make(name: str, kw: Dict):
     from repro.apps.paper_apps import make_app
+
+    if name == "matmul_bigk":
+        return make_app("matmul", **kw)
+    return make_app(name, **kw)
+
+
+def run_demo(app_names=None, smoke: bool = False, fuse: bool = True) -> List[Dict]:
     from repro.backend import compile_pipeline, max_abs_error
 
     wanted = set(app_names) if app_names else None
@@ -53,9 +76,9 @@ def run_demo(app_names=None, smoke: bool = False) -> List[Dict]:
     for name, kw in DEMO_APPS:
         if wanted is not None and name not in wanted:
             continue
-        app = make_app(name, **kw)
+        app = _make(name, kw)
         t0 = time.perf_counter()
-        pp = compile_pipeline(app.pipeline)
+        pp = compile_pipeline(app.pipeline, fuse=fuse)
         compile_us = (time.perf_counter() - t0) * 1e6
         rng = np.random.default_rng(0)
         inputs = {
@@ -66,19 +89,41 @@ def run_demo(app_names=None, smoke: bool = False) -> List[Dict]:
         got = pp.run(inputs)
         got[pp.pipeline.output].block_until_ready()
         run_us = (time.perf_counter() - t0) * 1e6
-        errs = max_abs_error(pp, inputs, got=got)
-        err = max(errs.values())
+
+        plan_notes: List[str] = []
+        if name == "matmul_bigk":
+            # reference-interpreter tables are too slow at K=2048; the dense
+            # f64 matmul is the same golden value
+            a, b = inputs["A"].astype(np.float64), inputs["B"].astype(np.float64)
+            err = float(np.max(np.abs(np.asarray(got[pp.pipeline.output]) - a @ b)))
+            ck = pp.kernels[0]
+            if fuse and (ck.red_grid is None or len(ck.grid) != 2):
+                plan_notes.append("expected grid-level reduction for K=2048")
+        else:
+            errs = max_abs_error(pp, inputs, got=got)
+            err = max(errs.values())
+        if fuse and name in EXPECTED_PLANS:
+            want_stages, want_kernels = EXPECTED_PLANS[name]
+            if (pp.plan.n_stages, pp.plan.n_kernels) != (want_stages, want_kernels):
+                plan_notes.append(
+                    f"plan regressed: expected {want_stages} stages in "
+                    f"{want_kernels} kernels, got {pp.plan.n_stages} in "
+                    f"{pp.plan.n_kernels}"
+                )
         rows.append(
             {
                 "app": name,
-                "stages": len(pp.stages),
-                "grids": {cs.name: list(cs.grid) for cs in pp.stages},
-                "streams": sum(len(cs.groups) + 1 for cs in pp.stages),
-                "vmem_kib": sum(cs.plan.vmem_bytes for cs in pp.stages) // 1024,
+                "stages": pp.plan.n_stages,
+                "kernels": pp.plan.n_kernels,
+                "grids": {ck.name: list(ck.grid) for ck in pp.kernels},
+                "streams": sum(len(ck.groups) + 1 for ck in pp.kernels),
+                "vmem_kib": sum(ck.plan.vmem_bytes for ck in pp.kernels) // 1024,
+                "hbm_kib": pp.plan.hbm_bytes() // 1024,
                 "compile_us": round(compile_us),
                 "run_us_interp": round(run_us),
                 "max_err": err,
-                "ok": err <= TOL,
+                "plan_notes": plan_notes,
+                "ok": err <= TOL and not plan_notes,
             }
         )
     return rows
@@ -87,22 +132,32 @@ def run_demo(app_names=None, smoke: bool = False) -> List[Dict]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--apps", help="comma-separated app subset")
-    ap.add_argument("--smoke", action="store_true", help="fast 3-app subset")
+    ap.add_argument("--smoke", action="store_true", help="fast 4-app subset")
+    ap.add_argument(
+        "--no-fuse", action="store_true",
+        help="per-stage compilation (skips the plan-shape assertions)",
+    )
     args = ap.parse_args(argv)
     names = args.apps.split(",") if args.apps else None
 
-    rows = run_demo(names, smoke=args.smoke)
-    print("app,stages,streams,vmem_kib,compile_us,run_us_interp,max_err,status")
+    rows = run_demo(names, smoke=args.smoke, fuse=not args.no_fuse)
+    print(
+        "app,stages,kernels,streams,vmem_kib,hbm_kib,compile_us,"
+        "run_us_interp,max_err,status"
+    )
     ok = True
     for r in rows:
         status = "OK" if r["ok"] else "MISMATCH"
         ok = ok and r["ok"]
         print(
-            f"{r['app']},{r['stages']},{r['streams']},{r['vmem_kib']},"
-            f"{r['compile_us']},{r['run_us_interp']},{r['max_err']:.2e},{status}"
+            f"{r['app']},{r['stages']},{r['kernels']},{r['streams']},"
+            f"{r['vmem_kib']},{r['hbm_kib']},{r['compile_us']},"
+            f"{r['run_us_interp']},{r['max_err']:.2e},{status}"
         )
+        for note in r["plan_notes"]:
+            print(f"#   {r['app']}: {note}", file=sys.stderr)
     if not ok:
-        print("backend demo: MISMATCH against reference interpreter", file=sys.stderr)
+        print("backend demo: MISMATCH against reference/plan", file=sys.stderr)
         return 1
     return 0
 

@@ -1,0 +1,813 @@
+"""Pipeline planning: the *plan* half of the backend's plan/emit split.
+
+``build_pipeline_plan`` turns a lowered pipeline into a :class:`PipelinePlan`
+— an explicit mid-level memory plan between the Stage IR and the Pallas
+target, in the spirit of the heterogeneous-Halide and memory-template flows
+(see ISSUE/PAPERS): every decision about *where data lives and how it moves*
+is made here, symbolically, before any kernel is traced.
+
+A plan is a list of :class:`KernelGroup` records, each one future
+``pallas_call``:
+
+  * **views** (:class:`ViewGroup`) are the HBM->VMEM push streams: a
+    (shifted/strided) window of a producer buffer delivered block-by-block
+    by a BlockSpec,
+  * **stages** (:class:`StagePlan`) are the statements fused into the
+    kernel; every non-output stage's panels live in VMEM scratch
+    (``pl.pallas_call`` ``scratch_shapes``) instead of round-tripping HBM —
+    the paper's coarse producer->consumer pipeline (Fig. 7),
+  * an optional :class:`RedGrid` puts a large reduction dim into the grid
+    with accumulation across grid steps (the ``kernels/matmul.py`` K-loop
+    pattern, generated), replacing full in-kernel unrolling.
+
+Planning passes, in order:
+
+  1. per-stage access decomposition (``access.py``) + streamability,
+  2. **fusion** — greedy reverse-topological grouping: a producer joins its
+     consumers' kernel when every consumer is in the same group, the
+     consumers read it with stride 1 along the blocked dim, and the
+     producer's live range (rows demanded per consumer panel, from the
+     affine access maps) fits the VMEM budget,
+  3. **grid reduction** — single-stage kernels whose leading reduction dim
+     is large get it chunked into the grid,
+  4. **block-height selection** — ``core/ubplan.plan_affine_stage`` with the
+     scheduler cost hook (``scheduler_cost``) pricing candidate panels with
+     ``core/scheduling.raster_cycles``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from repro.core.scheduling import raster_cycles
+from repro.core.ubplan import (
+    KernelPlan,
+    StreamPlan,
+    VMEM_BYTES,
+    align_tpu_shape,
+    plan_affine_stage,
+)
+from repro.frontend.expr import expr_depth, refs_in
+from repro.frontend.lower import NormalizedStage, Pipeline, normalize_pipeline
+
+from .access import LoadAccess, UnsupportedAccessError, decompose_stage
+
+ELEM_BYTES = 4                      # all generated streams are f32
+
+# cycle-model constants for the scheduler cost hook: HBM push bandwidth in
+# bytes/cycle and the fixed per-grid-step cost (DMA issue + pipeline drain)
+HBM_BYTES_PER_CYCLE = 64
+STEP_OVERHEAD_CYCLES = 32
+
+# grid-reduction defaults: reduction extents at or above the threshold are
+# chunked into the grid; each chunk is at most MAX_RED_CHUNK in-kernel steps
+RED_GRID_THRESHOLD = 256
+MAX_RED_CHUNK = 128
+
+
+class FusionInfeasible(Exception):
+    """A candidate fusion group violates a structural or VMEM constraint."""
+
+
+# ---------------------------------------------------------------------------
+# View groups: planned HBM->VMEM streams
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ViewGroup:
+    """One HBM->VMEM stream: a (possibly shifted/strided) view of a producer
+    buffer, delivered in blocks by a BlockSpec.
+
+    ``blocked_axis`` advances with grid dim 0 (the row-panel stream);
+    ``red_axis`` advances with grid dim 1 when the kernel carries a
+    grid-level reduction (chunked delivery of a reduction-indexed axis)."""
+
+    buffer: str
+    ndim: int
+    blocked_axis: Optional[int]       # producer axis tiled over grid dim 0
+    k0: int = 0                       # blocked-axis view start (row shift)
+    stride0: int = 1                  # blocked-axis stride baked into the view
+    red_axis: Optional[int] = None    # producer axis tiled over grid dim 1
+    red_chunk: int = 1                # block extent on the red axis
+    base: List[int] = field(default_factory=list)   # per-axis view start
+    span: List[int] = field(default_factory=list)   # per-axis view length
+
+    def view_slices(self, e0: int) -> Tuple[slice, ...]:
+        out = []
+        for j in range(self.ndim):
+            if j == self.blocked_axis:
+                out.append(
+                    slice(self.k0, self.k0 + self.stride0 * (e0 - 1) + 1, self.stride0)
+                )
+            else:
+                out.append(slice(self.base[j], self.base[j] + self.span[j]))
+        return tuple(out)
+
+    def block_shape(self, bh: int) -> Tuple[int, ...]:
+        out = []
+        for j in range(self.ndim):
+            if j == self.blocked_axis:
+                out.append(bh)
+            elif j == self.red_axis:
+                out.append(self.red_chunk)
+            else:
+                out.append(self.span[j])
+        return tuple(out)
+
+    def index_map(self, n_grid: int) -> Callable:
+        blocked, red, nd = self.blocked_axis, self.red_axis, self.ndim
+        if n_grid == 1:
+            if blocked is None:
+                return lambda i, nd=nd: (0,) * nd
+            return lambda i, blocked=blocked, nd=nd: tuple(
+                i if j == blocked else 0 for j in range(nd)
+            )
+        return lambda i, k, blocked=blocked, red=red, nd=nd: tuple(
+            i if j == blocked else (k if j == red else 0) for j in range(nd)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Stage plans
+# ---------------------------------------------------------------------------
+
+# a view binding key: (panel shift, blocked-axis offset or None for whole
+# delivery) -> index into the kernel's view groups
+BindKey = Tuple[int, Optional[int]]
+
+
+@dataclass
+class StagePlan:
+    """One stage's placement inside a kernel.
+
+    ``shifts`` is the set of row-panel shifts at which the stage's panel is
+    materialized per grid step: ``(0,)`` for the kernel's output stage, the
+    union of consumer demands for fused (VMEM-scratch) intermediates — the
+    producer rows demanded per consumer panel, straight from the affine
+    access maps."""
+
+    nstage: NormalizedStage
+    accesses: List[LoadAccess]
+    streamed: bool
+    shifts: Tuple[int, ...] = (0,)
+    load_kind: List[str] = field(default_factory=list)        # "view"|"scratch"
+    scratch_producer: List[Optional[str]] = field(default_factory=list)
+    view_binding: List[Dict[BindKey, int]] = field(default_factory=list)
+    blocked_axis_of: List[Optional[int]] = field(default_factory=list)
+
+    @property
+    def name(self) -> str:
+        return self.nstage.name
+
+    @property
+    def d0(self) -> str:
+        return self.nstage.pure_dims[0]
+
+    @property
+    def e0(self) -> int:
+        return self.nstage.pure_extents[0]
+
+    def panel_shape(self, bh: int) -> Tuple[int, ...]:
+        if not self.streamed:
+            return tuple(self.nstage.pure_extents)
+        return (bh,) + tuple(self.nstage.pure_extents[1:])
+
+    def panel_bytes(self, bh: int) -> int:
+        return ELEM_BYTES * math.prod(self.panel_shape(bh))
+
+
+@dataclass(frozen=True)
+class RedGrid:
+    """A reduction dim lifted into the grid (accumulate across grid steps)."""
+
+    dim: str
+    chunk: int                        # in-kernel steps per grid step
+    steps: int                        # grid extent (= extent // chunk)
+
+
+# ---------------------------------------------------------------------------
+# Kernel groups
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class KernelGroup:
+    """One future ``pallas_call``: fused stages + their delivery plan."""
+
+    stages: List[StagePlan]           # topo order; last writes the output
+    groups: List[ViewGroup]           # HBM->VMEM view streams
+    bh: int
+    grid: Tuple[int, ...]
+    red_grid: Optional[RedGrid] = None
+    notes: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def output(self) -> StagePlan:
+        return self.stages[-1]
+
+    @property
+    def name(self) -> str:
+        return self.output.name
+
+    @property
+    def stage_names(self) -> List[str]:
+        return [sp.name for sp in self.stages]
+
+    @property
+    def fused(self) -> bool:
+        return len(self.stages) > 1
+
+    @property
+    def streamed(self) -> bool:
+        return self.output.streamed
+
+    @property
+    def e0(self) -> int:
+        return self.output.e0
+
+    def scratch_entries(self) -> List[Tuple[StagePlan, int]]:
+        """(stage, shift) pairs, in emission order, of every VMEM-resident
+        intermediate panel the kernel materializes."""
+        return [(sp, s) for sp in self.stages[:-1] for s in sp.shifts]
+
+    @property
+    def scratch_bytes(self) -> int:
+        return sum(sp.panel_bytes(self.bh) for sp, _ in self.scratch_entries())
+
+    @property
+    def vmem_bytes(self) -> int:
+        return self.ub_plan().vmem_bytes
+
+    def ub_plan(self) -> KernelPlan:
+        """The kernel's unified-buffer structure, for introspection."""
+        streams = []
+        for k, g in enumerate(self.groups):
+            axes = tuple(
+                ax for ax, cond in ((0, g.blocked_axis is not None),
+                                    (1, g.red_axis is not None))
+                if cond and ax < len(self.grid)
+            )
+            streams.append(StreamPlan(
+                f"{g.buffer}[{k}]",
+                g.block_shape(self.bh),
+                axes,
+                ELEM_BYTES * math.prod(g.block_shape(self.bh)),
+                double_buffered=bool(axes),
+            ))
+        for sp, s in self.scratch_entries():
+            streams.append(StreamPlan(
+                f"scratch:{sp.name}@{s}", sp.panel_shape(self.bh), (),
+                sp.panel_bytes(self.bh), double_buffered=False,
+            ))
+        out = self.output
+        streams.append(StreamPlan(
+            "out", out.panel_shape(self.bh), (0,) if out.streamed else (),
+            out.panel_bytes(self.bh),
+        ))
+        notes = {
+            "bh": self.bh,
+            "streamed": out.streamed,
+            "stage": out.name,
+            "stages": self.stage_names,
+        }
+        if self.red_grid is not None:
+            notes["red_grid"] = (self.red_grid.dim, self.red_grid.chunk)
+        notes.update(self.notes)
+        return KernelPlan(self.grid, streams, notes)
+
+    def hbm_bytes(self) -> int:
+        """Estimated HBM bytes one invocation moves: every delivered input
+        block (resident broadcast blocks fetched once) plus the output
+        store.  Summed over a pipeline's kernels this is the traffic metric
+        fusion improves — fused intermediates never appear."""
+        steps0 = self.grid[0]
+        red_steps = self.grid[1] if len(self.grid) > 1 else 1
+        total = ELEM_BYTES * math.prod(self.output.nstage.pure_extents)
+        for g in self.groups:
+            blk = ELEM_BYTES * math.prod(g.block_shape(self.bh))
+            if g.blocked_axis is not None:
+                deliveries = steps0 * (red_steps if g.red_axis is not None else 1)
+            elif g.red_axis is not None:
+                # chunk sequence re-walked every row panel
+                deliveries = steps0 * red_steps
+            else:
+                deliveries = 1
+            total += blk * deliveries
+        return total
+
+    def aligned_blocks(self) -> Dict[str, Tuple[int, ...]]:
+        """Compiled-mode (8, 128)-tile-aligned block shapes per stream, the
+        lane/sublane rounding of ``core/ubplan.align_tpu_shape``."""
+        out = {f"{g.buffer}[{k}]": align_tpu_shape(g.block_shape(self.bh))
+               for k, g in enumerate(self.groups)}
+        out["out"] = align_tpu_shape(self.output.panel_shape(self.bh))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Pipeline plans
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PipelinePlan:
+    pipeline: Pipeline
+    nstages: List[NormalizedStage]
+    kernels: List[KernelGroup]
+    notes: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.nstages)
+
+    @property
+    def n_kernels(self) -> int:
+        return len(self.kernels)
+
+    @property
+    def fused_away(self) -> List[str]:
+        """Intermediates that never touch HBM (VMEM-scratch residents)."""
+        return [sp.name for kg in self.kernels for sp in kg.stages[:-1]]
+
+    def kernel_for(self, name: str) -> KernelGroup:
+        for kg in self.kernels:
+            if kg.name == name:
+                return kg
+        for kg in self.kernels:
+            if name in kg.stage_names:
+                return kg
+        raise KeyError(name)
+
+    def hbm_bytes(self) -> int:
+        return sum(kg.hbm_bytes() for kg in self.kernels)
+
+
+# ---------------------------------------------------------------------------
+# Cost model (scheduler-driven block heights)
+# ---------------------------------------------------------------------------
+
+
+def scheduler_cost(
+    e0: int,
+    stmts_per_row: int,
+    latency: int,
+    bytes_per_row: int,
+    fixed_bytes: int,
+) -> Callable[[int], float]:
+    """Price a candidate block height with the §V-B cycle model.
+
+    Each grid step overlaps the next panel's DMA with the current panel's
+    compute (Pallas's implicit double buffering == the paper's AGG/TB
+    schedule), so the steady-state step cost is ``max(compute, dma)`` plus a
+    fixed per-step overhead; the pipeline fill (first panel's DMA or the
+    last panel's drain, whichever the overlap cannot hide) scales with the
+    panel, which is what makes the optimum interior rather than "largest
+    block that fits VMEM" — the old heuristic this hook replaces.
+    """
+    def cost(bh: int) -> float:
+        steps = e0 // bh
+        compute = raster_cycles((bh, max(stmts_per_row, 1)), latency)
+        dma = (bytes_per_row * bh) / HBM_BYTES_PER_CYCLE
+        per_step = max(compute, dma) + STEP_OVERHEAD_CYCLES
+        fill = min(compute, dma) + fixed_bytes / HBM_BYTES_PER_CYCLE
+        return steps * per_step + fill
+
+    return cost
+
+
+def _stage_latency(ns: NormalizedStage) -> int:
+    base = expr_depth(ns.value)
+    if ns.red_dims:
+        base += 1
+    return max(base, 1)
+
+
+# ---------------------------------------------------------------------------
+# Per-stage helpers
+# ---------------------------------------------------------------------------
+
+
+def _stream_ok(accesses: Sequence[LoadAccess], d0: str) -> bool:
+    """Streamable iff no load indexes two producer axes by the outer dim."""
+    return all(
+        sum(1 for ax in la.axes if ax.pure_dim == d0) <= 1 for la in accesses
+    )
+
+
+def _blocked_axis(la: LoadAccess, d0: str) -> Optional[int]:
+    j0 = None
+    for j, ax in enumerate(la.axes):
+        if ax.pure_dim == d0:
+            j0 = j
+    return j0
+
+
+def _check_tags(la: LoadAccess) -> None:
+    tags = [ax.pure_dim for ax in la.axes if ax.pure_dim is not None]
+    if len(tags) != len(set(tags)):
+        raise UnsupportedAccessError(
+            f"load of {la.buffer} indexes one pure dim on two axes"
+        )
+
+
+def _red_grid_candidate(
+    ns: NormalizedStage,
+    accesses: Sequence[LoadAccess],
+    threshold: int,
+) -> Optional[Tuple[RedGrid, Dict[int, Optional[int]]]]:
+    """Decide whether the stage's leading reduction dim can enter the grid.
+
+    Only the *leading* reduction dim is eligible: chunking it across grid
+    steps then preserves the reference interpreter's lexicographic
+    accumulation order exactly (the emitted kernel stays bit-identical to
+    the fully-unrolled path in f32).  Every load axis touching the dim must
+    be indexed by it alone (``coeff 1, const 0, no pure dim``) so chunked
+    BlockSpec delivery is exact; returns the plan plus each load's
+    reduction-blocked axis."""
+    if not ns.red_dims:
+        return None
+    r = ns.red_dims[0]
+    extent = ns.red_extents[0]
+    if extent < threshold:
+        return None
+    chunk = max(
+        (d for d in range(1, min(MAX_RED_CHUNK, extent - 1) + 1)
+         if extent % d == 0),
+        default=1,
+    )
+    if chunk <= 1 or chunk == extent:
+        return None
+    axis_of: Dict[int, Optional[int]] = {}
+    for k, la in enumerate(accesses):
+        hit = None
+        for j, ax in enumerate(la.axes):
+            coeffs = dict(ax.red_coeffs)
+            if r not in coeffs or coeffs[r] == 0:
+                continue
+            if hit is not None:
+                return None                     # r rides two axes of one load
+            if ax.pure_dim is not None or ax.red_coeffs != ((r, 1),) or ax.const != 0:
+                return None                     # chunked delivery not exact
+            hit = j
+        axis_of[k] = hit
+    return RedGrid(r, chunk, extent // chunk), axis_of
+
+
+# ---------------------------------------------------------------------------
+# Kernel-group construction
+# ---------------------------------------------------------------------------
+
+
+def _build_kernel_group(
+    members: List[Tuple[NormalizedStage, List[LoadAccess], bool]],
+    buffer_shapes: Mapping[str, Tuple[int, ...]],
+    *,
+    block_h: Optional[int] = None,
+    vmem_budget: int = VMEM_BYTES,
+    cost_model: str = "scheduler",
+    align_tpu: bool = False,
+    grid_reduction: bool = True,
+    red_grid_threshold: int = RED_GRID_THRESHOLD,
+) -> KernelGroup:
+    """Build the delivery plan for one kernel (one or more fused stages).
+
+    Raises :class:`FusionInfeasible` when a multi-stage group violates a
+    structural constraint or cannot fit VMEM at any block height; a
+    single-stage group always plans (matching the pre-refactor backend)."""
+    multi = len(members) > 1
+    out_ns, out_acc, out_streamed = members[-1]
+    names = {ns.name for ns, _, _ in members}
+    if multi and not all(st for _, _, st in members):
+        raise FusionInfeasible("fusion requires every member stage to stream")
+
+    plans = {
+        ns.name: StagePlan(ns, list(acc), streamed)
+        for ns, acc, streamed in members
+    }
+    for ns, acc, _ in members:
+        for la in acc:
+            _check_tags(la)
+
+    # -- shift sets: consumer demands propagated reverse-topologically -------
+    in_group_consumers: Dict[str, List[Tuple[StagePlan, int]]] = {}
+    for ns, acc, _ in members:
+        for k, la in enumerate(acc):
+            if la.buffer in names:
+                in_group_consumers.setdefault(la.buffer, []).append(
+                    (plans[ns.name], k)
+                )
+    plans[out_ns.name].shifts = (0,)
+    for ns, _, _ in reversed(members[:-1]):
+        shifts: Set[int] = set()
+        for cons, k in in_group_consumers.get(ns.name, []):
+            la = cons.accesses[k]
+            ax0 = la.axes[0]
+            if ax0.pure_dim != cons.d0 or ax0.stride != 1:
+                raise FusionInfeasible(
+                    f"{cons.name} reads {ns.name} with stride "
+                    f"{ax0.stride} on the blocked dim"
+                )
+            if any(
+                j != 0 and ax.pure_dim == cons.d0 for j, ax in enumerate(la.axes)
+            ):
+                raise FusionInfeasible(
+                    f"{cons.name} reads {ns.name} by the blocked dim on a "
+                    f"non-leading axis"
+                )
+            red_ext = dict(zip(cons.nstage.red_dims, cons.nstage.red_extents))
+            for off in ax0.offsets(red_ext):
+                if off < 0:
+                    raise FusionInfeasible(
+                        f"{cons.name} reads {ns.name} at negative offset {off}"
+                    )
+                for s in cons.shifts:
+                    shifts.add(off + s)
+        if not shifts:
+            raise FusionInfeasible(f"{ns.name} has no in-group consumer")
+        plans[ns.name].shifts = tuple(sorted(shifts))
+
+    # -- grid reduction (single-stage kernels only) ---------------------------
+    red_grid: Optional[RedGrid] = None
+    red_axis_of: Dict[int, Optional[int]] = {}
+    if grid_reduction and not multi and out_streamed:
+        cand = _red_grid_candidate(out_ns, out_acc, red_grid_threshold)
+        if cand is not None:
+            red_grid, red_axis_of = cand
+
+    e0_out = out_ns.pure_extents[0]
+    kernel_streamed = out_streamed
+
+    # -- view groups for boundary loads --------------------------------------
+    groups: List[ViewGroup] = []
+    by_key: Dict[tuple, int] = {}
+
+    def group_for(key, buffer, ndim, blocked, k0, stride0, red_ax, red_chunk):
+        if key not in by_key:
+            by_key[key] = len(groups)
+            groups.append(ViewGroup(
+                buffer, ndim, blocked, k0, stride0, red_ax, red_chunk,
+                base=[None] * ndim, span=[0] * ndim,  # type: ignore[list-item]
+            ))
+        return by_key[key]
+
+    for ns, acc, _ in members:
+        sp = plans[ns.name]
+        red_ext = dict(zip(ns.red_dims, ns.red_extents))
+        # the gridded reduction dim contributes only its in-chunk extent to
+        # offset enumeration (its grid part advances the BlockSpec instead)
+        if red_grid is not None:
+            red_ext[red_grid.dim] = red_grid.chunk
+        for k, la in enumerate(acc):
+            if la.buffer in names:
+                sp.load_kind.append("scratch")
+                sp.scratch_producer.append(la.buffer)
+                sp.view_binding.append({})
+                sp.blocked_axis_of.append(0)
+                continue
+            j0 = _blocked_axis(la, sp.d0) if kernel_streamed and sp.streamed else None
+            jr = red_axis_of.get(k)
+            sp.load_kind.append("view")
+            sp.scratch_producer.append(None)
+            sp.blocked_axis_of.append(j0)
+            binding: Dict[BindKey, int] = {}
+            ndim = len(la.axes)
+            if j0 is not None:
+                stride0 = la.axes[j0].stride
+                for shift in sp.shifts:
+                    for off in la.axes[j0].offsets(red_ext):
+                        k0 = off + stride0 * shift
+                        key = (la.buffer, j0, stride0, k0, jr)
+                        binding[(shift, off)] = group_for(
+                            key, la.buffer, ndim, j0, k0, stride0,
+                            jr, red_grid.chunk if jr is not None else 1,
+                        )
+            else:
+                key = (la.buffer, None, 1, 0, jr)
+                gidx = group_for(
+                    key, la.buffer, ndim, None, 0, 1,
+                    jr, red_grid.chunk if jr is not None else 1,
+                )
+                for shift in sp.shifts:
+                    binding[(shift, None)] = gidx
+            sp.view_binding.append(binding)
+
+            # hull the non-blocked axes of every group this load touches
+            for gidx in set(binding.values()):
+                g = groups[gidx]
+                for j, ax in enumerate(la.axes):
+                    if j == g.blocked_axis:
+                        g.span[j] = e0_out
+                        continue
+                    if j == g.red_axis:
+                        g.base[j] = 0
+                        g.span[j] = ns.extent(red_grid.dim)  # full axis
+                        continue
+                    lo, hi = ax.offset_range(red_ext)
+                    top = hi
+                    if ax.pure_dim is not None:
+                        top = hi + ax.stride * (ns.extent(ax.pure_dim) - 1)
+                    if g.base[j] is None:
+                        g.base[j], g.span[j] = lo, top - lo + 1
+                    else:
+                        new_base = min(g.base[j], lo)
+                        new_top = max(g.base[j] + g.span[j] - 1, top)
+                        g.base[j], g.span[j] = new_base, new_top - new_base + 1
+
+    # bounds inference guarantees accesses stay inside producer boxes; check
+    # anyway so a planning bug fails loudly instead of silently mis-slicing
+    for g in groups:
+        shape = buffer_shapes[g.buffer]
+        if g.blocked_axis is not None:
+            g.base[g.blocked_axis] = g.k0
+        for j in range(g.ndim):
+            top = (
+                g.k0 + g.stride0 * (e0_out - 1)
+                if j == g.blocked_axis
+                else g.base[j] + g.span[j] - 1
+            )
+            if g.base[j] < 0 or top >= shape[j]:
+                raise UnsupportedAccessError(
+                    f"view of {g.buffer} axis {j} [{g.base[j]}, {top}] exceeds "
+                    f"extent {shape[j]}"
+                )
+
+    # -- VMEM accounting + block height --------------------------------------
+    inner_out = (
+        math.prod(out_ns.pure_extents[1:]) if len(out_ns.pure_extents) > 1 else 1
+    )
+    bytes_per_row = inner_out * ELEM_BYTES          # the output panel
+    fixed_bytes = 0
+    for g in groups:
+        sz = ELEM_BYTES * math.prod(
+            (g.red_chunk if j == g.red_axis else g.span[j])
+            for j in range(g.ndim) if j != g.blocked_axis
+        )
+        if g.blocked_axis is not None:
+            bytes_per_row += sz
+        else:
+            fixed_bytes += sz
+    scratch_rows = 0                                # scratch scales with bh too
+    for ns, _, _ in members[:-1]:
+        sp = plans[ns.name]
+        inner = (
+            math.prod(ns.pure_extents[1:]) if len(ns.pure_extents) > 1 else 1
+        )
+        scratch_rows += len(sp.shifts) * inner
+    bytes_per_row += scratch_rows * ELEM_BYTES
+
+    if not kernel_streamed:
+        bh = e0_out
+    elif block_h is not None:
+        if e0_out % block_h:
+            raise ValueError(
+                f"{out_ns.name}: block_h {block_h} must divide {e0_out}"
+            )
+        bh = block_h
+    else:
+        cost = None
+        if cost_model == "scheduler":
+            stmts_per_row = 0
+            for ns, _, _ in members:
+                sp = plans[ns.name]
+                inner = (
+                    math.prod(ns.pure_extents[1:])
+                    if len(ns.pure_extents) > 1 else 1
+                )
+                red = math.prod(ns.red_extents) if ns.red_dims else 1
+                if red_grid is not None:
+                    red = (red // ns.red_extents[0]) * red_grid.chunk
+                stmts_per_row += len(sp.shifts) * inner * red
+            latency = max(_stage_latency(ns) for ns, _, _ in members)
+            cost = scheduler_cost(
+                e0_out, stmts_per_row, latency, bytes_per_row, fixed_bytes
+            )
+        bh = plan_affine_stage(
+            e0_out, bytes_per_row, fixed_bytes,
+            vmem_budget=vmem_budget, cost=cost, align_tpu=align_tpu,
+        )
+
+    if multi and 2 * bytes_per_row * bh + fixed_bytes > vmem_budget:
+        raise FusionInfeasible(
+            f"group ending at {out_ns.name}: live range exceeds VMEM budget"
+        )
+
+    grid: Tuple[int, ...] = (e0_out // bh,) if kernel_streamed else (1,)
+    if red_grid is not None:
+        grid = grid + (red_grid.steps,)
+
+    return KernelGroup(
+        stages=[plans[ns.name] for ns, _, _ in members],
+        groups=groups,
+        bh=bh,
+        grid=grid,
+        red_grid=red_grid,
+        notes={"cost_model": cost_model if kernel_streamed else "degenerate"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pipeline planning (fusion grouping + per-group builds)
+# ---------------------------------------------------------------------------
+
+
+def build_pipeline_plan(
+    pipe: Pipeline,
+    *,
+    block_h: Optional[int] = None,
+    fuse: bool = True,
+    grid_reduction: bool = True,
+    red_grid_threshold: int = RED_GRID_THRESHOLD,
+    vmem_budget: int = VMEM_BYTES,
+    cost_model: str = "scheduler",
+    align_tpu: bool = False,
+) -> PipelinePlan:
+    nstages = normalize_pipeline(pipe)
+    shapes = {n: tuple(b.extents) for n, b in pipe.buffer_boxes.items()}
+    infos = []
+    for ns in nstages:
+        if ns.init is not None and refs_in(ns.init):
+            raise UnsupportedAccessError(
+                f"{ns.name}: reduction init with buffer reads is not supported"
+            )
+        accesses = decompose_stage(ns)
+        infos.append((ns, accesses, _stream_ok(accesses, ns.pure_dims[0])))
+    by_name = {ns.name: info for info in infos for ns in [info[0]]}
+
+    # consumer map over every stage (host stages pin their inputs in HBM)
+    consumers: Dict[str, List[str]] = {}
+    for ns, acc, _ in infos:
+        for la in acc:
+            if la.buffer in by_name:
+                consumers.setdefault(la.buffer, []).append(ns.name)
+
+    order = [ns.name for ns, _, _ in infos]
+    device = [n for n in order if not by_name[n][0].on_host]
+    assign = {n: n for n in order}               # stage -> fusion-group root
+    members: Dict[str, List[str]] = {n: [n] for n in order}
+
+    build_kw = dict(
+        block_h=block_h, vmem_budget=vmem_budget, cost_model=cost_model,
+        align_tpu=align_tpu, grid_reduction=grid_reduction,
+        red_grid_threshold=red_grid_threshold,
+    )
+
+    def group_infos(root: str) -> List[Tuple]:
+        return [by_name[n] for n in order if n in set(members[root])]
+
+    if fuse:
+        for name in reversed(device):
+            cons = consumers.get(name, [])
+            if not cons or name == pipe.output:
+                continue
+            if any(by_name[c][0].on_host for c in cons):
+                continue                         # host consumers read HBM
+            roots = {assign[c] for c in cons}
+            if len(roots) != 1:
+                continue
+            root = roots.pop()
+            # reverse-topo iteration means `name` is still a singleton root
+            # here; try the enlarged group and commit only if it plans
+            trial = set(members[root]) | {name}
+            try:
+                _build_kernel_group(
+                    [by_name[n] for n in order if n in trial],
+                    shapes, **build_kw,
+                )
+            except (FusionInfeasible, UnsupportedAccessError, ValueError):
+                continue
+            members[root].append(name)
+            assign[name] = root
+            del members[name]
+
+    kernels = []
+    for name in order:
+        if assign[name] != name or name not in members:
+            continue
+        kernels.append(_build_kernel_group(group_infos(name), shapes, **build_kw))
+    return PipelinePlan(
+        pipe, nstages, kernels,
+        notes={
+            "fuse": fuse, "grid_reduction": grid_reduction,
+            "cost_model": cost_model, "vmem_budget": vmem_budget,
+            "align_tpu": align_tpu,
+        },
+    )
+
+
+__all__ = [
+    "ELEM_BYTES",
+    "HBM_BYTES_PER_CYCLE",
+    "STEP_OVERHEAD_CYCLES",
+    "RED_GRID_THRESHOLD",
+    "FusionInfeasible",
+    "ViewGroup",
+    "StagePlan",
+    "RedGrid",
+    "KernelGroup",
+    "PipelinePlan",
+    "scheduler_cost",
+    "build_pipeline_plan",
+]

@@ -1,10 +1,11 @@
 """Whole-pipeline compilation and execution against the golden reference.
 
-``compile_pipeline`` turns a lowered :class:`~repro.frontend.lower.Pipeline`
-into a chain of generated Pallas kernels, one per realized stage, executed
-in the pipeline's topological order (device stages, then host stages).
-Intermediate buffers live as dense zero-based f32 arrays keyed by stage name
-— the HBM residents between push streams.
+``compile_pipeline`` plans a lowered :class:`~repro.frontend.lower.Pipeline`
+(``backend/plan.build_pipeline_plan``: fusion, grid reductions, scheduler-
+driven block heights) and emits one generated Pallas kernel per planned
+:class:`~repro.backend.plan.KernelGroup`, executed in topological order.
+Only kernel *outputs* are materialized in HBM — fused intermediates live and
+die in VMEM scratch, which is the point of the plan/emit split.
 
 ``reference_arrays`` converts the von-Neumann reference interpreter's value
 tables (absolute coordinates) into the same zero-based dense layout so
@@ -20,9 +21,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.frontend.lower import Pipeline, execute_pipeline, normalize_pipeline
+from repro.core.ubplan import VMEM_BYTES
+from repro.frontend.lower import Pipeline, execute_pipeline
 
-from .codegen import CompiledStage, compile_stage
+from .codegen import CompiledKernel, emit_kernel
+from .plan import PipelinePlan, RED_GRID_THRESHOLD, build_pipeline_plan
 
 
 @dataclass
@@ -30,16 +33,31 @@ class PallasPipeline:
     """Executable pipeline: generated kernels in dependency order."""
 
     pipeline: Pipeline
-    stages: List[CompiledStage]
+    kernels: List[CompiledKernel]
+    plan: PipelinePlan
 
-    def stage(self, name: str) -> CompiledStage:
-        for s in self.stages:
-            if s.name == name:
-                return s
+    @property
+    def stages(self) -> List[CompiledKernel]:
+        """The emitted kernels (pre-refactor name; one kernel may now cover
+        several fused stages)."""
+        return self.kernels
+
+    def stage(self, name: str) -> CompiledKernel:
+        """Kernel writing buffer ``name`` (or containing the fused stage)."""
+        for k in self.kernels:
+            if k.name == name:
+                return k
+        for k in self.kernels:
+            if name in k.stage_names:
+                return k
         raise KeyError(name)
 
+    kernel = stage
+
     def run(self, inputs: Mapping[str, np.ndarray]) -> Dict[str, jax.Array]:
-        """Execute every stage; returns all realized buffers (zero-based)."""
+        """Execute every kernel; returns all *materialized* buffers
+        (zero-based): pipeline inputs plus one buffer per kernel.  Fused
+        intermediates stay in VMEM and are deliberately absent."""
         buffers: Dict[str, jax.Array] = {}
         for name in self.pipeline.inputs:
             if name not in inputs:
@@ -51,8 +69,8 @@ class PallasPipeline:
                     f"input {name}: shape {arr.shape} != required box {want}"
                 )
             buffers[name] = arr
-        for cs in self.stages:
-            buffers[cs.name] = cs(buffers)
+        for ck in self.kernels:
+            buffers[ck.name] = ck(buffers)
         return buffers
 
     def __call__(self, inputs: Mapping[str, np.ndarray]) -> jax.Array:
@@ -64,13 +82,25 @@ def compile_pipeline(
     *,
     interpret: bool = True,
     block_h: Optional[int] = None,
+    fuse: bool = True,
+    grid_reduction: bool = True,
+    red_grid_threshold: int = RED_GRID_THRESHOLD,
+    vmem_budget: int = VMEM_BYTES,
+    cost_model: str = "scheduler",
+    align_tpu: bool = False,
 ) -> PallasPipeline:
-    shapes = {n: tuple(b.extents) for n, b in pipe.buffer_boxes.items()}
-    stages = [
-        compile_stage(ns, shapes, interpret=interpret, block_h=block_h)
-        for ns in normalize_pipeline(pipe)
-    ]
-    return PallasPipeline(pipe, stages)
+    plan = build_pipeline_plan(
+        pipe,
+        block_h=block_h,
+        fuse=fuse,
+        grid_reduction=grid_reduction,
+        red_grid_threshold=red_grid_threshold,
+        vmem_budget=vmem_budget,
+        cost_model=cost_model,
+        align_tpu=align_tpu,
+    )
+    kernels = [emit_kernel(kg, interpret=interpret) for kg in plan.kernels]
+    return PallasPipeline(pipe, kernels, plan)
 
 
 def reference_arrays(
@@ -94,17 +124,18 @@ def max_abs_error(
     inputs: Mapping[str, np.ndarray],
     got: Optional[Mapping[str, jax.Array]] = None,
 ) -> Dict[str, float]:
-    """Per-stage max |generated - reference| (differential validation).
-    Pass ``got`` (the result of ``pp.run``) to reuse already-computed
-    buffers instead of re-executing the pipeline."""
+    """Per-kernel max |generated - reference| over every buffer the pipeline
+    materializes (differential validation; fused intermediates have no HBM
+    realization to compare).  Pass ``got`` (the result of ``pp.run``) to
+    reuse already-computed buffers instead of re-executing the pipeline."""
     if got is None:
         got = pp.run(inputs)
     want = reference_arrays(pp.pipeline, inputs)
     return {
-        cs.name: float(np.max(np.abs(np.asarray(got[cs.name]) - want[cs.name])))
-        if want[cs.name].size
+        ck.name: float(np.max(np.abs(np.asarray(got[ck.name]) - want[ck.name])))
+        if want[ck.name].size
         else 0.0
-        for cs in pp.stages
+        for ck in pp.kernels
     }
 
 

@@ -199,6 +199,24 @@ def _raster(box: Box, skip: Sequence[str] = (), ii: int = 1) -> AffineExpr:
     return expr
 
 
+def raster_cycles(extents: Sequence[int], latency: int, ii: int = 1) -> int:
+    """Cycle count of rastering a box of ``extents`` at initiation interval
+    ``ii`` with ``latency`` cycles of drain — the single-stage
+    specialization of the §V-B cycle model.
+
+    This is the same arithmetic a :class:`ScheduledStage` with a ``_raster``
+    issue expression reports through :meth:`ScheduledStage.cycles`, exposed
+    as a standalone entry so the Pallas backend's block-height cost hook
+    (``backend/plan.scheduler_cost``) prices candidate row panels with the
+    scheduler's own model (cross-checked against ``core/simulator.py`` in
+    the test suite)."""
+    dims = tuple(f"__c{i}" for i in range(len(extents)))
+    box = Box(dims, tuple((0, max(int(e), 1) - 1) for e in extents))
+    issue = _raster(box, ii=ii)
+    lo, hi = issue.range_over(box)
+    return hi - lo + 1 + latency
+
+
 # ---------------------------------------------------------------------------
 # Stencil scheduler
 # ---------------------------------------------------------------------------
@@ -602,6 +620,7 @@ __all__ = [
     "ScheduledStage",
     "PipelineSchedule",
     "select_policy",
+    "raster_cycles",
     "schedule_pipeline",
     "schedule_stencil",
     "schedule_dnn",

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 # TPU v5e-class constants (see DESIGN.md §2)
 VMEM_BYTES = 96 * 1024 * 1024          # usable VMEM budget (conservative)
@@ -84,6 +84,8 @@ def plan_affine_stage(
     vmem_budget: int = VMEM_BYTES,
     max_bh: int = 256,
     prefer_stream: bool = True,
+    cost: Optional[Callable[[int], float]] = None,
+    align_tpu: bool = False,
 ) -> int:
     """Pick the block height for a generated stage kernel.
 
@@ -98,16 +100,53 @@ def plan_affine_stage(
     Pallas grids must tile the array exactly.  ``prefer_stream`` caps the
     block at a quarter of the extent so pipelines actually exercise the
     multi-step push schedule instead of degenerating to one giant block.
+
+    ``cost`` is the scheduler hook: a map from candidate block height to
+    modeled cycles (see ``backend/plan.scheduler_cost``).  When given, the
+    block height is the cheapest VMEM-fitting candidate instead of simply
+    the largest one; ties break toward the larger block.
+
+    ``align_tpu`` restricts candidates to sublane multiples (8 rows for
+    f32) when any such divisor *fits the budget*, so compiled
+    (non-interpret) TPU mode gets hardware-tileable panels; extents with no
+    aligned fitting divisor fall back to the unaligned choice (interpret
+    mode doesn't care, and the VMEM guarantee always wins over alignment).
     """
     divisors = [d for d in range(1, grid_extent + 1) if grid_extent % d == 0]
     cap = min(max_bh, grid_extent)
     if prefer_stream and grid_extent > 8:
         cap = min(cap, max(grid_extent // 4, 8))
     candidates = [d for d in reversed(divisors) if d <= cap] or [1]
-    for bh in candidates:
-        if 2 * bytes_per_row * bh + fixed_bytes <= vmem_budget:
-            return bh
-    return candidates[-1]
+
+    def fits(bh: int) -> bool:
+        return 2 * bytes_per_row * bh + fixed_bytes <= vmem_budget
+
+    fitting = [bh for bh in candidates if fits(bh)]
+    if align_tpu:
+        sub = SUBLANE[4]
+        aligned = [bh for bh in fitting if bh % sub == 0]
+        if aligned:
+            fitting = aligned
+    if not fitting:
+        return candidates[-1]
+    if cost is None:
+        return fitting[0]
+    return min(fitting, key=lambda bh: (cost(bh), -bh))
+
+
+def align_tpu_shape(shape: Sequence[int], dtype_bytes: int = 4) -> Tuple[int, ...]:
+    """Round a block shape up to TPU tile granularity: the minor (lane) dim
+    to a multiple of 128 and the second-minor (sublane) dim to the dtype's
+    sublane quantum (8 for f32, 16 for bf16) — the vectorization rule of
+    paper Eq. 2 with lane width as the fetch width FW.  Rank-0/1 shapes only
+    align the dims they have."""
+    out = list(shape)
+    if not out:
+        return tuple(out)
+    out[-1] = _round_up(out[-1], LANE)
+    if len(out) >= 2:
+        out[-2] = _round_up(out[-2], SUBLANE.get(dtype_bytes, 8))
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------
@@ -273,9 +312,11 @@ __all__ = [
     "VMEM_BYTES",
     "LANE",
     "MXU",
+    "SUBLANE",
     "StreamPlan",
     "KernelPlan",
     "plan_affine_stage",
+    "align_tpu_shape",
     "plan_matmul",
     "plan_attention",
     "plan_stencil",
