@@ -14,6 +14,7 @@ from .codegen import CompiledKernel, CompiledStage, compile_stage, emit_kernel
 from .plan import (
     FusionInfeasible,
     KernelGroup,
+    PaddedGrid,
     PipelinePlan,
     RedGrid,
     StagePlan,
@@ -40,6 +41,7 @@ __all__ = [
     "emit_kernel",
     "FusionInfeasible",
     "KernelGroup",
+    "PaddedGrid",
     "PipelinePlan",
     "RedGrid",
     "StagePlan",

@@ -76,6 +76,21 @@ class _StageCtx:
             return self.bh
         return self.nstage.extent(dim)
 
+    def row_mask(self):
+        """Valid-row mask of this stage's panel at the current grid step, or
+        None when the grid is unpadded.  Under a padded grid the tail block
+        hangs past the extent: its delivered rows are undefined (NaN in
+        interpret mode), so every stored or accumulated panel is masked to
+        exact zeros on rows at or above the stage's valid extent."""
+        pg = self.kg.padded_grid
+        if pg is None or not self.streamed:
+            return None
+        # every view stream (and hence every scratch panel derived from it)
+        # delivers pg.extent valid blocked-axis elements — the kernel
+        # output's extent, which also bounds each fused stage's demand
+        rows = jax.lax.broadcasted_iota(jnp.int32, self.block_shape, 0)
+        return rows + pl.program_id(0) * self.bh < pg.extent
+
     def red_ranges(self) -> List[range]:
         rg = self.kg.red_grid
         out = []
@@ -216,7 +231,11 @@ def _stage_panel(ctx: _StageCtx, refs, scratch, shift: int):
             acc = acc + _emit(ns.value, ctx, refs, scratch, rho, shift, [0])
     else:
         acc = _emit(ns.value, ctx, refs, scratch, {}, shift, [0])
-    return jnp.broadcast_to(jnp.asarray(acc, jnp.float32), ctx.block_shape)
+    panel = jnp.broadcast_to(jnp.asarray(acc, jnp.float32), ctx.block_shape)
+    mask = ctx.row_mask()
+    if mask is not None:
+        panel = jnp.where(mask, panel, 0.0)
+    return panel
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +284,10 @@ class CompiledKernel:
     @property
     def red_grid(self):
         return self.kg.red_grid
+
+    @property
+    def padded_grid(self):
+        return self.kg.padded_grid
 
     @property
     def block(self) -> Tuple[int, ...]:
@@ -384,19 +407,33 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
             # block, element update order identical to the unrolled path
             k = pl.program_id(n_grid - 1)
             init = _emit(ns.init, out_ctx, refs, scratch, {}, 0, [0])
+            mask = out_ctx.row_mask()
 
             @pl.when(k == 0)
             def _init():
-                out_ref[...] = jnp.broadcast_to(
+                blk = jnp.broadcast_to(
                     jnp.asarray(init, jnp.float32), out_ctx.block_shape
-                ).astype(out_ref.dtype)
+                )
+                if mask is not None:
+                    blk = jnp.where(mask, blk, 0.0)
+                out_ref[...] = blk.astype(out_ref.dtype)
 
             for combo in itertools.product(*out_ctx.red_ranges()):
                 rho = dict(zip(ns.red_dims, combo))
                 term = _emit(ns.value, out_ctx, refs, scratch, rho, 0, [0])
-                out_ref[...] += jnp.broadcast_to(
+                term = jnp.broadcast_to(
                     jnp.asarray(term, jnp.float32), out_ctx.block_shape
                 )
+                if rg.padded:
+                    # masked K-tail: a term whose global reduction index
+                    # reaches the true extent reads padded (undefined)
+                    # chunk elements — force it to contribute exactly zero
+                    term = jnp.where(
+                        k * rg.chunk + rho[rg.dim] < rg.extent, term, 0.0
+                    )
+                if mask is not None:
+                    term = jnp.where(mask, term, 0.0)
+                out_ref[...] += term
         else:
             out_ref[...] = _stage_panel(out_ctx, refs, scratch, 0).astype(
                 out_ref.dtype
@@ -421,6 +458,7 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
     e0 = kg.e0
 
     def call(buffers: Mapping[str, jax.Array]) -> jax.Array:
+        kg.validate_buffers(buffers)
         views = [
             jnp.asarray(buffers[g.buffer], jnp.float32)[g.view_slices(e0)]
             for g in kg.groups

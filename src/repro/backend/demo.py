@@ -41,14 +41,13 @@ DEMO_APPS: List[Tuple[str, Dict]] = [
 
 SMOKE_APPS = ["gaussian", "unsharp", "matmul", "matmul_bigk"]
 
-# plan-shape expectations with fusion on: app -> (stages, kernels).  These
-# fail the demo (and CI) if the planner regresses to per-stage compilation.
-EXPECTED_PLANS: Dict[str, Tuple[int, int]] = {
-    "harris": (6, 1),
-    "unsharp": (4, 1),
-    "camera": (5, 2),
-    "mobilenet": (2, 1),
-}
+# plan-shape expectations live in the golden table (backend/golden.py) so
+# the demo and the pytest suite assert one contract; the demo looks up each
+# app by (name, schedule) as configured in DEMO_APPS above.
+def _expected_plan(name: str, kw: Dict) -> Optional[Tuple[int, int]]:
+    from repro.backend.golden import expected_plan_shape
+
+    return expected_plan_shape(name, kw.get("schedule"))
 
 
 def _make(name: str, kw: Dict):
@@ -102,13 +101,14 @@ def run_demo(app_names=None, smoke: bool = False, fuse: bool = True) -> List[Dic
         else:
             errs = max_abs_error(pp, inputs, got=got)
             err = max(errs.values())
-        if fuse and name in EXPECTED_PLANS:
-            want_stages, want_kernels = EXPECTED_PLANS[name]
+        expected = _expected_plan(name, kw) if fuse else None
+        if expected is not None:
+            want_stages, want_kernels = expected
             if (pp.plan.n_stages, pp.plan.n_kernels) != (want_stages, want_kernels):
                 plan_notes.append(
-                    f"plan regressed: expected {want_stages} stages in "
-                    f"{want_kernels} kernels, got {pp.plan.n_stages} in "
-                    f"{pp.plan.n_kernels}"
+                    f"plan regressed vs golden table: expected {want_stages} "
+                    f"stages in {want_kernels} kernels, got {pp.plan.n_stages} "
+                    f"in {pp.plan.n_kernels}"
                 )
         rows.append(
             {

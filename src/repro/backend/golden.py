@@ -1,0 +1,39 @@
+"""Golden plan-shape table: the planner's CI contract in one place.
+
+``backend/demo.py`` (the CI smoke test) and ``tests/test_backend.py`` both
+assert that multi-stage paper apps keep compiling to *fused* plans — fewer
+``pallas_call``s than stages, intermediates in VMEM scratch.  Those
+expectations used to be hardcoded in each consumer; with padded-grid
+planning now free to pick any block height, keeping them in one table means
+a planner change that shifts a kernel count fails CI in exactly one,
+obvious place instead of silently drifting the contract.
+
+Keys are ``(app name, schedule or None)``; values are
+``(n_stages, n_kernels)`` of the default fused plan.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+# (app, schedule) -> (stages, kernels) under the default fused plan.  A
+# regression to per-stage compilation (or an unexpected extra fusion) on
+# any of these fails both the demo and the pytest suite.
+GOLDEN_PLAN_SHAPES: Dict[Tuple[str, Optional[str]], Tuple[int, int]] = {
+    ("harris", "sch3"): (6, 1),
+    ("harris", "sch2"): (3, 1),
+    ("unsharp", None): (4, 1),
+    ("camera", None): (5, 2),      # stride-2 demosaic pins denoise in HBM
+    ("mobilenet", None): (2, 1),
+}
+
+
+def expected_plan_shape(
+    name: str, schedule: Optional[str] = None
+) -> Optional[Tuple[int, int]]:
+    """The golden (stages, kernels) for an app, or None when the app has no
+    plan-shape contract (single-stage apps, matmul workloads)."""
+    return GOLDEN_PLAN_SHAPES.get((name, schedule))
+
+
+__all__ = ["GOLDEN_PLAN_SHAPES", "expected_plan_shape"]

@@ -29,10 +29,14 @@ Planning passes, in order:
      producer's live range (rows demanded per consumer panel, from the
      affine access maps) fits the VMEM budget,
   3. **grid reduction** — single-stage kernels whose leading reduction dim
-     is large get it chunked into the grid,
+     is large get it chunked into the grid (``ceil`` steps: a non-dividing
+     chunk leaves a masked tail step),
   4. **block-height selection** — ``core/ubplan.plan_affine_stage`` with the
      scheduler cost hook (``scheduler_cost``) pricing candidate panels with
-     ``core/scheduling.raster_cycles``.
+     ``core/scheduling.raster_cycles``; any height is legal — a non-divisor
+     block yields a :class:`PaddedGrid` (grid = ``ceil(extent / bh)``, tail
+     block masked by the emitter), with the padding waste priced into the
+     cost like any other step.
 """
 
 from __future__ import annotations
@@ -71,6 +75,29 @@ class FusionInfeasible(Exception):
     """A candidate fusion group violates a structural or VMEM constraint."""
 
 
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclass(frozen=True)
+class PaddedGrid:
+    """Grid dim 0 covers the extent by ceil-division: ``steps * block``
+    rows are delivered and computed but only the first ``extent`` are
+    valid.  The emitter masks the ragged edge (iota-derived row masks on
+    every stored/accumulated panel), so arbitrary extents compile without
+    a dividing block height — the unified-buffer abstraction hiding the
+    ragged edge behind address generation."""
+
+    extent: int                       # true extent along the blocked dim
+    block: int                        # planned block height
+    steps: int                        # grid extent = ceil(extent / block)
+
+    @property
+    def pad(self) -> int:
+        """Rows of padded (masked) work in the tail block."""
+        return self.steps * self.block - self.extent
+
+
 # ---------------------------------------------------------------------------
 # View groups: planned HBM->VMEM streams
 # ---------------------------------------------------------------------------
@@ -94,6 +121,8 @@ class ViewGroup:
     red_chunk: int = 1                # block extent on the red axis
     base: List[int] = field(default_factory=list)   # per-axis view start
     span: List[int] = field(default_factory=list)   # per-axis view length
+    valid0: Optional[int] = None      # valid blocked-axis elements of the view
+                                      # (grid delivery past this is padding)
 
     def view_slices(self, e0: int) -> Tuple[slice, ...]:
         out = []
@@ -170,6 +199,18 @@ class StagePlan:
     def e0(self) -> int:
         return self.nstage.pure_extents[0]
 
+    # valid-extent metadata for padded grids: the stage's true extent along
+    # the blocked dim; panel rows past it (tail-block padding) are masked
+    @property
+    def valid_e0(self) -> int:
+        return self.e0
+
+    def valid_rows(self, bh: int, step: int) -> int:
+        """Valid rows of this stage's panel at grid step ``step``."""
+        if not self.streamed:
+            return self.e0
+        return max(0, min(bh, self.e0 - step * bh))
+
     def panel_shape(self, bh: int) -> Tuple[int, ...]:
         if not self.streamed:
             return tuple(self.nstage.pure_extents)
@@ -181,11 +222,26 @@ class StagePlan:
 
 @dataclass(frozen=True)
 class RedGrid:
-    """A reduction dim lifted into the grid (accumulate across grid steps)."""
+    """A reduction dim lifted into the grid (accumulate across grid steps).
+
+    ``steps = ceil(extent / chunk)``: when the chunk does not divide the
+    extent, the final grid step is a *masked tail* — the emitter zeroes
+    every in-chunk term whose global reduction index reaches ``extent``, so
+    padded K-tail steps contribute exactly 0 to the accumulation."""
 
     dim: str
     chunk: int                        # in-kernel steps per grid step
-    steps: int                        # grid extent (= extent // chunk)
+    steps: int                        # grid extent (= ceil(extent / chunk))
+    extent: int                       # true reduction extent
+
+    @property
+    def padded(self) -> bool:
+        return self.steps * self.chunk != self.extent
+
+    @property
+    def tail(self) -> int:
+        """Valid in-chunk steps of the final grid step."""
+        return self.extent - (self.steps - 1) * self.chunk
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +258,7 @@ class KernelGroup:
     bh: int
     grid: Tuple[int, ...]
     red_grid: Optional[RedGrid] = None
+    padded_grid: Optional[PaddedGrid] = None
     notes: Dict[str, object] = field(default_factory=dict)
 
     @property
@@ -227,6 +284,57 @@ class KernelGroup:
     @property
     def e0(self) -> int:
         return self.output.e0
+
+    @property
+    def padded(self) -> bool:
+        return self.padded_grid is not None
+
+    @property
+    def pad_rows(self) -> int:
+        return 0 if self.padded_grid is None else self.padded_grid.pad
+
+    def required_extents(self) -> Dict[str, Tuple[int, ...]]:
+        """Per input buffer, the minimal extent along every axis that the
+        planned view slices require (the hull over this kernel's groups)."""
+        out: Dict[str, Tuple[int, ...]] = {}
+        for g in self.groups:
+            need = []
+            for j in range(g.ndim):
+                if j == g.blocked_axis:
+                    need.append(g.k0 + g.stride0 * (self.e0 - 1) + 1)
+                else:
+                    need.append(g.base[j] + g.span[j])
+            prev = out.get(g.buffer)
+            out[g.buffer] = (
+                tuple(max(a, b) for a, b in zip(prev, need)) if prev else tuple(need)
+            )
+        return out
+
+    def validate_buffers(self, buffers: Mapping[str, object]) -> None:
+        """Check the arrays backing this kernel's view streams against the
+        plan's declared extents, raising a clear error naming the buffer and
+        axis instead of letting a mis-shaped array surface as a cryptic
+        BlockSpec/slice failure inside ``pallas_call``."""
+        for buf, need in self.required_extents().items():
+            if buf not in buffers:
+                raise KeyError(
+                    f"kernel {self.name!r}: missing input buffer {buf!r} "
+                    f"(needs extents >= {need})"
+                )
+            got = tuple(getattr(buffers[buf], "shape", ()))
+            if len(got) != len(need):
+                raise ValueError(
+                    f"kernel {self.name!r}: buffer {buf!r} has rank {len(got)} "
+                    f"(shape {got}), but the plan's views need rank {len(need)} "
+                    f"with extents >= {need}"
+                )
+            for j, (s, n) in enumerate(zip(got, need)):
+                if s < n:
+                    raise ValueError(
+                        f"kernel {self.name!r}: buffer {buf!r} axis {j} has "
+                        f"extent {s}, but the plan's view needs >= {n} "
+                        f"(shape {got} vs required {need})"
+                    )
 
     def scratch_entries(self) -> List[Tuple[StagePlan, int]]:
         """(stage, shift) pairs, in emission order, of every VMEM-resident
@@ -275,6 +383,11 @@ class KernelGroup:
         }
         if self.red_grid is not None:
             notes["red_grid"] = (self.red_grid.dim, self.red_grid.chunk)
+            if self.red_grid.padded:
+                notes["red_tail"] = self.red_grid.tail
+        if self.padded_grid is not None:
+            pg = self.padded_grid
+            notes["padded_grid"] = (pg.extent, pg.block, pg.steps)
         notes.update(self.notes)
         return KernelPlan(self.grid, streams, notes)
 
@@ -366,9 +479,15 @@ def scheduler_cost(
     last panel's drain, whichever the overlap cannot hide) scales with the
     panel, which is what makes the optimum interior rather than "largest
     block that fits VMEM" — the old heuristic this hook replaces.
+
+    Non-divisor blocks run ``ceil(e0 / bh)`` grid steps (a padded grid):
+    the tail block is delivered, computed, and masked in full, so its
+    padding waste is priced automatically — every step, padded or not,
+    costs the full per-step cycles.  A block with less padded work beats an
+    equal-step block with more.
     """
     def cost(bh: int) -> float:
-        steps = e0 // bh
+        steps = _cdiv(e0, bh)
         compute = raster_cycles((bh, max(stmts_per_row, 1)), latency)
         dma = (bytes_per_row * bh) / HBM_BYTES_PER_CYCLE
         per_step = max(compute, dma) + STEP_OVERHEAD_CYCLES
@@ -423,9 +542,14 @@ def _red_grid_candidate(
     Only the *leading* reduction dim is eligible: chunking it across grid
     steps then preserves the reference interpreter's lexicographic
     accumulation order exactly (the emitted kernel stays bit-identical to
-    the fully-unrolled path in f32).  Every load axis touching the dim must
-    be indexed by it alone (``coeff 1, const 0, no pure dim``) so chunked
-    BlockSpec delivery is exact; returns the plan plus each load's
+    the fully-unrolled path in f32 — padded tail terms are masked to exact
+    zeros, and appending ``+ 0.0`` does not perturb an f32 accumulator).
+    The chunk no longer needs to divide the extent: ``steps`` is the
+    ceil-division and the emitter masks the tail chunk's invalid terms, so
+    K=1000 chunks as 7x128 + a masked 104-tail instead of falling back to
+    a full unroll or an awkward divisor.  Every load axis touching the dim
+    must be indexed by it alone (``coeff 1, const 0, no pure dim``) so
+    chunked BlockSpec delivery is exact; returns the plan plus each load's
     reduction-blocked axis."""
     if not ns.red_dims:
         return None
@@ -433,12 +557,8 @@ def _red_grid_candidate(
     extent = ns.red_extents[0]
     if extent < threshold:
         return None
-    chunk = max(
-        (d for d in range(1, min(MAX_RED_CHUNK, extent - 1) + 1)
-         if extent % d == 0),
-        default=1,
-    )
-    if chunk <= 1 or chunk == extent:
+    chunk = min(MAX_RED_CHUNK, (extent + 1) // 2)
+    if chunk <= 1:
         return None
     axis_of: Dict[int, Optional[int]] = {}
     for k, la in enumerate(accesses):
@@ -453,7 +573,7 @@ def _red_grid_candidate(
                 return None                     # chunked delivery not exact
             hit = j
         axis_of[k] = hit
-    return RedGrid(r, chunk, extent // chunk), axis_of
+    return RedGrid(r, chunk, _cdiv(extent, chunk), extent), axis_of
 
 
 # ---------------------------------------------------------------------------
@@ -550,6 +670,7 @@ def _build_kernel_group(
             groups.append(ViewGroup(
                 buffer, ndim, blocked, k0, stride0, red_ax, red_chunk,
                 base=[None] * ndim, span=[0] * ndim,  # type: ignore[list-item]
+                valid0=e0_out if blocked is not None else None,
             ))
         return by_key[key]
 
@@ -661,11 +782,12 @@ def _build_kernel_group(
     if not kernel_streamed:
         bh = e0_out
     elif block_h is not None:
-        if e0_out % block_h:
-            raise ValueError(
-                f"{out_ns.name}: block_h {block_h} must divide {e0_out}"
-            )
-        bh = block_h
+        if block_h < 1:
+            raise ValueError(f"{out_ns.name}: block_h must be >= 1")
+        # any block height plans: a non-divisor runs on a padded grid whose
+        # masked tail block hangs past the edge (blocks above the extent
+        # degenerate to one padded step, so clamp to the extent instead)
+        bh = min(block_h, e0_out)
     else:
         cost = None
         if cost_model == "scheduler":
@@ -694,7 +816,14 @@ def _build_kernel_group(
             f"group ending at {out_ns.name}: live range exceeds VMEM budget"
         )
 
-    grid: Tuple[int, ...] = (e0_out // bh,) if kernel_streamed else (1,)
+    padded_grid: Optional[PaddedGrid] = None
+    if kernel_streamed:
+        steps0 = _cdiv(e0_out, bh)
+        grid: Tuple[int, ...] = (steps0,)
+        if steps0 * bh != e0_out:
+            padded_grid = PaddedGrid(e0_out, bh, steps0)
+    else:
+        grid = (1,)
     if red_grid is not None:
         grid = grid + (red_grid.steps,)
 
@@ -704,6 +833,7 @@ def _build_kernel_group(
         bh=bh,
         grid=grid,
         red_grid=red_grid,
+        padded_grid=padded_grid,
         notes={"cost_model": cost_model if kernel_streamed else "degenerate"},
     )
 
@@ -806,6 +936,7 @@ __all__ = [
     "ViewGroup",
     "StagePlan",
     "RedGrid",
+    "PaddedGrid",
     "KernelGroup",
     "PipelinePlan",
     "scheduler_cost",

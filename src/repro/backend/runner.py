@@ -57,16 +57,32 @@ class PallasPipeline:
     def run(self, inputs: Mapping[str, np.ndarray]) -> Dict[str, jax.Array]:
         """Execute every kernel; returns all *materialized* buffers
         (zero-based): pipeline inputs plus one buffer per kernel.  Fused
-        intermediates stay in VMEM and are deliberately absent."""
+        intermediates stay in VMEM and are deliberately absent.
+
+        Inputs are validated against the plan's declared extents up front
+        (and again per kernel by ``KernelGroup.validate_buffers``), so a
+        mis-shaped array raises a clear error naming the buffer and the
+        expected box instead of a cryptic BlockSpec/slice failure inside
+        ``pallas_call``."""
         buffers: Dict[str, jax.Array] = {}
         for name in self.pipeline.inputs:
             if name not in inputs:
-                raise KeyError(f"missing input {name}")
+                raise KeyError(
+                    f"missing input {name!r}; the plan requires "
+                    f"{sorted(self.pipeline.inputs)}"
+                )
             arr = jnp.asarray(inputs[name], jnp.float32)
-            want = self.pipeline.buffer_boxes[name].extents
-            if tuple(arr.shape) != tuple(want):
+            want = tuple(self.pipeline.buffer_boxes[name].extents)
+            if arr.ndim != len(want):
                 raise ValueError(
-                    f"input {name}: shape {arr.shape} != required box {want}"
+                    f"input {name!r}: rank {arr.ndim} (shape "
+                    f"{tuple(arr.shape)}) != plan's declared rank "
+                    f"{len(want)} (extents {want})"
+                )
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"input {name!r}: shape {tuple(arr.shape)} != the "
+                    f"plan's declared extents {want}"
                 )
             buffers[name] = arr
         for ck in self.kernels:

@@ -86,6 +86,7 @@ def plan_affine_stage(
     prefer_stream: bool = True,
     cost: Optional[Callable[[int], float]] = None,
     align_tpu: bool = False,
+    allow_padding: bool = True,
 ) -> int:
     """Pick the block height for a generated stage kernel.
 
@@ -94,32 +95,49 @@ def plan_affine_stage(
     with the block height (blocked input streams + the output panel) and
     ``fixed_bytes`` the resident broadcast views (weights, whole buffers).
 
-    Unlike the named-shape planners above, the extent here comes from a
-    stage's iteration domain, which is rarely a power of two (e.g. 62 for a
-    64-input 3x3 stencil), so candidates are *divisors* of the extent —
-    Pallas grids must tile the array exactly.  ``prefer_stream`` caps the
-    block at a quarter of the extent so pipelines actually exercise the
+    The extent here comes from a stage's iteration domain, which is rarely
+    a power of two (e.g. 62 for a 64-input 3x3 stencil).  Any block height
+    is a candidate: non-divisor blocks run on a *padded grid* of
+    ``ceil(extent / bh)`` steps whose last block hangs past the edge (the
+    backend masks it — see ``backend/plan.PaddedGrid``).  Padding is not
+    free: the tail block is delivered and computed in full, so selection
+    charges each candidate for the rows ``ceil(e/bh)*bh - e`` of padded
+    work.  ``allow_padding=False`` restores the divisor-only candidate set
+    for callers that need exact tiling.  ``prefer_stream`` caps the block
+    at a quarter of the extent so pipelines actually exercise the
     multi-step push schedule instead of degenerating to one giant block.
 
     ``cost`` is the scheduler hook: a map from candidate block height to
-    modeled cycles (see ``backend/plan.scheduler_cost``).  When given, the
-    block height is the cheapest VMEM-fitting candidate instead of simply
-    the largest one; ties break toward the larger block.
+    modeled cycles (see ``backend/plan.scheduler_cost``, which prices the
+    padded tail step like any other step).  When given, the block height is
+    the cheapest VMEM-fitting candidate; ties break toward less padding,
+    then the larger block.  Without a cost hook the choice minimizes grid
+    steps first and padding waste second, which reduces to the old
+    "largest fitting divisor" rule whenever a dividing block can match the
+    step count.
 
     ``align_tpu`` restricts candidates to sublane multiples (8 rows for
-    f32) when any such divisor *fits the budget*, so compiled
-    (non-interpret) TPU mode gets hardware-tileable panels; extents with no
-    aligned fitting divisor fall back to the unaligned choice (interpret
-    mode doesn't care, and the VMEM guarantee always wins over alignment).
+    f32) when any such block fits the budget, so compiled (non-interpret)
+    TPU mode gets hardware-tileable panels; with padding allowed an aligned
+    candidate almost always exists (62 rows -> 8-row blocks on an 8-step
+    padded grid), and the VMEM guarantee always wins over alignment.
     """
-    divisors = [d for d in range(1, grid_extent + 1) if grid_extent % d == 0]
     cap = min(max_bh, grid_extent)
     if prefer_stream and grid_extent > 8:
         cap = min(cap, max(grid_extent // 4, 8))
-    candidates = [d for d in reversed(divisors) if d <= cap] or [1]
+    if allow_padding:
+        candidates = list(range(max(cap, 1), 0, -1))
+    else:
+        candidates = [d for d in range(cap, 0, -1) if grid_extent % d == 0] or [1]
 
     def fits(bh: int) -> bool:
         return 2 * bytes_per_row * bh + fixed_bytes <= vmem_budget
+
+    def steps(bh: int) -> int:
+        return -(-grid_extent // bh)
+
+    def waste(bh: int) -> int:
+        return steps(bh) * bh - grid_extent
 
     fitting = [bh for bh in candidates if fits(bh)]
     if align_tpu:
@@ -128,10 +146,10 @@ def plan_affine_stage(
         if aligned:
             fitting = aligned
     if not fitting:
-        return candidates[-1]
+        return 1
     if cost is None:
-        return fitting[0]
-    return min(fitting, key=lambda bh: (cost(bh), -bh))
+        return min(fitting, key=lambda bh: (steps(bh), waste(bh), -bh))
+    return min(fitting, key=lambda bh: (cost(bh), waste(bh), -bh))
 
 
 def align_tpu_shape(shape: Sequence[int], dtype_bytes: int = 4) -> Tuple[int, ...]:

@@ -14,8 +14,9 @@ from repro.backend import (
     reference_arrays,
     scheduler_cost,
 )
+from repro.backend.golden import GOLDEN_PLAN_SHAPES
 from repro.core.scheduling import raster_cycles
-from repro.core.ubplan import align_tpu_shape, plan_affine_stage
+from repro.core.ubplan import VMEM_BYTES, align_tpu_shape, plan_affine_stage
 from repro.frontend.lower import normalize_pipeline
 
 pytestmark = pytest.mark.backend
@@ -37,14 +38,18 @@ APP_CASES = [
     ("matmul", {"m": 24, "n": 16, "k": 8}),
 ]
 
-# (app kwargs, expected kernels < stages): multi-stage apps the planner must
-# fuse — mirrors the plan assertions repro.backend.demo enforces in CI
+# multi-stage apps the planner must fuse — expectations come from the one
+# golden table (backend/golden.py) that repro.backend.demo also enforces in
+# CI, so plan-shape drift fails in a single place
 FUSED_CASES = [
-    ("harris", {"schedule": "sch3", "size": 20}, 6, 1),
-    ("harris", {"schedule": "sch2", "size": 20}, 3, 1),
-    ("unsharp", {"size": 18}, 4, 1),
-    ("camera", {"size": 8}, 5, 2),       # stride-2 demosaic pins denoise in HBM
-    ("mobilenet", {"img": 8, "cin": 4, "cout": 4}, 2, 1),
+    ("harris", {"schedule": "sch3", "size": 20},
+     *GOLDEN_PLAN_SHAPES[("harris", "sch3")]),
+    ("harris", {"schedule": "sch2", "size": 20},
+     *GOLDEN_PLAN_SHAPES[("harris", "sch2")]),
+    ("unsharp", {"size": 18}, *GOLDEN_PLAN_SHAPES[("unsharp", None)]),
+    ("camera", {"size": 8}, *GOLDEN_PLAN_SHAPES[("camera", None)]),
+    ("mobilenet", {"img": 8, "cin": 4, "cout": 4},
+     *GOLDEN_PLAN_SHAPES[("mobilenet", None)]),
 ]
 
 
@@ -275,39 +280,106 @@ def test_grid_reduction_delivery_metadata():
 # ---------------------------------------------------------------------------
 
 
-def test_plan_affine_stage_divides_extent():
-    for e0 in [1, 2, 8, 30, 60, 62, 64, 96, 128, 1000]:
+def _cdiv(a, b):
+    return -(-a // b)
+
+
+def _bh_candidates(e0, max_bh=256):
+    """Mirror of plan_affine_stage's candidate set (any block up to the
+    streaming cap; padded grids make every height legal)."""
+    cap = min(max_bh, e0)
+    if e0 > 8:
+        cap = min(cap, max(e0 // 4, 8))
+    return range(1, max(cap, 1) + 1)
+
+
+def test_plan_affine_stage_padded_selection():
+    """Default (no cost hook) choice: fewest grid steps the budget allows,
+    then minimal padding waste — which collapses to the old 'largest
+    fitting divisor' rule whenever a divisor can match the step count."""
+    for e0 in [1, 2, 8, 30, 60, 62, 64, 96, 128, 191, 253, 1000]:
         bh = plan_affine_stage(e0, 1024, 0)
-        assert e0 % bh == 0
+        fitting = [c for c in _bh_candidates(e0) if 2 * 1024 * c <= VMEM_BYTES]
+        steps = _cdiv(e0, bh)
+        assert steps == min(_cdiv(e0, c) for c in fitting), (e0, bh)
+        same_steps = [c for c in fitting if _cdiv(e0, c) == steps]
+        assert steps * bh - e0 == min(
+            _cdiv(e0, c) * c - e0 for c in same_steps
+        ), (e0, bh)
         # streaming preference: multi-step grids whenever the extent allows
         if e0 > 8:
-            assert e0 // bh >= 2, (e0, bh)
+            assert steps >= 2, (e0, bh)
+        # divisor-only mode restores exact tiling for callers that need it
+        assert e0 % plan_affine_stage(e0, 1024, 0, allow_padding=False) == 0
 
 
 def test_plan_affine_stage_respects_budget():
     # 1 MiB budget, 64 KiB/row double-buffered -> at most 8 rows
     bh = plan_affine_stage(1024, 64 * 1024, 0, vmem_budget=2 * 1024 * 1024)
     assert 2 * 64 * 1024 * bh <= 2 * 1024 * 1024
-    assert 1024 % bh == 0
+
+
+def test_plan_affine_stage_budget_and_padding_property():
+    """Property sweep (seeded, no hypothesis needed): the chosen block never
+    exceeds the VMEM budget when any candidate fits, stays within [1, e0],
+    and under align_tpu is sublane-aligned whenever an aligned candidate
+    fits.  Among equal-step candidates the padding waste is minimal."""
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        e0 = int(rng.integers(1, 1500))
+        bpr = int(rng.integers(1, 1 << 14))
+        fixed = int(rng.integers(0, 1 << 18))
+        budget = int(rng.integers(1 << 12, 1 << 23))
+        for align in (False, True):
+            bh = plan_affine_stage(
+                e0, bpr, fixed, vmem_budget=budget, align_tpu=align
+            )
+            assert 1 <= bh <= max(e0, 1)
+            fitting = [
+                c for c in _bh_candidates(e0)
+                if 2 * bpr * c + fixed <= budget
+            ]
+            if not fitting:
+                assert bh == 1       # degenerate escape hatch
+                continue
+            assert 2 * bpr * bh + fixed <= budget, (e0, bpr, budget, bh)
+            aligned = [c for c in fitting if c % 8 == 0]
+            pool = aligned if (align and aligned) else fitting
+            steps = _cdiv(e0, bh)
+            same = [c for c in pool if _cdiv(e0, c) == steps]
+            assert steps * bh - e0 == min(_cdiv(e0, c) * c - e0 for c in same)
+            if align and aligned:
+                assert bh % 8 == 0, (e0, bh)
 
 
 def test_plan_affine_stage_cost_hook():
     """The cost hook picks the cheapest fitting candidate (not simply the
     largest), and with the scheduler model the choice is the cycle-count
-    argmin over the divisor candidates."""
+    argmin over every candidate block height (divisor or padded)."""
     e0 = 1024
     heuristic = plan_affine_stage(e0, 256, 0)
     assert heuristic == 256
-    # an arbitrary cost steers the choice away from the heuristic's block
+    # an arbitrary cost steers the choice anywhere in the candidate range —
+    # including non-divisors, now legal via padded grids
     chosen = plan_affine_stage(e0, 256, 0, cost=lambda bh: abs(bh - 12))
-    assert chosen == 16 and chosen != heuristic
+    assert chosen == 12 and chosen != heuristic
     # the scheduler model: chosen block is the modeled-cycles argmin
     cost = scheduler_cost(e0, stmts_per_row=1, latency=4,
                           bytes_per_row=1 << 16, fixed_bytes=0)
     chosen = plan_affine_stage(e0, 256, 0, cost=cost)
-    assert e0 % chosen == 0
-    divisors = [d for d in range(1, e0 + 1) if e0 % d == 0 and d <= heuristic]
-    assert cost(chosen) == min(cost(d) for d in divisors)
+    assert cost(chosen) == min(cost(c) for c in _bh_candidates(e0))
+    # the scheduler model prices padding: on a prime extent the argmin holds
+    # over every candidate, and cost ties break toward less tail waste
+    e0 = 191
+    cost = scheduler_cost(e0, stmts_per_row=1, latency=4,
+                          bytes_per_row=1 << 12, fixed_bytes=0)
+    chosen = plan_affine_stage(e0, 256, 0, cost=cost)
+    cands = list(_bh_candidates(e0))
+    assert cost(chosen) == min(cost(c) for c in cands)
+    tied = [c for c in cands if cost(c) == cost(chosen)]
+    assert _cdiv(e0, chosen) * chosen - e0 == min(
+        _cdiv(e0, c) * c - e0 for c in tied
+    )
 
 
 def test_raster_cycles_matches_scheduler_and_simulator():
@@ -336,9 +408,11 @@ def test_align_tpu():
     # a sublane-multiple divisor exists -> it is chosen
     bh = plan_affine_stage(64, 1024, 0, align_tpu=True)
     assert bh % 8 == 0 and 64 % bh == 0
-    # no aligned divisor (62 = 2 * 31) -> fall back to the unaligned choice
-    assert plan_affine_stage(62, 1024, 0, align_tpu=True) == plan_affine_stage(62, 1024, 0)
-    # aligned divisors exist but none fits the budget -> the VMEM guarantee
+    # no aligned *divisor* (62 = 2 * 31): padded grids make an aligned
+    # block legal anyway — 8-row panels on a ceil(62/8)=8-step masked grid
+    bh = plan_affine_stage(62, 1024, 0, align_tpu=True)
+    assert bh == 8 and 62 % bh != 0
+    # aligned blocks exist but none fits the budget -> the VMEM guarantee
     # wins: the unaligned fitting block is returned, not an oversized panel
     bh = plan_affine_stage(64, 8 << 20, 0, vmem_budget=64 << 20, align_tpu=True)
     assert bh == 4 and 2 * (8 << 20) * bh <= 64 << 20
@@ -353,6 +427,11 @@ def test_align_tpu():
 def test_align_tpu_threads_through_pipeline():
     app = make_app("gaussian")               # 62 rows: no aligned divisor
     pp = compile_pipeline(app.pipeline, align_tpu=True)
+    ck = pp.kernels[0]
+    # padded grids let alignment win even without an aligned divisor: the
+    # sublane-multiple panel runs on a masked ceil-division grid
+    assert ck.bh % 8 == 0
+    assert ck.padded_grid is not None and ck.grid[0] * ck.bh >= 62
     assert max(max_abs_error(pp, _inputs(app)).values()) == 0.0
     app64 = make_app("upsample", size=64)     # 64 rows: aligned divisor exists
     pp64 = compile_pipeline(app64.pipeline, align_tpu=True)
@@ -435,3 +514,168 @@ def test_block_h_override():
     assert cs.bh == 4 and cs.grid == (4,)
     errs = max_abs_error(pp, _inputs(app))
     assert max(errs.values()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Padded grids (arbitrary extents / non-divisor blocks)
+# ---------------------------------------------------------------------------
+
+# one padded-grid plan per paper app (plus matmul): prime-ish extents or a
+# non-divisor block_h force grid = ceil(e0/bh) with a masked tail block
+PADDED_CASES = [
+    ("gaussian", {"size": 13}, {}),                    # 11 rows (prime)
+    ("harris", {"schedule": "sch3", "size": 17}, {}),  # 13 rows, fused x6
+    ("harris", {"schedule": "sch6", "size": 17}, {}),  # host stage rides along
+    ("upsample", {"size": 11}, {}),
+    ("unsharp", {"size": 15}, {}),                     # 13 rows, fused x4
+    ("camera", {"size": 7}, {"block_h": 3}),           # force the ragged edge
+    # resnet's blocked dim is the channel dim co (extent 3): 2-channel
+    # panels leave a 1-channel masked tail
+    ("resnet", {"img": 7, "cin": 3, "cout": 3}, {"block_h": 2}),
+    ("mobilenet", {"img": 7, "cin": 4, "cout": 4}, {"block_h": 3}),
+    ("matmul", {"m": 19, "n": 13, "k": 11}, {}),
+]
+
+
+@pytest.mark.parametrize(
+    "name,kw,ckw", PADDED_CASES,
+    ids=[f"{c[0]}-{i}" for i, c in enumerate(PADDED_CASES)],
+)
+def test_padded_grid_matches_reference(name, kw, ckw):
+    """Every paper app compiles and validates on a padded-grid plan: at
+    least one kernel's grid dim 0 is a ceil-division over the extent, with
+    the masked tail keeping every materialized buffer correct."""
+    app = make_app(name, **kw)
+    pp = compile_pipeline(app.pipeline, **ckw)
+    padded = [ck for ck in pp.kernels if ck.padded_grid is not None]
+    assert padded, [(ck.name, ck.bh, ck.grid) for ck in pp.kernels]
+    for ck in padded:
+        pg = ck.padded_grid
+        assert ck.grid[0] == -(-pg.extent // pg.block) == pg.steps
+        assert 0 < pg.pad < pg.block
+        assert ck.kg.e0 == pg.extent
+    errs = max_abs_error(pp, _inputs(app))
+    assert max(errs.values()) <= TOL, errs
+
+
+def test_padded_grid_bit_exact_on_integer_inputs():
+    """Masking is exact, not approximate: padded plans of dyadic-exact apps
+    stay *bit*-equal to the f64 reference on integer inputs."""
+    for name, kw, ckw in [
+        ("gaussian", {"size": 13}, {}),
+        ("gaussian", {"size": 18}, {"block_h": 5}),   # 16 rows, 4x5 panels
+        ("upsample", {"size": 11}, {}),
+        ("matmul", {"m": 19, "n": 13, "k": 11}, {}),
+        ("resnet", {"img": 7, "cin": 3, "cout": 3}, {"block_h": 2}),
+    ]:
+        app = make_app(name, **kw)
+        pp = compile_pipeline(app.pipeline, **ckw)
+        assert any(ck.padded_grid is not None for ck in pp.kernels), name
+        inputs = _inputs(app)
+        got = np.asarray(pp(inputs), np.float64)
+        want = reference_arrays(app.pipeline, inputs)[app.pipeline.output]
+        assert np.array_equal(got, want), name
+
+
+def test_padded_grid_fused_scratch():
+    """Fusion survives padding: the unsharp chain stays one kernel on a
+    prime extent, VMEM scratch intermediates and all."""
+    app = make_app("unsharp", size=15)      # 13 output rows
+    pp = compile_pipeline(app.pipeline)
+    assert pp.plan.n_kernels == 1
+    ck = pp.kernels[0]
+    assert ck.fused and ck.padded_grid is not None
+    assert ck.kg.scratch_entries()
+    errs = max_abs_error(pp, _inputs(app))
+    assert max(errs.values()) <= TOL, errs
+
+
+def test_padded_grid_metadata_threaded():
+    """Valid-extent metadata rides the plan: view groups record the valid
+    blocked-axis span, stage plans expose per-step valid rows, and the
+    unified-buffer notes carry the padded-grid decision."""
+    app = make_app("gaussian", size=13)     # 11 rows
+    pp = compile_pipeline(app.pipeline)
+    ck = pp.stage("gaussian")
+    pg = ck.padded_grid
+    assert pg is not None and pg.extent == 11
+    for g in ck.groups:
+        assert g.blocked_axis is not None and g.valid0 == 11
+    sp = ck.kg.output
+    assert sp.valid_e0 == 11
+    rows = [sp.valid_rows(ck.bh, s) for s in range(pg.steps)]
+    assert sum(rows) == 11 and rows[-1] == ck.bh - pg.pad
+    assert ck.plan.notes.get("padded_grid") == (pg.extent, pg.block, pg.steps)
+
+
+def test_grid_reduction_masked_tail_k1000():
+    """Regression: non-power-of-two K chunks as ceil(K/128) grid steps with
+    a masked tail (K=1000 -> 7x128 + 104), bit-exact on integer inputs —
+    the padded tail terms contribute exactly zero to the accumulator."""
+    app = make_app("matmul", m=16, n=16, k=1000)
+    pp = compile_pipeline(app.pipeline)     # default threshold 256
+    ck = pp.kernels[0]
+    rg = ck.red_grid
+    assert rg is not None and rg.chunk == 128
+    assert rg.steps == 8 and rg.extent == 1000
+    assert rg.padded and rg.tail == 104
+    assert ck.grid[1] == 8
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 8, (16, 1000)).astype(np.float32)
+    b = rng.integers(0, 8, (1000, 16)).astype(np.float32)
+    out = np.asarray(pp({"A": a, "B": b}), np.float64)
+    want = a.astype(np.float64) @ b.astype(np.float64)
+    assert np.array_equal(out, want)
+
+
+def test_grid_reduction_masked_tail_with_padded_rows():
+    """Both ragged edges at once: prime M (padded row panels) and
+    non-multiple K (masked reduction tail) in one kernel."""
+    app = make_app("matmul", m=19, n=13, k=300)
+    pp = compile_pipeline(app.pipeline, red_grid_threshold=128, block_h=4)
+    ck = pp.kernels[0]
+    assert ck.padded_grid is not None and ck.red_grid is not None
+    assert ck.red_grid.padded
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 8, (19, 300)).astype(np.float32)
+    b = rng.integers(0, 8, (300, 13)).astype(np.float32)
+    out = np.asarray(pp({"A": a, "B": b}), np.float64)
+    want = a.astype(np.float64) @ b.astype(np.float64)
+    assert np.array_equal(out, want)
+
+
+# ---------------------------------------------------------------------------
+# Runner input validation
+# ---------------------------------------------------------------------------
+
+
+def test_runner_validates_input_shapes():
+    """Mis-shaped inputs raise a clear, named error at the runner boundary
+    instead of a cryptic BlockSpec/slice failure inside pallas_call."""
+    app = make_app("gaussian", size=18)
+    pp = compile_pipeline(app.pipeline)
+    inputs = _inputs(app)
+
+    with pytest.raises(KeyError, match="missing input 'input'"):
+        pp.run({})
+
+    bad = {"input": inputs["input"][:-1]}          # 17x18 instead of 18x18
+    with pytest.raises(ValueError, match=r"input 'input'.*declared extents"):
+        pp.run(bad)
+
+    with pytest.raises(ValueError, match=r"rank"):
+        pp.run({"input": inputs["input"][0]})      # 1-D instead of 2-D
+
+
+def test_kernel_validates_view_extents():
+    """Direct CompiledKernel calls validate every view's backing buffer
+    against the plan's required extents (buffer, axis, and need named)."""
+    app = make_app("gaussian", size=18)
+    pp = compile_pipeline(app.pipeline)
+    ck = pp.stage("gaussian")
+    need = ck.kg.required_extents()
+    assert need == {"input": (18, 18)}
+    with pytest.raises(ValueError, match=r"buffer 'input' axis 0.*>= 18"):
+        ck({"input": np.zeros((17, 18), np.float32)})
+    with pytest.raises(KeyError, match="missing input buffer 'input'"):
+        ck({})
