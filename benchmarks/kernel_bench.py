@@ -113,6 +113,48 @@ def backend_rows() -> list:
             "kernels": pp_f.plan.n_kernels, "stages": pp_f.plan.n_stages,
         })
 
+    # cross-grid-step line buffers vs recompute fusion: same kernels, each
+    # intermediate row computed once and carried, shifted input views
+    # collapsed to one stream + a pinned warm-up view.  eval_rows is the
+    # FLOP proxy (stage rows evaluated per invocation), hbm_kib the traffic
+    for name, kw, case in [
+        ("unsharp", {}, "64x64-cascade"),
+        ("harris", {"schedule": "sch3", "size": 36}, "32x32-cascade"),
+        ("camera", {"size": 16}, "32x32-isp"),
+        ("gaussian", {}, "64x64-stencil"),
+    ]:
+        app = make_app(name, **kw)
+        pp_lb = compile_pipeline(app.pipeline, line_buffer=True)
+        pp_rc = compile_pipeline(app.pipeline, line_buffer=False)
+        inputs = {
+            nm: rng.integers(0, 64, s).astype(np.float32)
+            for nm, s in app.input_extents.items()
+        }
+        got_lb, lb_us = timed_run(pp_lb, inputs)
+        got_rc, rc_us = timed_run(pp_rc, inputs)
+        errs = max_abs_error(pp_lb, inputs, got=got_lb)
+        vs_rc = float(np.max(np.abs(
+            np.asarray(got_lb[pp_lb.pipeline.output])
+            - np.asarray(got_rc[pp_rc.pipeline.output])
+        )))
+        rows.append({
+            "kernel": f"{name}_linebuf", "case": case,
+            "baseline": "recompute-fusion",
+            "us_generated": round(lb_us), "us_baseline": round(rc_us),
+            "max_err_ref": max(errs.values()), "max_err_vs_baseline": vs_rc,
+            "grid": [list(ck.grid) for ck in pp_lb.kernels],
+            "vmem_kib": sum(ck.plan.vmem_bytes for ck in pp_lb.kernels) // 1024,
+            "hbm_kib": pp_lb.plan.hbm_bytes() // 1024,
+            "hbm_kib_baseline": pp_rc.plan.hbm_bytes() // 1024,
+            "eval_rows": pp_lb.plan.total_eval_rows(),
+            "eval_rows_baseline": pp_rc.plan.total_eval_rows(),
+            "linebuf": sorted(
+                nm for ns in pp_lb.plan.line_buffered.values() for nm in ns
+            ),
+            "rings": pp_lb.plan.n_rings,
+            "kernels": pp_lb.plan.n_kernels, "stages": pp_lb.plan.n_stages,
+        })
+
     # grid-level reduction vs full in-kernel unrolling (large-K matmul)
     m, n, k = 16, 16, 512
     app = make_app("matmul", m=m, n=n, k=k)
@@ -134,6 +176,24 @@ def backend_rows() -> list:
         "hbm_kib": pp_g.plan.hbm_bytes() // 1024,
         "hbm_kib_baseline": pp_u.plan.hbm_bytes() // 1024,
         "red_chunk": ck.red_grid.chunk if ck.red_grid else None,
+    })
+
+    # resident broadcast operand vs per-panel chunk refetch (the README
+    # "Known limits" bug): B stays whole in VMEM, fetched once, instead of
+    # re-walking its chunk sequence on every row panel.  pp_g above is the
+    # resident plan already (red_resident defaults on), so only the
+    # refetch twin needs building
+    pp_ref = compile_pipeline(app.pipeline, red_resident=False)   # refetch
+    _, ref_us = timed(lambda: pp_ref({"A": a, "B": b}))
+    rows.append({
+        "kernel": "matmul_gridred_resident", "case": f"{m}x{n}x{k}",
+        "baseline": "chunk-refetch",
+        "us_generated": round(grid_us), "us_baseline": round(ref_us),
+        "max_err_ref": err_ref, "max_err_vs_baseline": None,
+        "grid": list(ck.grid), "vmem_kib": ck.plan.vmem_bytes // 1024,
+        "hbm_kib": pp_g.plan.hbm_bytes() // 1024,
+        "hbm_kib_baseline": pp_ref.plan.hbm_bytes() // 1024,
+        "resident": [g.buffer for g in ck.groups if g.resident],
     })
     return rows
 
@@ -200,11 +260,13 @@ def main() -> None:
     plan = plan_ssd(s_, h_, p_, n_)
     print(f"ssd,s{s_}h{h_}p{p_}n{n_},{dt:.0f},{err:.2e},{plan.grid},{plan.vmem_bytes//1024}")
 
-    # generated backend kernels vs baselines (hand-written / unfused / unrolled)
+    # generated backend kernels vs baselines (hand-written / unfused /
+    # recompute-fusion / unrolled / chunk-refetch)
     print()
     print(
         "kernel,case,baseline,us_generated,us_baseline,max_err_ref,"
-        "max_err_vs_baseline,grid,vmem_kib,hbm_kib,hbm_kib_baseline"
+        "max_err_vs_baseline,grid,vmem_kib,hbm_kib,hbm_kib_baseline,"
+        "eval_rows,eval_rows_baseline"
     )
     for r in backend_rows():
         base = r["us_baseline"] if r["us_baseline"] is not None else "-"
@@ -213,10 +275,13 @@ def main() -> None:
             if r["max_err_vs_baseline"] is not None else "-"
         )
         hbm_b = r["hbm_kib_baseline"] if r["hbm_kib_baseline"] is not None else "-"
+        ev = r.get("eval_rows", "-")
+        ev_b = r.get("eval_rows_baseline", "-")
         print(
             f"backend_{r['kernel']},{r['case']},{r['baseline']},"
             f"{r['us_generated']},{base},{r['max_err_ref']:.2e},{vs},"
-            f"\"{r['grid']}\",{r['vmem_kib']},{r['hbm_kib']},{hbm_b}"
+            f"\"{r['grid']}\",{r['vmem_kib']},{r['hbm_kib']},{hbm_b},"
+            f"{ev},{ev_b}"
         )
 
 

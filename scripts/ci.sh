@@ -11,17 +11,22 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--backend" ]]; then
     # the Stage->Pallas plan/emit suite on its own (marker-gated), then the
-    # differential shape-sweep harness: >=200 deterministic (app, extent,
-    # dtype, fusion, block) cases against the reference interpreter,
-    # including padded grids / masked tails on non-divisor extents.  The
-    # sweep is seeded (tests/conftest.SWEEP_SEED) and any hypothesis layer
-    # runs derandomized under the registered "sweep" profile, so CI replays
-    # the identical case list every run.  Finally the fusion smoke path:
-    # compile paper apps through lower -> plan -> Pallas (interpret mode),
-    # diff against the reference interpreter, and assert the plan shape
-    # against the golden table (fused kernel counts, grid reduction for
-    # big K)
+    # cross-grid-step line-buffer suite (carry-vs-recompute properties,
+    # exactly-once eval counters, resident grid-reduction operands), then
+    # the differential shape-sweep harness: >=200 deterministic (app,
+    # extent, dtype, fusion, block, linebuf) cases against the reference
+    # interpreter, including padded grids / masked tails on non-divisor
+    # extents, with every carrying plan also diffed bit-exactly against its
+    # recompute-fusion twin.  The sweep is seeded (tests/conftest.
+    # SWEEP_SEED) and any hypothesis layer runs derandomized under the
+    # registered "sweep" profile, so CI replays the identical case list
+    # every run.  Finally the fusion smoke path: compile paper apps through
+    # lower -> plan -> Pallas (interpret mode), diff against the reference
+    # interpreter, and assert the plan shape against the golden table
+    # (fused kernel counts, line-buffer decisions + their traffic and
+    # recompute deltas, grid reduction for big K)
     python -m pytest -q -m backend
+    python -m pytest -q -m linebuf
     HYPOTHESIS_PROFILE=sweep python -m pytest -q -m sweep
     python -m repro.backend.demo --smoke
     exit 0

@@ -14,9 +14,11 @@ from .codegen import CompiledKernel, CompiledStage, compile_stage, emit_kernel
 from .plan import (
     FusionInfeasible,
     KernelGroup,
+    LineBuffer,
     PaddedGrid,
     PipelinePlan,
     RedGrid,
+    RingStream,
     StagePlan,
     ViewGroup,
     build_pipeline_plan,
@@ -41,9 +43,11 @@ __all__ = [
     "emit_kernel",
     "FusionInfeasible",
     "KernelGroup",
+    "LineBuffer",
     "PaddedGrid",
     "PipelinePlan",
     "RedGrid",
+    "RingStream",
     "StagePlan",
     "build_pipeline_plan",
     "scheduler_cost",

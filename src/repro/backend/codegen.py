@@ -51,6 +51,15 @@ from .plan import (
     _stream_ok,
 )
 
+# sentinel scratch-dict key space for input ring buffers (cannot collide
+# with (stage name, shift) keys)
+_RING = object()
+
+# test instrumentation: when set to a list, every panel/warm-up evaluation
+# site records {kernel, stage, shift, rows, when} as the kernel function is
+# traced — the eval counter behind the computed-exactly-once property tests
+EVAL_TRACE: Optional[List[Dict]] = None
+
 
 # ---------------------------------------------------------------------------
 # Per-stage emission context
@@ -58,7 +67,12 @@ from .plan import (
 
 
 class _StageCtx:
-    """Emission context for one stage inside a kernel."""
+    """Emission context for one stage inside a kernel.
+
+    ``rows`` is the leading (blocked-dim) extent of the evaluation: the
+    full panel height by default, or the halo row count for a line-buffer
+    warm-up evaluation (``with_rows``), which evaluates only the first
+    ``rows`` rows of a shift's panel."""
 
     def __init__(self, kg: KernelGroup, sp: StagePlan):
         self.kg = kg
@@ -69,11 +83,26 @@ class _StageCtx:
         self.d0 = sp.d0
         self.pure_pos = {d: i for i, d in enumerate(sp.nstage.pure_dims)}
         self.block_shape = sp.panel_shape(kg.bh)
+        self.rows = self.block_shape[0] if self.streamed else None
         self.lower = dict(sp.nstage.dim_lower)
+        # grid positions, assigned once at the top of the kernel body: in
+        # interpret mode ``pl.program_id`` cannot be bound inside a
+        # ``pl.when`` branch, so every use site reads these hoisted values
+        self.step0 = 0
+        self.stepk = 0
+
+    def with_rows(self, rows: int) -> "_StageCtx":
+        """A copy evaluating only the first ``rows`` rows of the panel."""
+        import copy
+
+        out = copy.copy(self)
+        out.rows = rows
+        out.block_shape = (rows,) + tuple(self.block_shape[1:])
+        return out
 
     def extent(self, dim: str) -> int:
         if dim == self.d0 and self.streamed:
-            return self.bh
+            return self.rows
         return self.nstage.extent(dim)
 
     def row_mask(self):
@@ -89,7 +118,7 @@ class _StageCtx:
         # delivers pg.extent valid blocked-axis elements — the kernel
         # output's extent, which also bounds each fused stage's demand
         rows = jax.lax.broadcasted_iota(jnp.int32, self.block_shape, 0)
-        return rows + pl.program_id(0) * self.bh < pg.extent
+        return rows + self.step0 * self.bh < pg.extent
 
     def red_ranges(self) -> List[range]:
         rg = self.kg.red_grid
@@ -107,8 +136,9 @@ def _tap(
     rho: Mapping[str, int],
     shift: int,
 ):
-    """Extract one load's value lattice — from a delivered view block or an
-    in-kernel scratch panel — and align it with the stage's output block
+    """Extract one load's value lattice — from a delivered view block, a
+    cross-grid-step ring (input delivery or line-buffered intermediate), or
+    an in-kernel scratch panel — and align it with the stage's output block
     (transpose + broadcast axes)."""
     sp = ctx.sp
     la = sp.accesses[load_idx]
@@ -117,10 +147,18 @@ def _tap(
     if sp.load_kind[load_idx] == "scratch":
         pname = sp.scratch_producer[load_idx]
         slot = la.axes[0].offset_at(rho) + shift
-        block = scratch[(pname, slot)][...]
+        plb = ctx.kg.stage_plan(pname).line_buffer
+        if plb is not None:
+            # line-buffered producer: the per-shift panel lives at rows
+            # [slot - lo, slot - lo + bh) of the persistent ring
+            block = scratch[(pname, None)][...]
+            lead: object = slice(slot - plb.lo, slot - plb.lo + ctx.rows)
+        else:
+            block = scratch[(pname, slot)][...]
+            lead = slice(None) if ctx.rows == ctx.bh else slice(0, ctx.rows)
         for j, ax in enumerate(la.axes):
             if j == 0:
-                idx.append(slice(None))             # full panel: the blocked dim
+                idx.append(lead)                    # the blocked dim
                 tags.append(ctx.d0)
             elif ax.pure_dim is not None:
                 ep = ctx.extent(ax.pure_dim)
@@ -132,19 +170,43 @@ def _tap(
     else:
         j0 = sp.blocked_axis_of[load_idx]
         key = (shift, la.axes[j0].offset_at(rho)) if j0 is not None else (shift, None)
-        g = ctx.kg.groups[sp.view_binding[load_idx][key]]
-        block = refs[sp.view_binding[load_idx][key]][...]
-        for j, ax in enumerate(la.axes):
-            if j0 is not None and j == j0:
-                idx.append(slice(None))             # full panel: the blocked dim
-                tags.append(ctx.d0)
-            elif ax.pure_dim is not None:
-                ep = ctx.extent(ax.pure_dim)
-                start = ax.offset_at(rho) - g.base[j]
-                idx.append(slice(start, start + ax.stride * (ep - 1) + 1, ax.stride))
-                tags.append(ax.pure_dim)
-            else:
-                idx.append(ax.offset_at(rho) - g.base[j])
+        ring_hit = sp.ring_binding[load_idx].get(key) if sp.ring_binding else None
+        if ring_hit is not None:
+            # ring-delivered input: this tap's window starts t0 lattice rows
+            # into the ring, which the emitter keeps aligned with the grid
+            r_idx, t0 = ring_hit
+            ring = ctx.kg.rings[r_idx]
+            block = scratch[(_RING, r_idx)][...]
+            for j, ax in enumerate(la.axes):
+                if j == j0:
+                    idx.append(slice(t0, t0 + ctx.rows))
+                    tags.append(ctx.d0)
+                elif ax.pure_dim is not None:
+                    ep = ctx.extent(ax.pure_dim)
+                    start = ax.offset_at(rho) - ring.base[j]
+                    idx.append(slice(start, start + ax.stride * (ep - 1) + 1, ax.stride))
+                    tags.append(ax.pure_dim)
+                else:
+                    idx.append(ax.offset_at(rho) - ring.base[j])
+        else:
+            g = ctx.kg.groups[sp.view_binding[load_idx][key]]
+            block = refs[sp.view_binding[load_idx][key]][...]
+            for j, ax in enumerate(la.axes):
+                if j0 is not None and j == j0:
+                    idx.append(slice(None) if ctx.rows == ctx.bh else slice(0, ctx.rows))
+                    tags.append(ctx.d0)
+                elif j == g.red_axis and g.resident:
+                    # whole operand resident in VMEM: index the global
+                    # reduction position (grid chunk * chunk + in-chunk rho)
+                    rg = ctx.kg.red_grid
+                    idx.append(ctx.stepk * rg.chunk + ax.offset_at(rho) - g.base[j])
+                elif ax.pure_dim is not None:
+                    ep = ctx.extent(ax.pure_dim)
+                    start = ax.offset_at(rho) - g.base[j]
+                    idx.append(slice(start, start + ax.stride * (ep - 1) + 1, ax.stride))
+                    tags.append(ax.pure_dim)
+                else:
+                    idx.append(ax.offset_at(rho) - g.base[j])
     tap = block[tuple(idx)]
     order = sorted(range(len(tags)), key=lambda t: ctx.pure_pos[tags[t]])
     if order != list(range(len(tags))):
@@ -172,13 +234,13 @@ def _emit(
         if e.name in ctx.nstage.red_dims:
             rg = ctx.kg.red_grid
             if rg is not None and e.name == rg.dim:
-                k = pl.program_id(len(ctx.kg.grid) - 1)
+                k = ctx.stepk
                 return (k * rg.chunk + rho[e.name] + lo).astype(jnp.float32)
             return float(rho[e.name] + lo)
         ax = ctx.pure_pos[e.name]
         iota = jax.lax.broadcasted_iota(jnp.int32, ctx.block_shape, ax)
         if ctx.streamed and ax == 0:
-            iota = iota + pl.program_id(0) * ctx.bh + shift
+            iota = iota + ctx.step0 * ctx.bh + shift
         return (iota + lo).astype(jnp.float32)
     if isinstance(e, FuncRef):
         k = counter[0]
@@ -218,8 +280,18 @@ def _emit(
     raise UnsupportedAccessError(f"cannot compile {e!r}")
 
 
-def _stage_panel(ctx: _StageCtx, refs, scratch, shift: int):
-    """One stage's panel value at ``shift`` (in-kernel reductions unrolled)."""
+def _stage_panel(ctx: _StageCtx, refs, scratch, shift: int, when: str = "every"):
+    """One stage's panel value at ``shift`` (in-kernel reductions unrolled).
+    ``when`` tags which grid steps execute this evaluation site ("every" or
+    "step0") for the eval-trace instrumentation."""
+    if EVAL_TRACE is not None:
+        EVAL_TRACE.append({
+            "kernel": ctx.kg.name,
+            "stage": ctx.sp.name,
+            "shift": shift,
+            "rows": ctx.rows if ctx.rows is not None else ctx.block_shape[0],
+            "when": when,
+        })
     ns = ctx.nstage
     if ns.red_dims:
         acc = _emit(ns.init, ctx, refs, scratch, {}, shift, [0])
@@ -290,6 +362,14 @@ class CompiledKernel:
         return self.kg.padded_grid
 
     @property
+    def rings(self):
+        return self.kg.rings
+
+    @property
+    def line_buffered(self) -> Tuple[str, ...]:
+        return self.kg.line_buffered
+
+    @property
     def block(self) -> Tuple[int, ...]:
         return self.kg.output.panel_shape(self.kg.bh)
 
@@ -336,6 +416,22 @@ class CompiledKernel:
         if rg is not None:
             rho = dict(rho)
             rho[rg.dim] = point[rg.dim] % rg.chunk
+        ring_hit = self._ring_of(load_idx, rho)
+        if ring_hit is not None:
+            # ring-delivered tap: ring lattice row c maps to buffer element
+            # lo + stride0 * c, and this tap starts t0 rows into the ring
+            r_idx, t0 = ring_hit
+            ring = self.kg.rings[r_idx]
+            elem = []
+            for j, ax in enumerate(la.axes):
+                if j == ring.axis:
+                    elem.append(ring.lo + ring.stride0 * (t0 + point[d0]))
+                else:
+                    e = ax.offset_at(rho)
+                    if ax.pure_dim is not None:
+                        e += ax.stride * point[ax.pure_dim]
+                    elem.append(e)
+            return tuple(elem)
         g = self._group_of(load_idx, rho)
         slices = g.view_slices(self.kg.e0)
         block_shape = g.block_shape(self.bh)
@@ -350,6 +446,10 @@ class CompiledKernel:
         for j, ax in enumerate(la.axes):
             if j == g.blocked_axis:
                 local = point[d0] % self.bh            # full-panel tap
+            elif j == g.red_axis and g.resident:
+                # resident operand: the kernel indexes the global reduction
+                # position, not the in-chunk offset
+                local = ax.offset_at({**rho, rg.dim: point[rg.dim]}) - g.base[j]
             elif ax.pure_dim is not None:
                 local = (ax.offset_at(rho) - g.base[j]) + ax.stride * point[ax.pure_dim]
             else:
@@ -358,22 +458,46 @@ class CompiledKernel:
             elem.append(slices[j].start + (slices[j].step or 1) * t)
         return tuple(elem)
 
+    def _ring_of(
+        self, load_idx: int, rho: Mapping[str, int]
+    ) -> Optional[Tuple[int, int]]:
+        sp = self.kg.output
+        if not sp.ring_binding:
+            return None
+        la = sp.accesses[load_idx]
+        j0 = sp.blocked_axis_of[load_idx]
+        key = (0, la.axes[j0].offset_at(rho)) if j0 is not None else (0, None)
+        return sp.ring_binding[load_idx].get(key)
+
     def delivered_interval(
         self, load_idx: int, axis_j: int, grid_step: int, rho: Mapping[str, int]
     ) -> Tuple[int, int, int]:
-        """(lo, hi, step) of producer elements the BlockSpec delivers on
-        ``axis_j`` at ``grid_step`` for this load."""
+        """(lo, hi, step) of producer elements available in VMEM on
+        ``axis_j`` at ``grid_step`` for this load: the BlockSpec's delivered
+        block, or the ring's coverage for ring-delivered taps."""
         if self.kg.fused:
             raise NotImplementedError("delivered_interval covers unfused kernels only")
         rg = self.kg.red_grid
         rho_l = dict(rho)
         if rg is not None and rg.dim in rho_l:
             rho_l[rg.dim] = rho[rg.dim] % rg.chunk
+        ring_hit = self._ring_of(load_idx, rho_l)
+        if ring_hit is not None:
+            ring = self.kg.rings[ring_hit[0]]
+            if axis_j == ring.axis:
+                lo = ring.lo + ring.stride0 * grid_step * self.bh
+                hi = ring.lo + ring.stride0 * (
+                    grid_step * self.bh + self.bh + ring.halo - 1
+                )
+                return lo, hi, ring.stride0
+            return ring.base[axis_j], ring.base[axis_j] + ring.span[axis_j] - 1, 1
         g = self._group_of(load_idx, rho_l)
         if axis_j == g.blocked_axis:
             lo = g.k0 + g.stride0 * grid_step * self.bh
             return lo, lo + g.stride0 * (self.bh - 1), g.stride0
         if axis_j == g.red_axis:
+            if g.resident:
+                return g.base[axis_j], g.base[axis_j] + g.span[axis_j] - 1, 1
             lo = (rho[rg.dim] // rg.chunk) * rg.chunk
             return lo, lo + rg.chunk - 1, 1
         return g.base[axis_j], g.base[axis_j] + g.span[axis_j] - 1, 1
@@ -393,19 +517,77 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
     def kernel(*args):
         refs = args[:n_groups]
         out_ref = args[n_groups]
-        scratch = {
-            (sp.name, s): ref
-            for (sp, s), ref in zip(scratch_entries, args[n_groups + 1:])
-        }
-        # fused intermediates: one panel per demanded shift, topo order
-        for sp, s in scratch_entries:
+        pos = n_groups + 1
+        scratch: Dict[object, object] = {}
+        for (sp, key), ref in zip(scratch_entries, args[pos:pos + len(scratch_entries)]):
+            scratch[(sp.name, key)] = ref
+        pos += len(scratch_entries)
+        for r_idx, ref in enumerate(args[pos:pos + len(kg.rings)]):
+            scratch[(_RING, r_idx)] = ref
+        bh = kg.bh
+        i0 = pl.program_id(0)
+        kprog = pl.program_id(n_grid - 1) if n_grid > 1 else 0
+        for ctx in ctxs.values():
+            ctx.step0 = i0
+            ctx.stepk = kprog
+        # under a grid reduction the reduction chunk (last grid dim) varies
+        # fastest: ring maintenance must run once per row panel, on chunk 0
+        kfirst = kprog == 0 if n_grid > 1 else None
+
+        def _guard(cond):
+            return cond if kfirst is None else jnp.logical_and(cond, kfirst)
+
+        # input delivery rings: rotate the carried halo, land the new block
+        for r_idx, ring in enumerate(kg.rings):
+            ref = scratch[(_RING, r_idx)]
+            halo = ring.halo
+
+            @pl.when(_guard(i0 > 0))
+            def _carry(ref=ref, halo=halo):
+                ref[0:halo] = ref[bh:bh + halo]
+
+            @pl.when(_guard(i0 == 0))
+            def _warmup(ref=ref, halo=halo, pi=ring.prefix):
+                ref[0:halo] = refs[pi][...]
+
+            if kfirst is None:
+                ref[halo:halo + bh] = refs[ring.steady][...]
+            else:
+                @pl.when(kfirst)
+                def _steady(ref=ref, halo=halo, si=ring.steady):
+                    ref[halo:halo + bh] = refs[si][...]
+
+        # fused intermediates, topo order: a line-buffered stage rotates its
+        # ring and computes exactly bh new rows (the shift-hi panel), with a
+        # one-time halo warm-up on step 0; a recompute-mode stage evaluates
+        # one panel per demanded shift
+        for sp, key in scratch_entries:
             ctx = ctxs[sp.name]
-            scratch[(sp.name, s)][...] = _stage_panel(ctx, refs, scratch, s)
+            if key is None:
+                lb = sp.line_buffer
+                halo = lb.halo
+                ref = scratch[(sp.name, None)]
+
+                @pl.when(i0 > 0)
+                def _rotate(ref=ref, halo=halo):
+                    ref[0:halo] = ref[bh:bh + halo]
+
+                pctx = ctx.with_rows(halo)
+
+                @pl.when(i0 == 0)
+                def _warm(ref=ref, pctx=pctx, lo=lb.lo, halo=halo):
+                    ref[0:halo] = _stage_panel(
+                        pctx, refs, scratch, lo, when="step0"
+                    )
+
+                ref[halo:halo + bh] = _stage_panel(ctx, refs, scratch, lb.hi)
+            else:
+                scratch[(sp.name, key)][...] = _stage_panel(ctx, refs, scratch, key)
         ns = out_sp.nstage
         if rg is not None:
             # grid-level reduction: accumulate into the revisited output
             # block, element update order identical to the unrolled path
-            k = pl.program_id(n_grid - 1)
+            k = kprog
             init = _emit(ns.init, out_ctx, refs, scratch, {}, 0, [0])
             mask = out_ctx.row_mask()
 
@@ -438,6 +620,12 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
             out_ref[...] = _stage_panel(out_ctx, refs, scratch, 0).astype(
                 out_ref.dtype
             )
+        # drop the hoisted grid-position tracers: the ctxs outlive the trace
+        # (they hang off the CompiledKernel), and retaining tracers would
+        # pin the trace's object graph and leak into later introspection
+        for ctx in ctxs.values():
+            ctx.step0 = 0
+            ctx.stepk = 0
 
     in_specs = [
         pl.BlockSpec(g.block_shape(kg.bh), g.index_map(n_grid)) for g in kg.groups
@@ -450,10 +638,12 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
     out_spec = pl.BlockSpec(out_ctx.block_shape, out_index)
     out_shape = jax.ShapeDtypeStruct(tuple(out_sp.nstage.pure_extents), jnp.float32)
     call_kwargs: Dict[str, object] = {}
-    if scratch_entries:
+    if scratch_entries or kg.rings:
         call_kwargs["scratch_shapes"] = [
-            pltpu.VMEM(sp.panel_shape(kg.bh), jnp.float32)
-            for sp, _ in scratch_entries
+            pltpu.VMEM(sp.scratch_shape(kg.bh, key), jnp.float32)
+            for sp, key in scratch_entries
+        ] + [
+            pltpu.VMEM(r.ring_shape(kg.bh), jnp.float32) for r in kg.rings
         ]
     e0 = kg.e0
 
@@ -492,6 +682,8 @@ def compile_stage(
     grid_reduction: bool = False,
     red_grid_threshold: int = RED_GRID_THRESHOLD,
     cost_model: str = "scheduler",
+    line_buffer: object = "auto",
+    red_resident: bool = True,
 ) -> CompiledKernel:
     """Compile one normalized stage to a Pallas kernel (plan + emit)."""
     from repro.frontend.expr import refs_in
@@ -510,6 +702,8 @@ def compile_stage(
         cost_model=cost_model,
         grid_reduction=grid_reduction,
         red_grid_threshold=red_grid_threshold,
+        line_buffer=line_buffer,
+        red_resident=red_resident,
     )
     return emit_kernel(kg, interpret=interpret)
 

@@ -110,6 +110,22 @@ def run_demo(app_names=None, smoke: bool = False, fuse: bool = True) -> List[Dic
                     f"stages in {want_kernels} kernels, got {pp.plan.n_stages} "
                     f"in {pp.plan.n_kernels}"
                 )
+        # carry contract: the default plan's line-buffer decisions (and the
+        # traffic/recompute drops they buy vs a line_buffer=False twin) must
+        # match the golden table — a silent fallback to recompute fusion
+        # fails the demo even though the numerics still match
+        if fuse:
+            from repro.backend import build_pipeline_plan
+            from repro.backend.golden import check_linebuf_plan, expected_linebuf
+
+            if expected_linebuf(name, kw.get("schedule")) is not None:
+                plan_rc = build_pipeline_plan(app.pipeline, line_buffer=False)
+                plan_notes.extend(
+                    check_linebuf_plan(name, kw.get("schedule"), pp.plan, plan_rc)
+                )
+        lb_stages = sorted(
+            n for names in pp.plan.line_buffered.values() for n in names
+        )
         rows.append(
             {
                 "app": name,
@@ -117,6 +133,9 @@ def run_demo(app_names=None, smoke: bool = False, fuse: bool = True) -> List[Dic
                 "kernels": pp.plan.n_kernels,
                 "grids": {ck.name: list(ck.grid) for ck in pp.kernels},
                 "streams": sum(len(ck.groups) + 1 for ck in pp.kernels),
+                "linebuf": "+".join(lb_stages) if lb_stages else "-",
+                "rings": pp.plan.n_rings,
+                "eval_rows": pp.plan.total_eval_rows(),
                 "vmem_kib": sum(ck.plan.vmem_bytes for ck in pp.kernels) // 1024,
                 "hbm_kib": pp.plan.hbm_bytes() // 1024,
                 "compile_us": round(compile_us),
@@ -142,8 +161,8 @@ def main(argv=None) -> int:
 
     rows = run_demo(names, smoke=args.smoke, fuse=not args.no_fuse)
     print(
-        "app,stages,kernels,streams,vmem_kib,hbm_kib,compile_us,"
-        "run_us_interp,max_err,status"
+        "app,stages,kernels,streams,linebuf,rings,eval_rows,vmem_kib,"
+        "hbm_kib,compile_us,run_us_interp,max_err,status"
     )
     ok = True
     for r in rows:
@@ -151,6 +170,7 @@ def main(argv=None) -> int:
         ok = ok and r["ok"]
         print(
             f"{r['app']},{r['stages']},{r['kernels']},{r['streams']},"
+            f"{r['linebuf']},{r['rings']},{r['eval_rows']},"
             f"{r['vmem_kib']},{r['hbm_kib']},{r['compile_us']},"
             f"{r['run_us_interp']},{r['max_err']:.2e},{status}"
         )

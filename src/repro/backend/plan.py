@@ -30,13 +30,22 @@ Planning passes, in order:
      affine access maps) fits the VMEM budget,
   3. **grid reduction** — single-stage kernels whose leading reduction dim
      is large get it chunked into the grid (``ceil`` steps: a non-dividing
-     chunk leaves a masked tail step),
-  4. **block-height selection** — ``core/ubplan.plan_affine_stage`` with the
+     chunk leaves a masked tail step); small operands indexed only by the
+     reduction dim stay whole in VMEM (:attr:`ViewGroup.resident`) instead
+     of re-walking their chunk sequence once per row panel,
+  4. **carry placement** — fused shift sets become cross-grid-step
+     :class:`LineBuffer` rings (each intermediate row computed exactly
+     once) and row-shifted view classes collapse into :class:`RingStream`
+     deliveries (each input row delivered once); per chain the planner
+     prices carry against recompute fusion (``line_buffer="auto"``) and
+     keeps the cheaper modeled schedule, falling back per stage/class
+     wherever ``halo > bh``,
+  5. **block-height selection** — ``core/ubplan.plan_affine_stage`` with the
      scheduler cost hook (``scheduler_cost``) pricing candidate panels with
-     ``core/scheduling.raster_cycles``; any height is legal — a non-divisor
-     block yields a :class:`PaddedGrid` (grid = ``ceil(extent / bh)``, tail
-     block masked by the emitter), with the padding waste priced into the
-     cost like any other step.
+     ``core/scheduling.raster_cycles``, including the carry/warm-up terms;
+     any height is legal — a non-divisor block yields a :class:`PaddedGrid`
+     (grid = ``ceil(extent / bh)``, tail block masked by the emitter), with
+     the padding waste priced into the cost like any other step.
 """
 
 from __future__ import annotations
@@ -50,6 +59,7 @@ from repro.core.ubplan import (
     KernelPlan,
     StreamPlan,
     VMEM_BYTES,
+    affine_stage_bh_cap,
     align_tpu_shape,
     plan_affine_stage,
 )
@@ -64,6 +74,10 @@ ELEM_BYTES = 4                      # all generated streams are f32
 # bytes/cycle and the fixed per-grid-step cost (DMA issue + pipeline drain)
 HBM_BYTES_PER_CYCLE = 64
 STEP_OVERHEAD_CYCLES = 32
+# on-chip bandwidth for ring rotations (VMEM-to-VMEM vector copies): the
+# carry side of the recompute-vs-carry trade rides the memory system, not
+# the PE raster, and VMEM moves roughly an order of magnitude faster
+VMEM_BYTES_PER_CYCLE = 8 * HBM_BYTES_PER_CYCLE
 
 # grid-reduction defaults: reduction extents at or above the threshold are
 # chunked into the grid; each chunk is at most MAX_RED_CHUNK in-kernel steps
@@ -77,6 +91,67 @@ class FusionInfeasible(Exception):
 
 def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+@dataclass(frozen=True)
+class LineBuffer:
+    """Cross-grid-step line buffer for a fused intermediate: instead of
+    recomputing the stage's panel at every consumer-demanded row shift, one
+    VMEM ring of ``bh + halo`` rows persists across grid steps.  Each step
+    rotates the ring (the trailing ``halo`` rows carry over) and computes
+    exactly ``bh`` new rows — the panel at shift ``hi`` — so every
+    intermediate row is evaluated exactly once; step 0 additionally fills
+    the ``halo`` warm-up rows (the first rows of the shift-``lo`` panel).
+    Consumers tap the ring at ``[shift - lo, shift - lo + bh)`` exactly
+    where they used to tap the per-shift panel."""
+
+    lo: int                           # min consumer-demanded row shift
+    hi: int                           # max consumer-demanded row shift
+
+    @property
+    def halo(self) -> int:
+        """Rows carried across grid steps."""
+        return self.hi - self.lo
+
+    def ring_rows(self, bh: int) -> int:
+        return bh + self.halo
+
+
+@dataclass
+class RingStream:
+    """Cross-grid-step line buffer for an *input delivery* class: several
+    row-shifted views of one buffer (same blocked axis, stride, and shift
+    parity) collapse into a single streaming view at the leading shift
+    (``hi``) plus a tiny pinned warm-up view of the ``halo`` rows below it,
+    with a VMEM ring carrying the halo between grid steps.  Each input row
+    is then *delivered* once instead of once per tap — the paper's
+    line-buffered unified buffer, lifted from pixels to rows."""
+
+    buffer: str
+    axis: int                         # producer axis carried by the ring
+    stride0: int                      # view stride along that axis
+    lo: int                           # smallest member view start (k0)
+    hi: int                           # largest member view start (k0)
+    steady: int                       # group index of the streaming view
+    prefix: int                       # group index of the pinned warm-up view
+    ndim: int
+    base: List[int]                   # hull base per axis (axis: ``lo``)
+    span: List[int]                   # hull span per non-ring axis
+    key: Tuple = ()                   # delivery-class key (for plan retries)
+
+    @property
+    def halo(self) -> int:
+        """Carried rows, in lattice units (one unit = ``stride0`` elements)."""
+        return (self.hi - self.lo) // self.stride0
+
+    def ring_shape(self, bh: int) -> Tuple[int, ...]:
+        return tuple(
+            bh + self.halo if j == self.axis else self.span[j]
+            for j in range(self.ndim)
+        )
+
+    def ring_bytes(self, bh: int) -> int:
+        return ELEM_BYTES * math.prod(self.ring_shape(bh))
 
 
 @dataclass(frozen=True)
@@ -123,13 +198,19 @@ class ViewGroup:
     span: List[int] = field(default_factory=list)   # per-axis view length
     valid0: Optional[int] = None      # valid blocked-axis elements of the view
                                       # (grid delivery past this is padding)
+    pinned: bool = False              # warm-up view of a RingStream: a fixed
+                                      # ``rows0``-row block delivered once
+    rows0: int = 0                    # blocked-axis block rows when pinned
+    resident: bool = False            # reduction-indexed operand kept whole
+                                      # in VMEM (fetched once, not per chunk)
 
     def view_slices(self, e0: int) -> Tuple[slice, ...]:
         out = []
         for j in range(self.ndim):
             if j == self.blocked_axis:
+                rows = self.rows0 if self.pinned else e0
                 out.append(
-                    slice(self.k0, self.k0 + self.stride0 * (e0 - 1) + 1, self.stride0)
+                    slice(self.k0, self.k0 + self.stride0 * (rows - 1) + 1, self.stride0)
                 )
             else:
                 out.append(slice(self.base[j], self.base[j] + self.span[j]))
@@ -139,15 +220,17 @@ class ViewGroup:
         out = []
         for j in range(self.ndim):
             if j == self.blocked_axis:
-                out.append(bh)
+                out.append(self.rows0 if self.pinned else bh)
             elif j == self.red_axis:
-                out.append(self.red_chunk)
+                out.append(self.span[j] if self.resident else self.red_chunk)
             else:
                 out.append(self.span[j])
         return tuple(out)
 
     def index_map(self, n_grid: int) -> Callable:
-        blocked, red, nd = self.blocked_axis, self.red_axis, self.ndim
+        blocked = None if self.pinned else self.blocked_axis
+        red = None if self.resident else self.red_axis
+        nd = self.ndim
         if n_grid == 1:
             if blocked is None:
                 return lambda i, nd=nd: (0,) * nd
@@ -186,6 +269,14 @@ class StagePlan:
     scratch_producer: List[Optional[str]] = field(default_factory=list)
     view_binding: List[Dict[BindKey, int]] = field(default_factory=list)
     blocked_axis_of: List[Optional[int]] = field(default_factory=list)
+    # cross-grid-step carry: when set, the stage's panels live in one
+    # persistent ring (see :class:`LineBuffer`) instead of per-shift scratch
+    line_buffer: Optional[LineBuffer] = None
+    # per load, bindings served by an input RingStream instead of a view
+    # group: (shift, offset) -> (ring index, ring row of the tap's start)
+    ring_binding: List[Dict[BindKey, Tuple[int, int]]] = field(
+        default_factory=list
+    )
 
     @property
     def name(self) -> str:
@@ -218,6 +309,18 @@ class StagePlan:
 
     def panel_bytes(self, bh: int) -> int:
         return ELEM_BYTES * math.prod(self.panel_shape(bh))
+
+    def ring_shape(self, bh: int) -> Tuple[int, ...]:
+        """VMEM shape of this stage's line-buffer ring."""
+        assert self.line_buffer is not None
+        return (self.line_buffer.ring_rows(bh),) + tuple(
+            self.nstage.pure_extents[1:]
+        )
+
+    def scratch_shape(self, bh: int, key: Optional[int]) -> Tuple[int, ...]:
+        """Shape of one scratch entry: the ring (``key is None``) or a
+        per-shift panel."""
+        return self.ring_shape(bh) if key is None else self.panel_shape(bh)
 
 
 @dataclass(frozen=True)
@@ -259,11 +362,23 @@ class KernelGroup:
     grid: Tuple[int, ...]
     red_grid: Optional[RedGrid] = None
     padded_grid: Optional[PaddedGrid] = None
+    rings: List[RingStream] = field(default_factory=list)
     notes: Dict[str, object] = field(default_factory=dict)
 
     @property
     def output(self) -> StagePlan:
         return self.stages[-1]
+
+    def stage_plan(self, name: str) -> StagePlan:
+        for sp in self.stages:
+            if sp.name == name:
+                return sp
+        raise KeyError(name)
+
+    @property
+    def line_buffered(self) -> Tuple[str, ...]:
+        """Names of fused stages carried in cross-grid-step rings."""
+        return tuple(sp.name for sp in self.stages if sp.line_buffer is not None)
 
     @property
     def name(self) -> str:
@@ -301,7 +416,8 @@ class KernelGroup:
             need = []
             for j in range(g.ndim):
                 if j == g.blocked_axis:
-                    need.append(g.k0 + g.stride0 * (self.e0 - 1) + 1)
+                    rows = g.rows0 if g.pinned else self.e0
+                    need.append(g.k0 + g.stride0 * (rows - 1) + 1)
                 else:
                     need.append(g.base[j] + g.span[j])
             prev = out.get(g.buffer)
@@ -336,14 +452,41 @@ class KernelGroup:
                         f"(shape {got} vs required {need})"
                     )
 
-    def scratch_entries(self) -> List[Tuple[StagePlan, int]]:
-        """(stage, shift) pairs, in emission order, of every VMEM-resident
-        intermediate panel the kernel materializes."""
-        return [(sp, s) for sp in self.stages[:-1] for s in sp.shifts]
+    def scratch_entries(self) -> List[Tuple[StagePlan, Optional[int]]]:
+        """(stage, key) pairs, in emission order, of every VMEM-resident
+        intermediate the kernel materializes: ``key`` is a row shift for a
+        recompute-mode panel, or ``None`` for a line-buffer ring."""
+        out: List[Tuple[StagePlan, Optional[int]]] = []
+        for sp in self.stages[:-1]:
+            if sp.line_buffer is not None:
+                out.append((sp, None))
+            else:
+                out.extend((sp, s) for s in sp.shifts)
+        return out
 
     @property
     def scratch_bytes(self) -> int:
-        return sum(sp.panel_bytes(self.bh) for sp, _ in self.scratch_entries())
+        return sum(
+            ELEM_BYTES * math.prod(sp.scratch_shape(self.bh, key))
+            for sp, key in self.scratch_entries()
+        ) + sum(r.ring_bytes(self.bh) for r in self.rings)
+
+    def eval_rows(self) -> Dict[str, int]:
+        """Rows of each stage evaluated per kernel invocation — the
+        recompute metric line buffering improves.  A recompute-mode fused
+        stage evaluates ``|shifts|`` panels per grid step; a line-buffered
+        one evaluates exactly ``bh`` new rows per step plus a one-time
+        ``halo``-row warm-up."""
+        steps = self.grid[0] if self.streamed else 1
+        out: Dict[str, int] = {}
+        for sp in self.stages:
+            if not (self.streamed and sp.streamed):
+                out[sp.name] = sp.e0
+            elif sp.line_buffer is not None:
+                out[sp.name] = steps * self.bh + sp.line_buffer.halo
+            else:
+                out[sp.name] = steps * self.bh * len(sp.shifts)
+        return out
 
     @property
     def vmem_bytes(self) -> int:
@@ -353,11 +496,15 @@ class KernelGroup:
         """The kernel's unified-buffer structure, for introspection."""
         streams = []
         for k, g in enumerate(self.groups):
-            axes = tuple(
-                ax for ax, cond in ((0, g.blocked_axis is not None),
-                                    (1, g.red_axis is not None))
-                if cond and ax < len(self.grid)
-            )
+            axes: Tuple[int, ...] = ()
+            if not g.pinned:
+                axes = tuple(
+                    ax for ax, cond in (
+                        (0, g.blocked_axis is not None),
+                        (1, g.red_axis is not None and not g.resident),
+                    )
+                    if cond and ax < len(self.grid)
+                )
             streams.append(StreamPlan(
                 f"{g.buffer}[{k}]",
                 g.block_shape(self.bh),
@@ -365,10 +512,17 @@ class KernelGroup:
                 ELEM_BYTES * math.prod(g.block_shape(self.bh)),
                 double_buffered=bool(axes),
             ))
-        for sp, s in self.scratch_entries():
+        for r in self.rings:
             streams.append(StreamPlan(
-                f"scratch:{sp.name}@{s}", sp.panel_shape(self.bh), (),
-                sp.panel_bytes(self.bh), double_buffered=False,
+                f"ring:{r.buffer}@{r.lo}..{r.hi}", r.ring_shape(self.bh), (),
+                r.ring_bytes(self.bh), double_buffered=False,
+            ))
+        for sp, key in self.scratch_entries():
+            tag = "ring" if key is None else str(key)
+            shape = sp.scratch_shape(self.bh, key)
+            streams.append(StreamPlan(
+                f"scratch:{sp.name}@{tag}", shape, (),
+                ELEM_BYTES * math.prod(shape), double_buffered=False,
             ))
         out = self.output
         streams.append(StreamPlan(
@@ -388,22 +542,38 @@ class KernelGroup:
         if self.padded_grid is not None:
             pg = self.padded_grid
             notes["padded_grid"] = (pg.extent, pg.block, pg.steps)
+        if self.line_buffered:
+            notes["linebuf"] = {
+                sp.name: (sp.line_buffer.lo, sp.line_buffer.hi)
+                for sp in self.stages if sp.line_buffer is not None
+            }
+        if self.rings:
+            notes["rings"] = tuple(
+                (r.buffer, r.lo, r.hi, r.stride0) for r in self.rings
+            )
+        resident = [g.buffer for g in self.groups if g.resident]
+        if resident:
+            notes["red_resident"] = tuple(resident)
         notes.update(self.notes)
         return KernelPlan(self.grid, streams, notes)
 
     def hbm_bytes(self) -> int:
         """Estimated HBM bytes one invocation moves: every delivered input
-        block (resident broadcast blocks fetched once) plus the output
-        store.  Summed over a pipeline's kernels this is the traffic metric
-        fusion improves — fused intermediates never appear."""
+        block (resident broadcast blocks and pinned warm-up views fetched
+        once) plus the output store.  Summed over a pipeline's kernels this
+        is the traffic metric fusion improves — fused intermediates never
+        appear, and ring-delivered inputs count once per grid step instead
+        of once per tap."""
         steps0 = self.grid[0]
         red_steps = self.grid[1] if len(self.grid) > 1 else 1
         total = ELEM_BYTES * math.prod(self.output.nstage.pure_extents)
         for g in self.groups:
             blk = ELEM_BYTES * math.prod(g.block_shape(self.bh))
-            if g.blocked_axis is not None:
+            if g.pinned:
+                deliveries = 1
+            elif g.blocked_axis is not None:
                 deliveries = steps0 * (red_steps if g.red_axis is not None else 1)
-            elif g.red_axis is not None:
+            elif g.red_axis is not None and not g.resident:
                 # chunk sequence re-walked every row panel
                 deliveries = steps0 * red_steps
             else:
@@ -445,6 +615,29 @@ class PipelinePlan:
         """Intermediates that never touch HBM (VMEM-scratch residents)."""
         return [sp.name for kg in self.kernels for sp in kg.stages[:-1]]
 
+    @property
+    def line_buffered(self) -> Dict[str, Tuple[str, ...]]:
+        """Per kernel, the fused stages carried in cross-grid-step rings."""
+        return {
+            kg.name: kg.line_buffered for kg in self.kernels if kg.line_buffered
+        }
+
+    @property
+    def n_rings(self) -> int:
+        """Input delivery classes collapsed into cross-grid-step rings."""
+        return sum(len(kg.rings) for kg in self.kernels)
+
+    def eval_rows(self) -> Dict[str, int]:
+        """Rows evaluated per stage per pipeline invocation (recompute
+        metric; see :meth:`KernelGroup.eval_rows`)."""
+        out: Dict[str, int] = {}
+        for kg in self.kernels:
+            out.update(kg.eval_rows())
+        return out
+
+    def total_eval_rows(self) -> int:
+        return sum(self.eval_rows().values())
+
     def kernel_for(self, name: str) -> KernelGroup:
         for kg in self.kernels:
             if kg.name == name:
@@ -469,6 +662,9 @@ def scheduler_cost(
     latency: int,
     bytes_per_row: int,
     fixed_bytes: int,
+    *,
+    carry_stmts: int = 0,
+    warmup_stmts: int = 0,
 ) -> Callable[[int], float]:
     """Price a candidate block height with the §V-B cycle model.
 
@@ -485,13 +681,28 @@ def scheduler_cost(
     padding waste is priced automatically — every step, padded or not,
     costs the full per-step cycles.  A block with less padded work beats an
     equal-step block with more.
+
+    ``carry_stmts`` and ``warmup_stmts`` price the *carry* side of the
+    recompute-vs-carry trade (cross-grid-step line buffers): rotating the
+    rings copies ``carry_stmts`` elements every step — a VMEM-to-VMEM
+    vector move charged to the memory side at ``VMEM_BYTES_PER_CYCLE``,
+    overlapping the raster like any other DMA — and the step-0 warm-up
+    evaluates ``warmup_stmts`` extra statements once (real PE work, priced
+    with ``raster_cycles`` and charged to the pipeline fill).  The planner
+    builds one cost per mode — recompute-mode ``stmts_per_row``/streams vs
+    carry-mode with these terms — and the cheaper modeled schedule decides
+    the chain's mode, tie-broken toward less HBM traffic.
     """
     def cost(bh: int) -> float:
         steps = _cdiv(e0, bh)
         compute = raster_cycles((bh, max(stmts_per_row, 1)), latency)
         dma = (bytes_per_row * bh) / HBM_BYTES_PER_CYCLE
+        if carry_stmts:
+            dma += carry_stmts * ELEM_BYTES / VMEM_BYTES_PER_CYCLE
         per_step = max(compute, dma) + STEP_OVERHEAD_CYCLES
         fill = min(compute, dma) + fixed_bytes / HBM_BYTES_PER_CYCLE
+        if warmup_stmts:
+            fill += raster_cycles((warmup_stmts,), latency)
         return steps * per_step + fill
 
     return cost
@@ -581,6 +792,131 @@ def _red_grid_candidate(
 # ---------------------------------------------------------------------------
 
 
+def _shift_sets(
+    members: Sequence[Tuple[NormalizedStage, List[LoadAccess], bool]],
+) -> Dict[str, Tuple[int, ...]]:
+    """Consumer demands propagated reverse-topologically: the row-panel
+    shifts at which each fused stage must be available per grid step."""
+    names = {ns.name for ns, _, _ in members}
+    out_ns = members[-1][0]
+    in_group: Dict[str, List[Tuple[NormalizedStage, LoadAccess]]] = {}
+    for ns, acc, _ in members:
+        for la in acc:
+            if la.buffer in names:
+                in_group.setdefault(la.buffer, []).append((ns, la))
+    shifts_of: Dict[str, Tuple[int, ...]] = {out_ns.name: (0,)}
+    for ns, _, _ in reversed(members[:-1]):
+        shifts: Set[int] = set()
+        for cons, la in in_group.get(ns.name, []):
+            d0 = cons.pure_dims[0]
+            ax0 = la.axes[0]
+            if ax0.pure_dim != d0 or ax0.stride != 1:
+                raise FusionInfeasible(
+                    f"{cons.name} reads {ns.name} with stride "
+                    f"{ax0.stride} on the blocked dim"
+                )
+            if any(
+                j != 0 and ax.pure_dim == d0 for j, ax in enumerate(la.axes)
+            ):
+                raise FusionInfeasible(
+                    f"{cons.name} reads {ns.name} by the blocked dim on a "
+                    f"non-leading axis"
+                )
+            red_ext = dict(zip(cons.red_dims, cons.red_extents))
+            for off in ax0.offsets(red_ext):
+                if off < 0:
+                    raise FusionInfeasible(
+                        f"{cons.name} reads {ns.name} at negative offset {off}"
+                    )
+                for s in shifts_of[cons.name]:
+                    shifts.add(off + s)
+        if not shifts:
+            raise FusionInfeasible(f"{ns.name} has no in-group consumer")
+        shifts_of[ns.name] = tuple(sorted(shifts))
+    return shifts_of
+
+
+def _ring_rewrite(
+    groups: List[ViewGroup], e0_out: int, banned: Set[Tuple]
+) -> Tuple[List[ViewGroup], List[RingStream], Dict[int, int], Dict[int, Tuple[int, int]]]:
+    """Collapse row-shifted view classes into cross-grid-step ring streams.
+
+    Views of one buffer that differ only in their blocked-axis start (same
+    axis, stride, and start residue) deliver overlapping windows shifted by
+    whole rows — the halo a line buffer carries.  Each such class becomes
+    one streaming view at the *leading* start ``hi`` plus a pinned
+    ``halo``-row warm-up view at ``lo``, with a VMEM ring (managed by the
+    emitter) carrying the trailing rows between grid steps.  Returns the
+    rewritten group list, the rings, an old->new index map for untouched
+    groups, and an old index -> (ring, tap row) map for collapsed ones."""
+    classes: Dict[Tuple, List[int]] = {}
+    for gi, g in enumerate(groups):
+        if g.blocked_axis is None or g.red_axis is not None or g.pinned:
+            continue
+        key = (g.buffer, g.blocked_axis, g.stride0, g.k0 % g.stride0)
+        if key in banned:
+            continue
+        classes.setdefault(key, []).append(gi)
+    specs = sorted(
+        (kv for kv in classes.items() if len(kv[1]) >= 2),
+        key=lambda kv: min(kv[1]),
+    )
+    if not specs:
+        return groups, [], {gi: gi for gi in range(len(groups))}, {}
+    member = {gi for _, idxs in specs for gi in idxs}
+    new_groups: List[ViewGroup] = []
+    gmap: Dict[int, int] = {}
+    for gi, g in enumerate(groups):
+        if gi not in member:
+            gmap[gi] = len(new_groups)
+            new_groups.append(g)
+    rings: List[RingStream] = []
+    ring_map: Dict[int, Tuple[int, int]] = {}
+    for key, idxs in specs:
+        ms = [groups[i] for i in idxs]
+        ax, stride0, nd = ms[0].blocked_axis, ms[0].stride0, ms[0].ndim
+        lo = min(g.k0 for g in ms)
+        hi = max(g.k0 for g in ms)
+        halo = (hi - lo) // stride0
+        base: List[int] = []
+        span: List[int] = []
+        for j in range(nd):
+            if j == ax:
+                base.append(lo)
+                span.append(0)
+            else:
+                b = min(g.base[j] for g in ms)
+                t = max(g.base[j] + g.span[j] for g in ms)
+                base.append(b)
+                span.append(t - b)
+        steady_base = list(base)
+        steady_base[ax] = hi
+        steady_span = list(span)
+        steady_span[ax] = e0_out
+        si = len(new_groups)
+        new_groups.append(ViewGroup(
+            ms[0].buffer, nd, ax, hi, stride0, None, 1,
+            base=steady_base, span=steady_span, valid0=e0_out,
+        ))
+        prefix_base = list(base)
+        prefix_base[ax] = lo
+        prefix_span = list(span)
+        prefix_span[ax] = halo
+        pi = len(new_groups)
+        new_groups.append(ViewGroup(
+            ms[0].buffer, nd, ax, lo, stride0, None, 1,
+            base=prefix_base, span=prefix_span, valid0=None,
+            pinned=True, rows0=halo,
+        ))
+        r = len(rings)
+        rings.append(RingStream(
+            ms[0].buffer, ax, stride0, lo, hi, si, pi, nd, base, span, key=key
+        ))
+        for gi in idxs:
+            ring_map[gi] = (r, (groups[gi].k0 - lo) // stride0)
+    return new_groups, rings, gmap, ring_map
+
+
 def _build_kernel_group(
     members: List[Tuple[NormalizedStage, List[LoadAccess], bool]],
     buffer_shapes: Mapping[str, Tuple[int, ...]],
@@ -591,8 +927,21 @@ def _build_kernel_group(
     align_tpu: bool = False,
     grid_reduction: bool = True,
     red_grid_threshold: int = RED_GRID_THRESHOLD,
+    line_buffer: object = "auto",
+    red_resident: bool = True,
 ) -> KernelGroup:
     """Build the delivery plan for one kernel (one or more fused stages).
+
+    ``line_buffer`` selects the recompute-vs-carry mode for fused
+    intermediates and shifted input deliveries: ``False`` recomputes fused
+    panels per demanded shift and streams one view per tap (the PR 2
+    scheme), ``True`` carries halo rows in cross-grid-step rings wherever
+    structurally feasible (``halo <= bh``), and ``"auto"`` builds both
+    plans and keeps the one the scheduler cost model prices cheaper.  When
+    no scheduler pricing exists (explicit ``block_h``, or a different
+    ``cost_model``), ``"auto"`` prefers carry wherever feasible — it is
+    strictly less traffic and at most equal compute — and tags the plan
+    ``linebuf_mode="carry-unpriced"``.
 
     Raises :class:`FusionInfeasible` when a multi-stage group violates a
     structural constraint or cannot fit VMEM at any block height; a
@@ -602,52 +951,12 @@ def _build_kernel_group(
     names = {ns.name for ns, _, _ in members}
     if multi and not all(st for _, _, st in members):
         raise FusionInfeasible("fusion requires every member stage to stream")
-
-    plans = {
-        ns.name: StagePlan(ns, list(acc), streamed)
-        for ns, acc, streamed in members
-    }
     for ns, acc, _ in members:
         for la in acc:
             _check_tags(la)
 
-    # -- shift sets: consumer demands propagated reverse-topologically -------
-    in_group_consumers: Dict[str, List[Tuple[StagePlan, int]]] = {}
-    for ns, acc, _ in members:
-        for k, la in enumerate(acc):
-            if la.buffer in names:
-                in_group_consumers.setdefault(la.buffer, []).append(
-                    (plans[ns.name], k)
-                )
-    plans[out_ns.name].shifts = (0,)
-    for ns, _, _ in reversed(members[:-1]):
-        shifts: Set[int] = set()
-        for cons, k in in_group_consumers.get(ns.name, []):
-            la = cons.accesses[k]
-            ax0 = la.axes[0]
-            if ax0.pure_dim != cons.d0 or ax0.stride != 1:
-                raise FusionInfeasible(
-                    f"{cons.name} reads {ns.name} with stride "
-                    f"{ax0.stride} on the blocked dim"
-                )
-            if any(
-                j != 0 and ax.pure_dim == cons.d0 for j, ax in enumerate(la.axes)
-            ):
-                raise FusionInfeasible(
-                    f"{cons.name} reads {ns.name} by the blocked dim on a "
-                    f"non-leading axis"
-                )
-            red_ext = dict(zip(cons.nstage.red_dims, cons.nstage.red_extents))
-            for off in ax0.offsets(red_ext):
-                if off < 0:
-                    raise FusionInfeasible(
-                        f"{cons.name} reads {ns.name} at negative offset {off}"
-                    )
-                for s in cons.shifts:
-                    shifts.add(off + s)
-        if not shifts:
-            raise FusionInfeasible(f"{ns.name} has no in-group consumer")
-        plans[ns.name].shifts = tuple(sorted(shifts))
+    # shift sets are a pure function of the access maps; modes share them
+    shifts_of = _shift_sets(members)
 
     # -- grid reduction (single-stage kernels only) ---------------------------
     red_grid: Optional[RedGrid] = None
@@ -660,182 +969,333 @@ def _build_kernel_group(
     e0_out = out_ns.pure_extents[0]
     kernel_streamed = out_streamed
 
-    # -- view groups for boundary loads --------------------------------------
-    groups: List[ViewGroup] = []
-    by_key: Dict[tuple, int] = {}
+    def assemble(
+        lb_names: Set[str], use_rings: bool, banned: Set[Tuple]
+    ) -> KernelGroup:
+        plans = {
+            ns.name: StagePlan(ns, list(acc), streamed)
+            for ns, acc, streamed in members
+        }
+        for n, s in shifts_of.items():
+            plans[n].shifts = s
+        for n in lb_names:
+            s = shifts_of[n]
+            plans[n].line_buffer = LineBuffer(s[0], s[-1])
 
-    def group_for(key, buffer, ndim, blocked, k0, stride0, red_ax, red_chunk):
-        if key not in by_key:
-            by_key[key] = len(groups)
-            groups.append(ViewGroup(
-                buffer, ndim, blocked, k0, stride0, red_ax, red_chunk,
-                base=[None] * ndim, span=[0] * ndim,  # type: ignore[list-item]
-                valid0=e0_out if blocked is not None else None,
-            ))
-        return by_key[key]
+        # -- view groups for boundary loads ----------------------------------
+        groups: List[ViewGroup] = []
+        by_key: Dict[tuple, int] = {}
 
-    for ns, acc, _ in members:
-        sp = plans[ns.name]
-        red_ext = dict(zip(ns.red_dims, ns.red_extents))
-        # the gridded reduction dim contributes only its in-chunk extent to
-        # offset enumeration (its grid part advances the BlockSpec instead)
-        if red_grid is not None:
-            red_ext[red_grid.dim] = red_grid.chunk
-        for k, la in enumerate(acc):
-            if la.buffer in names:
-                sp.load_kind.append("scratch")
-                sp.scratch_producer.append(la.buffer)
-                sp.view_binding.append({})
-                sp.blocked_axis_of.append(0)
-                continue
-            j0 = _blocked_axis(la, sp.d0) if kernel_streamed and sp.streamed else None
-            jr = red_axis_of.get(k)
-            sp.load_kind.append("view")
-            sp.scratch_producer.append(None)
-            sp.blocked_axis_of.append(j0)
-            binding: Dict[BindKey, int] = {}
-            ndim = len(la.axes)
-            if j0 is not None:
-                stride0 = la.axes[j0].stride
-                for shift in sp.shifts:
-                    for off in la.axes[j0].offsets(red_ext):
-                        k0 = off + stride0 * shift
-                        key = (la.buffer, j0, stride0, k0, jr)
-                        binding[(shift, off)] = group_for(
-                            key, la.buffer, ndim, j0, k0, stride0,
-                            jr, red_grid.chunk if jr is not None else 1,
-                        )
+        def group_for(key, buffer, ndim, blocked, k0, stride0, red_ax, red_chunk):
+            if key not in by_key:
+                by_key[key] = len(groups)
+                groups.append(ViewGroup(
+                    buffer, ndim, blocked, k0, stride0, red_ax, red_chunk,
+                    base=[None] * ndim, span=[0] * ndim,  # type: ignore[list-item]
+                    valid0=e0_out if blocked is not None else None,
+                ))
+            return by_key[key]
+
+        for ns, acc, _ in members:
+            sp = plans[ns.name]
+            red_ext = dict(zip(ns.red_dims, ns.red_extents))
+            # the gridded reduction dim contributes only its in-chunk extent
+            # to offset enumeration (its grid part advances the BlockSpec)
+            if red_grid is not None:
+                red_ext[red_grid.dim] = red_grid.chunk
+            # a line-buffered stage evaluates panels only at the steady-state
+            # shift (hi) and the warm-up shift (lo), so only those bindings
+            # — and hence only those view starts — exist
+            lb = sp.line_buffer
+            bind_shifts = sp.shifts if lb is None else (lb.lo, lb.hi)
+            for k, la in enumerate(acc):
+                if la.buffer in names:
+                    sp.load_kind.append("scratch")
+                    sp.scratch_producer.append(la.buffer)
+                    sp.view_binding.append({})
+                    sp.ring_binding.append({})
+                    sp.blocked_axis_of.append(0)
+                    continue
+                j0 = _blocked_axis(la, sp.d0) if kernel_streamed and sp.streamed else None
+                jr = red_axis_of.get(k)
+                sp.load_kind.append("view")
+                sp.scratch_producer.append(None)
+                sp.blocked_axis_of.append(j0)
+                sp.ring_binding.append({})
+                binding: Dict[BindKey, int] = {}
+                ndim = len(la.axes)
+                if j0 is not None:
+                    stride0 = la.axes[j0].stride
+                    for shift in bind_shifts:
+                        for off in la.axes[j0].offsets(red_ext):
+                            k0 = off + stride0 * shift
+                            key = (la.buffer, j0, stride0, k0, jr)
+                            binding[(shift, off)] = group_for(
+                                key, la.buffer, ndim, j0, k0, stride0,
+                                jr, red_grid.chunk if jr is not None else 1,
+                            )
+                else:
+                    key = (la.buffer, None, 1, 0, jr)
+                    gidx = group_for(
+                        key, la.buffer, ndim, None, 0, 1,
+                        jr, red_grid.chunk if jr is not None else 1,
+                    )
+                    for shift in bind_shifts:
+                        binding[(shift, None)] = gidx
+                sp.view_binding.append(binding)
+
+                # hull the non-blocked axes of every group this load touches
+                for gidx in set(binding.values()):
+                    g = groups[gidx]
+                    for j, ax in enumerate(la.axes):
+                        if j == g.blocked_axis:
+                            g.span[j] = e0_out
+                            continue
+                        if j == g.red_axis:
+                            g.base[j] = 0
+                            g.span[j] = ns.extent(red_grid.dim)  # full axis
+                            continue
+                        lo, hi = ax.offset_range(red_ext)
+                        top = hi
+                        if ax.pure_dim is not None:
+                            top = hi + ax.stride * (ns.extent(ax.pure_dim) - 1)
+                        if g.base[j] is None:
+                            g.base[j], g.span[j] = lo, top - lo + 1
+                        else:
+                            new_base = min(g.base[j], lo)
+                            new_top = max(g.base[j] + g.span[j] - 1, top)
+                            g.base[j], g.span[j] = new_base, new_top - new_base + 1
+
+        for g in groups:
+            if g.blocked_axis is not None:
+                g.base[g.blocked_axis] = g.k0
+
+        # -- collapse shifted delivery classes into ring streams -------------
+        rings: List[RingStream] = []
+        if use_rings and kernel_streamed:
+            groups, rings, gmap, ring_map = _ring_rewrite(groups, e0_out, banned)
+            if ring_map:
+                for sp in plans.values():
+                    for li, binding in enumerate(sp.view_binding):
+                        kept: Dict[BindKey, int] = {}
+                        for bk, gi in binding.items():
+                            if gi in ring_map:
+                                sp.ring_binding[li][bk] = ring_map[gi]
+                            else:
+                                kept[bk] = gmap[gi]
+                        sp.view_binding[li] = kept
+
+        # -- grid reductions: keep small invariant operands whole in VMEM ----
+        # (chunk re-delivery once per row panel is pure refetch traffic)
+        if red_grid is not None and red_resident:
+            for g in groups:
+                if (
+                    g.blocked_axis is None and g.red_axis is not None
+                    and not g.pinned
+                    and ELEM_BYTES * math.prod(g.span) <= vmem_budget // 4
+                ):
+                    g.resident = True
+
+        # bounds inference guarantees accesses stay inside producer boxes;
+        # check anyway so a planning bug fails loudly, not as a mis-slice
+        for g in groups:
+            shape = buffer_shapes[g.buffer]
+            for j in range(g.ndim):
+                if j == g.blocked_axis:
+                    rows = g.rows0 if g.pinned else e0_out
+                    top = g.k0 + g.stride0 * (rows - 1)
+                else:
+                    top = g.base[j] + g.span[j] - 1
+                if g.base[j] < 0 or top >= shape[j]:
+                    raise UnsupportedAccessError(
+                        f"view of {g.buffer} axis {j} [{g.base[j]}, {top}] "
+                        f"exceeds extent {shape[j]}"
+                    )
+
+        # -- VMEM accounting + block height ----------------------------------
+        inner_out = (
+            math.prod(out_ns.pure_extents[1:]) if len(out_ns.pure_extents) > 1 else 1
+        )
+        bytes_per_row = inner_out * ELEM_BYTES      # the output panel
+        fixed_bytes = 0
+        for g in groups:
+            sz = ELEM_BYTES * math.prod(
+                (g.span[j] if g.resident else g.red_chunk)
+                if j == g.red_axis else g.span[j]
+                for j in range(g.ndim) if j != g.blocked_axis
+            )
+            if g.pinned:
+                fixed_bytes += g.rows0 * sz
+            elif g.blocked_axis is not None:
+                bytes_per_row += sz
             else:
-                key = (la.buffer, None, 1, 0, jr)
-                gidx = group_for(
-                    key, la.buffer, ndim, None, 0, 1,
-                    jr, red_grid.chunk if jr is not None else 1,
-                )
-                for shift in sp.shifts:
-                    binding[(shift, None)] = gidx
-            sp.view_binding.append(binding)
-
-            # hull the non-blocked axes of every group this load touches
-            for gidx in set(binding.values()):
-                g = groups[gidx]
-                for j, ax in enumerate(la.axes):
-                    if j == g.blocked_axis:
-                        g.span[j] = e0_out
-                        continue
-                    if j == g.red_axis:
-                        g.base[j] = 0
-                        g.span[j] = ns.extent(red_grid.dim)  # full axis
-                        continue
-                    lo, hi = ax.offset_range(red_ext)
-                    top = hi
-                    if ax.pure_dim is not None:
-                        top = hi + ax.stride * (ns.extent(ax.pure_dim) - 1)
-                    if g.base[j] is None:
-                        g.base[j], g.span[j] = lo, top - lo + 1
-                    else:
-                        new_base = min(g.base[j], lo)
-                        new_top = max(g.base[j] + g.span[j] - 1, top)
-                        g.base[j], g.span[j] = new_base, new_top - new_base + 1
-
-    # bounds inference guarantees accesses stay inside producer boxes; check
-    # anyway so a planning bug fails loudly instead of silently mis-slicing
-    for g in groups:
-        shape = buffer_shapes[g.buffer]
-        if g.blocked_axis is not None:
-            g.base[g.blocked_axis] = g.k0
-        for j in range(g.ndim):
-            top = (
-                g.k0 + g.stride0 * (e0_out - 1)
-                if j == g.blocked_axis
-                else g.base[j] + g.span[j] - 1
+                fixed_bytes += sz
+        for r in rings:
+            inner = math.prod(
+                r.span[j] for j in range(r.ndim) if j != r.axis
             )
-            if g.base[j] < 0 or top >= shape[j]:
-                raise UnsupportedAccessError(
-                    f"view of {g.buffer} axis {j} [{g.base[j]}, {top}] exceeds "
-                    f"extent {shape[j]}"
-                )
+            bytes_per_row += inner * ELEM_BYTES     # ring body scales with bh
+            fixed_bytes += r.halo * inner * ELEM_BYTES
+        scratch_rows = 0                            # scratch scales with bh too
+        for ns, _, _ in members[:-1]:
+            sp = plans[ns.name]
+            inner = (
+                math.prod(ns.pure_extents[1:]) if len(ns.pure_extents) > 1 else 1
+            )
+            if sp.line_buffer is not None:
+                scratch_rows += inner
+                fixed_bytes += sp.line_buffer.halo * inner * ELEM_BYTES
+            else:
+                scratch_rows += len(sp.shifts) * inner
+        bytes_per_row += scratch_rows * ELEM_BYTES
 
-    # -- VMEM accounting + block height --------------------------------------
-    inner_out = (
-        math.prod(out_ns.pure_extents[1:]) if len(out_ns.pure_extents) > 1 else 1
-    )
-    bytes_per_row = inner_out * ELEM_BYTES          # the output panel
-    fixed_bytes = 0
-    for g in groups:
-        sz = ELEM_BYTES * math.prod(
-            (g.red_chunk if j == g.red_axis else g.span[j])
-            for j in range(g.ndim) if j != g.blocked_axis
-        )
-        if g.blocked_axis is not None:
-            bytes_per_row += sz
-        else:
-            fixed_bytes += sz
-    scratch_rows = 0                                # scratch scales with bh too
-    for ns, _, _ in members[:-1]:
-        sp = plans[ns.name]
-        inner = (
-            math.prod(ns.pure_extents[1:]) if len(ns.pure_extents) > 1 else 1
-        )
-        scratch_rows += len(sp.shifts) * inner
-    bytes_per_row += scratch_rows * ELEM_BYTES
-
-    if not kernel_streamed:
-        bh = e0_out
-    elif block_h is not None:
-        if block_h < 1:
-            raise ValueError(f"{out_ns.name}: block_h must be >= 1")
-        # any block height plans: a non-divisor runs on a padded grid whose
-        # masked tail block hangs past the edge (blocks above the extent
-        # degenerate to one padded step, so clamp to the extent instead)
-        bh = min(block_h, e0_out)
-    else:
         cost = None
-        if cost_model == "scheduler":
-            stmts_per_row = 0
-            for ns, _, _ in members:
-                sp = plans[ns.name]
-                inner = (
-                    math.prod(ns.pure_extents[1:])
-                    if len(ns.pure_extents) > 1 else 1
+        if not kernel_streamed:
+            bh = e0_out
+        elif block_h is not None:
+            if block_h < 1:
+                raise ValueError(f"{out_ns.name}: block_h must be >= 1")
+            # any block height plans: a non-divisor runs on a padded grid
+            # whose masked tail block hangs past the edge (blocks above the
+            # extent degenerate to one padded step, so clamp to the extent)
+            bh = min(block_h, e0_out)
+        else:
+            if cost_model == "scheduler":
+                stmts_per_row = 0
+                carry_stmts = 0
+                warmup_stmts = 0
+                for ns, _, _ in members:
+                    sp = plans[ns.name]
+                    inner = (
+                        math.prod(ns.pure_extents[1:])
+                        if len(ns.pure_extents) > 1 else 1
+                    )
+                    red = math.prod(ns.red_extents) if ns.red_dims else 1
+                    if red_grid is not None:
+                        red = (red // ns.red_extents[0]) * red_grid.chunk
+                    if sp.line_buffer is not None:
+                        stmts_per_row += inner * red
+                        carry_stmts += sp.line_buffer.halo * inner
+                        warmup_stmts += sp.line_buffer.halo * inner * red
+                    else:
+                        stmts_per_row += len(sp.shifts) * inner * red
+                for r in rings:
+                    inner = math.prod(
+                        r.span[j] for j in range(r.ndim) if j != r.axis
+                    )
+                    carry_stmts += r.halo * inner
+                latency = max(_stage_latency(ns) for ns, _, _ in members)
+                cost = scheduler_cost(
+                    e0_out, stmts_per_row, latency, bytes_per_row, fixed_bytes,
+                    carry_stmts=carry_stmts, warmup_stmts=warmup_stmts,
                 )
-                red = math.prod(ns.red_extents) if ns.red_dims else 1
-                if red_grid is not None:
-                    red = (red // ns.red_extents[0]) * red_grid.chunk
-                stmts_per_row += len(sp.shifts) * inner * red
-            latency = max(_stage_latency(ns) for ns, _, _ in members)
-            cost = scheduler_cost(
-                e0_out, stmts_per_row, latency, bytes_per_row, fixed_bytes
+            bh = plan_affine_stage(
+                e0_out, bytes_per_row, fixed_bytes,
+                vmem_budget=vmem_budget, cost=cost, align_tpu=align_tpu,
             )
-        bh = plan_affine_stage(
-            e0_out, bytes_per_row, fixed_bytes,
-            vmem_budget=vmem_budget, cost=cost, align_tpu=align_tpu,
+
+        if multi and 2 * bytes_per_row * bh + fixed_bytes > vmem_budget:
+            raise FusionInfeasible(
+                f"group ending at {out_ns.name}: live range exceeds VMEM budget"
+            )
+
+        padded_grid: Optional[PaddedGrid] = None
+        if kernel_streamed:
+            steps0 = _cdiv(e0_out, bh)
+            grid: Tuple[int, ...] = (steps0,)
+            if steps0 * bh != e0_out:
+                padded_grid = PaddedGrid(e0_out, bh, steps0)
+        else:
+            grid = (1,)
+        if red_grid is not None:
+            grid = grid + (red_grid.steps,)
+
+        notes: Dict[str, object] = {
+            "cost_model": cost_model if kernel_streamed else "degenerate"
+        }
+        if cost is not None:
+            notes["model_cycles"] = cost(bh)
+        return KernelGroup(
+            stages=[plans[ns.name] for ns, _, _ in members],
+            groups=groups,
+            bh=bh,
+            grid=grid,
+            red_grid=red_grid,
+            padded_grid=padded_grid,
+            rings=rings,
+            notes=notes,
         )
 
-    if multi and 2 * bytes_per_row * bh + fixed_bytes > vmem_budget:
-        raise FusionInfeasible(
-            f"group ending at {out_ns.name}: live range exceeds VMEM budget"
-        )
-
-    padded_grid: Optional[PaddedGrid] = None
-    if kernel_streamed:
-        steps0 = _cdiv(e0_out, bh)
-        grid: Tuple[int, ...] = (steps0,)
-        if steps0 * bh != e0_out:
-            padded_grid = PaddedGrid(e0_out, bh, steps0)
+    # -- mode selection: recompute fusion vs cross-grid-step carry -----------
+    want_rings = line_buffer is not False
+    # upper bound of any legal block height (plan_affine_stage's candidate
+    # cap): a stage whose halo exceeds it can never carry
+    if block_h is not None:
+        bh_cap = min(block_h, e0_out)
     else:
-        grid = (1,)
-    if red_grid is not None:
-        grid = grid + (red_grid.steps,)
+        bh_cap = affine_stage_bh_cap(e0_out)
+    lb_capable: Tuple[str, ...] = ()
+    if multi and want_rings and kernel_streamed:
+        lb_capable = tuple(
+            ns.name for ns, _, _ in members[:-1]
+            if len(shifts_of[ns.name]) >= 2
+            and shifts_of[ns.name][-1] - shifts_of[ns.name][0] <= bh_cap
+        )
 
-    return KernelGroup(
-        stages=[plans[ns.name] for ns, _, _ in members],
-        groups=groups,
-        bh=bh,
-        grid=grid,
-        red_grid=red_grid,
-        padded_grid=padded_grid,
-        notes={"cost_model": cost_model if kernel_streamed else "degenerate"},
-    )
+    def attempt(lb_names: Sequence[str], use_rings: bool) -> KernelGroup:
+        # carry feasibility (halo <= bh) depends on the chosen block height,
+        # which depends on the carry decisions — iterate, shedding stages
+        # and ring classes whose halo the selected block cannot cover
+        lb = set(lb_names)
+        banned: Set[Tuple] = set()
+        for _ in range(len(members) + 8):
+            kg = assemble(lb, use_rings, banned)
+            bad_lb = {
+                sp.name for sp in kg.stages[:-1]
+                if sp.line_buffer is not None and sp.line_buffer.halo > kg.bh
+            }
+            bad_rings = {r.key for r in kg.rings if r.halo > kg.bh}
+            if not bad_lb and not bad_rings:
+                return kg
+            lb -= bad_lb
+            banned |= bad_rings
+        return assemble(set(), False, set())
+
+    if not want_rings:
+        return attempt((), False)
+    try:
+        kg_lb = attempt(lb_capable, True)
+    except FusionInfeasible:
+        # carry bookkeeping cannot fit where plain recompute fusion might
+        return attempt((), False)
+    if line_buffer is True:
+        return kg_lb
+    if not kg_lb.line_buffered and not kg_lb.rings:
+        return kg_lb
+    c_lb = kg_lb.notes.get("model_cycles")
+    if c_lb is None:
+        # no scheduler pricing (explicit block_h / other cost model): carry
+        # is strictly less traffic and at most equal compute, so prefer it
+        # and record that the mode choice was not cost-arbitrated
+        kg_lb.notes["linebuf_mode"] = "carry-unpriced"
+        return kg_lb
+    try:
+        kg_rc = attempt((), False)
+    except FusionInfeasible:
+        return kg_lb
+    c_rc = kg_rc.notes.get("model_cycles")
+    if c_rc is not None:
+        # recompute must be cheaper by more than one step's fixed overhead
+        # (sub-overhead differences are model noise) to justify its extra
+        # HBM traffic; at comparable cycles the carry plan's traffic wins
+        meaningfully_cheaper = c_rc < c_lb - STEP_OVERHEAD_CYCLES
+        cheaper_and_no_worse = (
+            c_rc < c_lb and kg_rc.hbm_bytes() <= kg_lb.hbm_bytes()
+        )
+        if meaningfully_cheaper or cheaper_and_no_worse:
+            kg_rc.notes["linebuf_mode"] = "recompute-cheaper"
+            return kg_rc
+    return kg_lb
 
 
 # ---------------------------------------------------------------------------
@@ -853,6 +1313,8 @@ def build_pipeline_plan(
     vmem_budget: int = VMEM_BYTES,
     cost_model: str = "scheduler",
     align_tpu: bool = False,
+    line_buffer: object = "auto",
+    red_resident: bool = True,
 ) -> PipelinePlan:
     nstages = normalize_pipeline(pipe)
     shapes = {n: tuple(b.extents) for n, b in pipe.buffer_boxes.items()}
@@ -882,6 +1344,7 @@ def build_pipeline_plan(
         block_h=block_h, vmem_budget=vmem_budget, cost_model=cost_model,
         align_tpu=align_tpu, grid_reduction=grid_reduction,
         red_grid_threshold=red_grid_threshold,
+        line_buffer=line_buffer, red_resident=red_resident,
     )
 
     def group_infos(root: str) -> List[Tuple]:
@@ -922,7 +1385,8 @@ def build_pipeline_plan(
         notes={
             "fuse": fuse, "grid_reduction": grid_reduction,
             "cost_model": cost_model, "vmem_budget": vmem_budget,
-            "align_tpu": align_tpu,
+            "align_tpu": align_tpu, "line_buffer": line_buffer,
+            "red_resident": red_resident,
         },
     )
 
@@ -933,6 +1397,8 @@ __all__ = [
     "STEP_OVERHEAD_CYCLES",
     "RED_GRID_THRESHOLD",
     "FusionInfeasible",
+    "LineBuffer",
+    "RingStream",
     "ViewGroup",
     "StagePlan",
     "RedGrid",

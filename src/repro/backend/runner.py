@@ -104,7 +104,17 @@ def compile_pipeline(
     vmem_budget: int = VMEM_BYTES,
     cost_model: str = "scheduler",
     align_tpu: bool = False,
+    line_buffer: object = "auto",
+    red_resident: bool = True,
 ) -> PallasPipeline:
+    """``line_buffer`` picks the recompute-vs-carry mode for fused
+    intermediates and shifted input deliveries: ``False`` restores the
+    recompute-fusion scheme (one view per tap, panels re-evaluated per
+    shift), ``True`` forces cross-grid-step rings wherever structurally
+    feasible, ``"auto"`` (default) lets the scheduler cost model choose per
+    chain.  ``red_resident`` keeps small reduction-invariant operands whole
+    in VMEM under grid reductions instead of refetching chunks per row
+    panel."""
     plan = build_pipeline_plan(
         pipe,
         block_h=block_h,
@@ -114,6 +124,8 @@ def compile_pipeline(
         vmem_budget=vmem_budget,
         cost_model=cost_model,
         align_tpu=align_tpu,
+        line_buffer=line_buffer,
+        red_resident=red_resident,
     )
     kernels = [emit_kernel(kg, interpret=interpret) for kg in plan.kernels]
     return PallasPipeline(pipe, kernels, plan)

@@ -209,7 +209,12 @@ def raster_cycles(extents: Sequence[int], latency: int, ii: int = 1) -> int:
     as a standalone entry so the Pallas backend's block-height cost hook
     (``backend/plan.scheduler_cost``) prices candidate row panels with the
     scheduler's own model (cross-checked against ``core/simulator.py`` in
-    the test suite)."""
+    the test suite).  The same model prices the recompute-vs-carry trade of
+    cross-grid-step line buffers: recompute mode rasters ``|shifts|``
+    panels per step, carry mode rasters one panel plus a one-time warm-up
+    (``raster_cycles`` over the halo rows, charged to the pipeline fill)
+    with the ring rotation riding the memory side — whichever modeled
+    schedule is cheaper decides the chain's mode."""
     dims = tuple(f"__c{i}" for i in range(len(extents)))
     box = Box(dims, tuple((0, max(int(e), 1) - 1) for e in extents))
     issue = _raster(box, ii=ii)

@@ -76,6 +76,19 @@ class KernelPlan:
 # ---------------------------------------------------------------------------
 
 
+def affine_stage_bh_cap(
+    grid_extent: int, max_bh: int = 256, prefer_stream: bool = True
+) -> int:
+    """Largest block height :func:`plan_affine_stage` will ever consider for
+    ``grid_extent`` — the candidate cap shared with the backend planner,
+    which pre-filters carry decisions (a line-buffer halo larger than this
+    can never fit under ``halo <= bh``)."""
+    cap = min(max_bh, grid_extent)
+    if prefer_stream and grid_extent > 8:
+        cap = min(cap, max(grid_extent // 4, 8))
+    return max(cap, 1)
+
+
 def plan_affine_stage(
     grid_extent: int,
     bytes_per_row: int,
@@ -92,8 +105,14 @@ def plan_affine_stage(
 
     The backend streams row panels of the outermost pure loop dim through
     VMEM; ``bytes_per_row`` is the double-buffered working set that scales
-    with the block height (blocked input streams + the output panel) and
-    ``fixed_bytes`` the resident broadcast views (weights, whole buffers).
+    with the block height (blocked input streams, the output panel, and the
+    ``bh``-proportional body of any cross-grid-step line-buffer ring) and
+    ``fixed_bytes`` the block-height-independent residents: broadcast views
+    (weights, whole buffers, VMEM-resident reduction operands), the carried
+    halo rows of line-buffer rings, and their pinned warm-up views.  Ring
+    placement is therefore budget-checked here, by the same ``2 *
+    bytes_per_row * bh + fixed_bytes <= vmem_budget`` feasibility rule as
+    the recompute-fusion scratch it replaces.
 
     The extent here comes from a stage's iteration domain, which is rarely
     a power of two (e.g. 62 for a 64-input 3x3 stencil).  Any block height
@@ -122,11 +141,9 @@ def plan_affine_stage(
     candidate almost always exists (62 rows -> 8-row blocks on an 8-step
     padded grid), and the VMEM guarantee always wins over alignment.
     """
-    cap = min(max_bh, grid_extent)
-    if prefer_stream and grid_extent > 8:
-        cap = min(cap, max(grid_extent // 4, 8))
+    cap = affine_stage_bh_cap(grid_extent, max_bh, prefer_stream)
     if allow_padding:
-        candidates = list(range(max(cap, 1), 0, -1))
+        candidates = list(range(cap, 0, -1))
     else:
         candidates = [d for d in range(cap, 0, -1) if grid_extent % d == 0] or [1]
 
@@ -333,6 +350,7 @@ __all__ = [
     "SUBLANE",
     "StreamPlan",
     "KernelPlan",
+    "affine_stage_bh_cap",
     "plan_affine_stage",
     "align_tpu_shape",
     "plan_matmul",

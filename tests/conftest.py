@@ -85,6 +85,47 @@ def is_exact_case(app_name: str, dtype: str) -> bool:
     return app_name in EXACT_APPS and dtype != "f32"
 
 
+def assert_carry_matches_recompute(
+    app, pp, inputs: Dict[str, np.ndarray], fuse: bool, ckw: Dict,
+    *, exact: bool, label: str = ""
+) -> None:
+    """Differential mode oracle (the ``linebuf`` sweep axis): whenever a
+    case's plan carries anything — line-buffered intermediates or ring
+    input deliveries — recompile with ``line_buffer=False`` (the PR 2
+    recompute-fusion scheme) and compare.  Each row is produced by the same
+    expression over the same elements whether it is computed this grid step
+    or carried from the previous one, so the outputs must be *bit*-equal
+    wherever the arithmetic is exactly f32-representable (``exact`` — the
+    same contract as fused-vs-unfused); elsewhere XLA may contract/vectorize
+    the two graphs' inexact products differently (observed: ulp-level
+    divergence confined to the last SIMD lanes of harris on i8/f32 inputs,
+    both sides within 1 ulp of the f64 reference), so the bound is a tight
+    allclose — still far below SWEEP_TOL, and any *data* bug (stale ring
+    rows, halo misalignment, a masked tail poisoning the next panel) blows
+    through it by orders of magnitude."""
+    if ckw.get("line_buffer") is False:
+        return
+    if not (pp.plan.n_rings or pp.plan.line_buffered):
+        return                          # nothing carried: modes coincide
+    from repro.backend import compile_pipeline
+
+    rc_kw = dict(ckw)
+    rc_kw["line_buffer"] = False
+    pp_rc = compile_pipeline(app.pipeline, fuse=fuse, **rc_kw)
+    got = np.asarray(pp(inputs))
+    got_rc = np.asarray(pp_rc(inputs))
+    if exact:
+        assert np.array_equal(got, got_rc), (
+            f"{label}: carry plan diverges from recompute fusion; "
+            f"max err {np.max(np.abs(got - got_rc))}"
+        )
+    else:
+        np.testing.assert_allclose(
+            got, got_rc, rtol=1e-4, atol=1e-4,
+            err_msg=f"{label}: carry plan diverges from recompute fusion",
+        )
+
+
 def assert_matches_reference(
     app, pp, inputs: Dict[str, np.ndarray], *, exact: bool, label: str = ""
 ) -> None:
@@ -141,6 +182,15 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
             ckw.setdefault("block_h", bh)
         if rng.random() < 0.2:
             ckw.setdefault("align_tpu", True)
+        # linebuf axis: forced carry / forced recompute / cost-driven auto.
+        # auto and forced-carry cases additionally run the recompute twin
+        # differentially (assert_carry_matches_recompute) whenever the plan
+        # carries anything, so every carrying case is mode-differential
+        r = rng.random()
+        if r < 0.25:
+            ckw.setdefault("line_buffer", False)
+        elif r < 0.45:
+            ckw.setdefault("line_buffer", True)
         cases.append((name, kw, dtype, fuse, ckw))
 
     primes = [5, 7, 11, 13, 17, 19, 23, 29, 31]
@@ -198,6 +248,24 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
         ("mobilenet", {"img": 7, "cin": 4, "cout": 4}, "u4", True, {"block_h": 3}),
         ("matmul", {"m": 19, "n": 13, "k": 11}, "u4", False, {"block_h": 4}),
     ]
+    # guaranteed-carry anchors: prime extents + forced line buffering, so
+    # the sweep always exercises carried halos across masked tail panels
+    # (and their recompute twins) on every carry-capable app
+    cases += [
+        ("unsharp", {"size": 15}, "u4", True, {"line_buffer": True}),
+        ("unsharp", {"size": 19}, "f32", True,
+         {"block_h": 5, "line_buffer": True}),
+        ("harris", {"schedule": "sch3", "size": 17}, "i8", True,
+         {"block_h": 5, "line_buffer": True}),
+        ("harris", {"schedule": "sch2", "size": 19}, "u4", True,
+         {"line_buffer": True}),
+        ("gaussian", {"size": 13}, "i8", True,
+         {"block_h": 4, "line_buffer": True}),
+        ("camera", {"size": 7}, "u4", True,
+         {"block_h": 3, "line_buffer": True}),
+        ("mobilenet", {"img": 7, "cin": 4, "cout": 4}, "u4", True,
+         {"block_h": 3, "line_buffer": True}),
+    ]
     return cases
 
 
@@ -213,4 +281,6 @@ def sweep_case_id(case: SweepCase) -> str:
         bits.append("al")
     if "red_grid_threshold" in ckw:
         bits.append("rg")
+    if "line_buffer" in ckw:
+        bits.append("lb" if ckw["line_buffer"] else "nolb")
     return "-".join(bits)

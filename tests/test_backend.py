@@ -446,11 +446,14 @@ def test_align_tpu_threads_through_pipeline():
 
 
 def test_gaussian_generates_row_shifted_streams():
-    """The generated 3x3 stencil must have the hand-written structure of
-    kernels/stencil.py: one row-shifted input view per vertical tap (the
-    shift-register chain lifted to rows), streamed over a >1-step grid."""
+    """The recompute-delivery 3x3 stencil must have the hand-written
+    structure of kernels/stencil.py: one row-shifted input view per vertical
+    tap (the shift-register chain lifted to rows), streamed over a >1-step
+    grid.  The default (line-buffered) plan collapses that class into one
+    streaming view at the leading tap plus a pinned 2-row warm-up view,
+    with a VMEM ring carrying the halo across grid steps."""
     app = make_app("gaussian")          # 64 input -> 62 output rows
-    pp = compile_pipeline(app.pipeline)
+    pp = compile_pipeline(app.pipeline, line_buffer=False)
     cs = pp.stage("gaussian")
     assert cs.streamed and cs.grid[0] > 1
     assert len(cs.groups) == 3
@@ -458,6 +461,21 @@ def test_gaussian_generates_row_shifted_streams():
     assert all(g.blocked_axis == 0 for g in cs.groups)
     # column taps hulled into the view width: W + 2 halo columns
     assert all(g.span[1] == 64 for g in cs.groups)
+
+    # line-buffered delivery: the three shifted views become one ring
+    pp = compile_pipeline(app.pipeline)
+    cs = pp.stage("gaussian")
+    assert len(cs.rings) == 1
+    ring = cs.rings[0]
+    assert (ring.lo, ring.hi, ring.halo) == (0, 2, 2)
+    steady, prefix = cs.groups[ring.steady], cs.groups[ring.prefix]
+    assert steady.k0 == 2 and not steady.pinned
+    assert prefix.k0 == 0 and prefix.pinned and prefix.rows0 == 2
+    assert len(cs.groups) == 2
+    # the ring delivers each input row once: 1 streaming view instead of 3
+    lb_bytes = pp.plan.hbm_bytes()
+    rc_bytes = compile_pipeline(app.pipeline, line_buffer=False).plan.hbm_bytes()
+    assert lb_bytes < rc_bytes
 
 
 def test_matmul_broadcast_stream():
@@ -600,6 +618,8 @@ def test_padded_grid_metadata_threaded():
     pg = ck.padded_grid
     assert pg is not None and pg.extent == 11
     for g in ck.groups:
+        if g.pinned:
+            continue                        # warm-up views are not gridded
         assert g.blocked_axis is not None and g.valid0 == 11
     sp = ck.kg.output
     assert sp.valid_e0 == 11

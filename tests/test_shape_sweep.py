@@ -21,6 +21,7 @@ import pytest
 
 from conftest import (
     SWEEP_SEED,
+    assert_carry_matches_recompute,
     assert_matches_reference,
     generate_sweep_cases,
     is_exact_case,
@@ -42,15 +43,25 @@ assert len(SWEEP_CASES) >= 200, len(SWEEP_CASES)
     ids=[f"{i:03d}-{sweep_case_id(c)}" for i, c in enumerate(SWEEP_CASES)],
 )
 def test_shape_sweep_differential(idx, case):
-    """One sweep case: compile under the drawn fusion/block/alignment
-    settings, run on inputs drawn from the case's dtype lattice, and check
-    every materialized kernel output against the reference interpreter."""
+    """One sweep case: compile under the drawn fusion/block/alignment/
+    line-buffer settings, run on inputs drawn from the case's dtype
+    lattice, and check every materialized kernel output against the
+    reference interpreter.  Whenever the plan carries anything (the
+    ``linebuf`` axis), the case additionally runs the ``line_buffer=False``
+    recompute twin — bit-identical where the arithmetic is exactly
+    f32-representable, ulp-tight elsewhere — prime extents and padded
+    tails included."""
     name, kw, dtype, fuse, ckw = case
     app = make_app(name, **kw)
     pp = compile_pipeline(app.pipeline, fuse=fuse, **ckw)
     inputs = sweep_inputs(app, SWEEP_SEED + idx, dtype)
     assert_matches_reference(
         app, pp, inputs,
+        exact=is_exact_case(name, dtype),
+        label=sweep_case_id(case),
+    )
+    assert_carry_matches_recompute(
+        app, pp, inputs, fuse, ckw,
         exact=is_exact_case(name, dtype),
         label=sweep_case_id(case),
     )
@@ -71,6 +82,29 @@ def test_sweep_covers_padded_plans_per_app():
         "camera", "resnet", "mobilenet", "matmul",
     ):
         assert padded_by_app.get(name, 0) >= 1, (name, padded_by_app)
+
+
+def test_sweep_covers_carry_plans_per_app():
+    """The linebuf axis is not vacuous: for every carry-capable app the
+    sweep contains cases whose plans actually hold line-buffered stages or
+    ring deliveries — including padded plans, so carried halos cross masked
+    tails somewhere in the sweep.  Plan-only, so this check is cheap."""
+    carrying = {}
+    carrying_padded = {}
+    for name, kw, _, fuse, ckw in SWEEP_CASES:
+        if ckw.get("line_buffer") is False:
+            continue
+        plan = build_pipeline_plan(make_app(name, **kw).pipeline, fuse=fuse, **ckw)
+        if plan.n_rings or plan.line_buffered:
+            carrying[name] = carrying.get(name, 0) + 1
+            if any(
+                kg.padded_grid is not None and (kg.rings or kg.line_buffered)
+                for kg in plan.kernels
+            ):
+                carrying_padded[name] = carrying_padded.get(name, 0) + 1
+    for name in ("gaussian", "harris", "unsharp", "camera", "mobilenet"):
+        assert carrying.get(name, 0) >= 1, (name, carrying)
+        assert carrying_padded.get(name, 0) >= 1, (name, carrying_padded)
 
 
 def test_flagship_prime_extents_191x253():
