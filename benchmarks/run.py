@@ -14,6 +14,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
+    if "--bench-smoke" in sys.argv[1:]:
+        sys.exit(bench_smoke_check())
+
     from benchmarks.paper_tables import ALL_TABLES
 
     for fn in ALL_TABLES:
@@ -38,6 +41,51 @@ def write_backend_bench(path: str | None = None) -> str:
         json.dump({"generated_kernels": rows}, f, indent=2)
     print(f"# wrote {os.path.normpath(path)} ({len(rows)} generated-kernel entries)")
     return path
+
+
+def bench_smoke_check(path: str | None = None) -> int:
+    """``--bench-smoke``: regenerate the two fast benchmark rows (gaussian +
+    matmul) and diff their key sets against the rows persisted in
+    BENCH_backend.json.  A benchmark-schema change that was not
+    re-persisted (stale-schema drift) fails here — in seconds, instead of
+    being discovered after a full benchmark run or, worse, shipping a JSON
+    whose columns no longer match the code that wrote it."""
+    import json
+
+    from benchmarks.kernel_bench import backend_rows
+
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..", "BENCH_backend.json")
+    with open(path) as f:
+        persisted = {r["kernel"]: r for r in json.load(f)["generated_kernels"]}
+    problems = []
+    fresh = backend_rows(smoke=True)
+    for row in fresh:
+        old = persisted.get(row["kernel"])
+        if old is None:
+            problems.append(
+                f"{row['kernel']}: row missing from {os.path.normpath(path)} "
+                f"(benchmark gained a row that was never persisted)"
+            )
+            continue
+        missing = sorted(set(row) - set(old))
+        stale = sorted(set(old) - set(row))
+        if missing or stale:
+            problems.append(
+                f"{row['kernel']}: schema drift vs persisted row — "
+                f"persisted lacks {missing or '-'}, "
+                f"persisted has stale {stale or '-'}"
+            )
+    for p in problems:
+        print(f"bench-smoke: {p}", file=sys.stderr)
+    if problems:
+        print(
+            "bench-smoke: regenerate with `python -m benchmarks.run`",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"bench-smoke: {len(fresh)} rows match the persisted schema")
+    return 0
 
 
 if __name__ == "__main__":

@@ -1,22 +1,42 @@
 #!/usr/bin/env bash
 # Tier-1 verification + backend smoke test.
 #
-#   bash scripts/ci.sh            # full suite
-#   bash scripts/ci.sh --fast     # skip the slow end-to-end system tests
-#   bash scripts/ci.sh --backend  # backend (plan/emit) suite standalone
+#   bash scripts/ci.sh               # full suite
+#   bash scripts/ci.sh --fast        # skip the slow end-to-end system tests
+#   bash scripts/ci.sh --backend     # backend (plan/emit) suite standalone
+#   bash scripts/ci.sh --bench-smoke # regenerate 2 BENCH rows, check schema
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Wall-clock budget for the backend suite: the recorded baseline (seconds,
+# measured on the reference container after the 2-D-lane/compiled-path PR:
+# backend 40s + linebuf 20s + sweep 360s + demo 30s ~= 450s) times a
+# generous multiplier for slower CI machines.  A runaway suite — e.g. a
+# planner change that silently blows up grid sizes, or jit bind reuse
+# regressing back to per-call re-tracing — fails loudly here instead of
+# quietly doubling CI time.  Override via BACKEND_BUDGET_MULT / the
+# baseline via BACKEND_BASELINE_S.
+BACKEND_BASELINE_S="${BACKEND_BASELINE_S:-450}"
+BACKEND_BUDGET_MULT="${BACKEND_BUDGET_MULT:-3}"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    # regenerate the two fast benchmark rows and diff their key sets
+    # against BENCH_backend.json — catches stale-schema drift in seconds
+    python -m benchmarks.run --bench-smoke
+    exit 0
+fi
 
 if [[ "${1:-}" == "--backend" ]]; then
     # the Stage->Pallas plan/emit suite on its own (marker-gated), then the
     # cross-grid-step line-buffer suite (carry-vs-recompute properties,
     # exactly-once eval counters, resident grid-reduction operands), then
     # the differential shape-sweep harness: >=200 deterministic (app,
-    # extent, dtype, fusion, block, linebuf) cases against the reference
-    # interpreter, including padded grids / masked tails on non-divisor
-    # extents, with every carrying plan also diffed bit-exactly against its
+    # extent, dtype, fusion, block, linebuf, lanes) cases against the
+    # reference interpreter, including padded grids / masked tails on
+    # non-divisor extents and 2-D lane-blocked grids on non-divisor
+    # widths, with every carrying plan also diffed bit-exactly against its
     # recompute-fusion twin.  The sweep is seeded (tests/conftest.
     # SWEEP_SEED) and any hypothesis layer runs derandomized under the
     # registered "sweep" profile, so CI replays the identical case list
@@ -24,11 +44,25 @@ if [[ "${1:-}" == "--backend" ]]; then
     # lower -> plan -> Pallas (interpret mode), diff against the reference
     # interpreter, and assert the plan shape against the golden table
     # (fused kernel counts, line-buffer decisions + their traffic and
-    # recompute deltas, grid reduction for big K)
+    # recompute deltas, grid reduction for big K).
+    #
+    # The whole block runs under a wall-clock budget pinned to the recorded
+    # baseline (see above).
+    start_s=$SECONDS
     python -m pytest -q -m backend
     python -m pytest -q -m linebuf
     HYPOTHESIS_PROFILE=sweep python -m pytest -q -m sweep
     python -m repro.backend.demo --smoke
+    elapsed_s=$((SECONDS - start_s))
+    budget_s=$((BACKEND_BASELINE_S * BACKEND_BUDGET_MULT))
+    echo "backend suite wall-clock: ${elapsed_s}s (budget ${budget_s}s =" \
+         "${BACKEND_BASELINE_S}s baseline x${BACKEND_BUDGET_MULT})"
+    if (( elapsed_s > budget_s )); then
+        echo "backend suite exceeded its wall-clock budget" \
+             "(${elapsed_s}s > ${budget_s}s); a perf regression or runaway" \
+             "plan change — profile before raising BACKEND_BASELINE_S" >&2
+        exit 1
+    fi
     exit 0
 fi
 

@@ -64,10 +64,14 @@ class AppBundle:
 # ---------------------------------------------------------------------------
 
 
-def build_gaussian(size: int = 64) -> AppBundle:
+def build_gaussian(size: int = 64, width: int = None) -> AppBundle:
     """``size`` is the *input tile* edge (the paper's convention); the output
-    shrinks by the stencil halo."""
-    out_sz = size - 2
+    shrinks by the stencil halo.  ``width`` makes the tile rectangular
+    (``size`` rows x ``width`` columns) — the wide-extent shape the
+    lane-blocked 2-D grids exist for."""
+    if width is None:
+        width = size
+    out_h, out_w = size - 2, width - 2
     inp = Func.input("input", 2)
     blur = Func("gaussian")
     w = [1, 2, 1, 2, 4, 2, 1, 2, 1]
@@ -80,11 +84,11 @@ def build_gaussian(size: int = 64) -> AppBundle:
     blur[x, y] = balanced_sum(terms) / 16
     blur.hw_accelerate()
     funcs = [inp, blur]
-    pipe = lower_pipeline(blur, funcs, {"x": out_sz, "y": out_sz})
+    pipe = lower_pipeline(blur, funcs, {"x": out_w, "y": out_h})
     return AppBundle(
         "gaussian", "stencil", pipe, funcs, blur,
-        {"x": out_sz, "y": out_sz},
-        {"input": (size, size)},
+        {"x": out_w, "y": out_h},
+        {"input": (size, width)},
         description="3x3 convolutional blur",
     )
 

@@ -10,7 +10,13 @@ this package for the Stage -> plan -> grid/BlockSpec correspondence.
 """
 
 from .access import AxisAccess, LoadAccess, UnsupportedAccessError, decompose_stage
-from .codegen import CompiledKernel, CompiledStage, compile_stage, emit_kernel
+from .codegen import (
+    CompiledKernel,
+    CompiledStage,
+    compile_stage,
+    emit_kernel,
+    resolve_mode,
+)
 from .plan import (
     FusionInfeasible,
     KernelGroup,
@@ -26,8 +32,11 @@ from .plan import (
 )
 from .runner import (
     PallasPipeline,
+    clear_pipeline_cache,
     compile_pipeline,
     max_abs_error,
+    pipeline_cache_size,
+    plan_cache_key,
     reference_arrays,
 )
 
@@ -53,6 +62,10 @@ __all__ = [
     "scheduler_cost",
     "PallasPipeline",
     "compile_pipeline",
+    "plan_cache_key",
+    "clear_pipeline_cache",
+    "pipeline_cache_size",
+    "resolve_mode",
     "max_abs_error",
     "reference_arrays",
 ]

@@ -85,11 +85,18 @@ class _StageCtx:
         self.block_shape = sp.panel_shape(kg.bh)
         self.rows = self.block_shape[0] if self.streamed else None
         self.lower = dict(sp.nstage.dim_lower)
+        # lane blocking: the trailing pure dim is tiled over grid dim 1
+        self.lane = kg.lane_grid is not None and self.streamed
+        self.bw = kg.bw
+        self.lane_dim = sp.nstage.pure_dims[-1] if self.lane else None
         # grid positions, assigned once at the top of the kernel body: in
         # interpret mode ``pl.program_id`` cannot be bound inside a
         # ``pl.when`` branch, so every use site reads these hoisted values
+        # (which also keeps the emitted kernel legal in compiled mode, where
+        # the same hoisting is simply redundant)
         self.step0 = 0
         self.stepk = 0
+        self.stepj = 0
 
     def with_rows(self, rows: int) -> "_StageCtx":
         """A copy evaluating only the first ``rows`` rows of the panel."""
@@ -103,22 +110,38 @@ class _StageCtx:
     def extent(self, dim: str) -> int:
         if dim == self.d0 and self.streamed:
             return self.rows
+        if self.lane and dim == self.lane_dim:
+            return self.bw
         return self.nstage.extent(dim)
 
-    def row_mask(self):
-        """Valid-row mask of this stage's panel at the current grid step, or
-        None when the grid is unpadded.  Under a padded grid the tail block
-        hangs past the extent: its delivered rows are undefined (NaN in
-        interpret mode), so every stored or accumulated panel is masked to
-        exact zeros on rows at or above the stage's valid extent."""
+    def panel_mask(self):
+        """Valid-element mask of this stage's panel at the current grid
+        step, or None when no grid dim is padded.  Under a padded row grid
+        the tail block hangs past the extent; under a padded lane grid the
+        tail lane block does the same on the trailing dim.  Delivered
+        out-of-range elements are undefined (NaN in interpret mode), so
+        every stored or accumulated panel is masked to exact zeros on rows
+        (and lanes) at or above the stage's valid extent."""
+        mask = None
         pg = self.kg.padded_grid
-        if pg is None or not self.streamed:
-            return None
-        # every view stream (and hence every scratch panel derived from it)
-        # delivers pg.extent valid blocked-axis elements — the kernel
-        # output's extent, which also bounds each fused stage's demand
-        rows = jax.lax.broadcasted_iota(jnp.int32, self.block_shape, 0)
-        return rows + self.step0 * self.bh < pg.extent
+        if pg is not None and self.streamed:
+            # every view stream (and hence every scratch panel derived from
+            # it) delivers pg.extent valid blocked-axis elements — the
+            # kernel output's extent, which also bounds each fused stage's
+            # demand
+            rows = jax.lax.broadcasted_iota(jnp.int32, self.block_shape, 0)
+            mask = rows + self.step0 * self.bh < pg.extent
+        lg = self.kg.lane_grid
+        if self.lane and lg is not None and lg.pad > 0:
+            lanes = jax.lax.broadcasted_iota(
+                jnp.int32, self.block_shape, len(self.block_shape) - 1
+            )
+            lmask = lanes + self.stepj * self.bw < lg.extent
+            mask = lmask if mask is None else jnp.logical_and(mask, lmask)
+        return mask
+
+    # pre-lane name, kept for introspection/tests
+    row_mask = panel_mask
 
     def red_ranges(self) -> List[range]:
         rg = self.kg.red_grid
@@ -135,6 +158,7 @@ def _tap(
     load_idx: int,
     rho: Mapping[str, int],
     shift: int,
+    lshift: int = 0,
 ):
     """Extract one load's value lattice — from a delivered view block, a
     cross-grid-step ring (input delivery or line-buffered intermediate), or
@@ -153,13 +177,23 @@ def _tap(
             # [slot - lo, slot - lo + bh) of the persistent ring
             block = scratch[(pname, None)][...]
             lead: object = slice(slot - plb.lo, slot - plb.lo + ctx.rows)
+        elif ctx.lane:
+            # lane-blocked producer: the (row, lane)-shift panel holds the
+            # tap's bw columns exactly (lane offset baked into the slot)
+            lslot = la.axes[-1].offset_at(rho) + lshift
+            block = scratch[(pname, (slot, lslot))][...]
+            lead = slice(None) if ctx.rows == ctx.bh else slice(0, ctx.rows)
         else:
             block = scratch[(pname, slot)][...]
             lead = slice(None) if ctx.rows == ctx.bh else slice(0, ctx.rows)
+        last = len(la.axes) - 1
         for j, ax in enumerate(la.axes):
             if j == 0:
                 idx.append(lead)                    # the blocked dim
                 tags.append(ctx.d0)
+            elif ctx.lane and j == last:
+                idx.append(slice(None))             # the lane-blocked dim
+                tags.append(ax.pure_dim)
             elif ax.pure_dim is not None:
                 ep = ctx.extent(ax.pure_dim)
                 start = ax.offset_at(rho)           # scratch axes are zero-based
@@ -169,7 +203,13 @@ def _tap(
                 idx.append(ax.offset_at(rho))       # squeezed static index
     else:
         j0 = sp.blocked_axis_of[load_idx]
-        key = (shift, la.axes[j0].offset_at(rho)) if j0 is not None else (shift, None)
+        jL = sp.lane_axis_of[load_idx] if sp.lane_axis_of else None
+        roff = la.axes[j0].offset_at(rho) if j0 is not None else None
+        if ctx.lane:
+            loff = la.axes[jL].offset_at(rho) if jL is not None else None
+            key: Tuple = (shift, roff, lshift, loff)
+        else:
+            key = (shift, roff)
         ring_hit = sp.ring_binding[load_idx].get(key) if sp.ring_binding else None
         if ring_hit is not None:
             # ring-delivered input: this tap's window starts t0 lattice rows
@@ -195,6 +235,11 @@ def _tap(
                 if j0 is not None and j == j0:
                     idx.append(slice(None) if ctx.rows == ctx.bh else slice(0, ctx.rows))
                     tags.append(ctx.d0)
+                elif ctx.lane and jL is not None and j == jL:
+                    # lane-blocked axis: the delivered block is the tap's
+                    # bw columns (lane offset baked into the view start)
+                    idx.append(slice(None))
+                    tags.append(ax.pure_dim)
                 elif j == g.red_axis and g.resident:
                     # whole operand resident in VMEM: index the global
                     # reduction position (grid chunk * chunk + in-chunk rho)
@@ -226,6 +271,7 @@ def _emit(
     rho: Mapping[str, int],
     shift: int,
     counter: List[int],
+    lshift: int = 0,
 ):
     if isinstance(e, Const):
         return float(e.value)
@@ -241,14 +287,16 @@ def _emit(
         iota = jax.lax.broadcasted_iota(jnp.int32, ctx.block_shape, ax)
         if ctx.streamed and ax == 0:
             iota = iota + ctx.step0 * ctx.bh + shift
+        elif ctx.lane and e.name == ctx.lane_dim:
+            iota = iota + ctx.stepj * ctx.bw + lshift
         return (iota + lo).astype(jnp.float32)
     if isinstance(e, FuncRef):
         k = counter[0]
         counter[0] += 1
-        return _tap(ctx, refs, scratch, k, rho, shift)
+        return _tap(ctx, refs, scratch, k, rho, shift, lshift)
     if isinstance(e, BinOp):
-        a = _emit(e.a, ctx, refs, scratch, rho, shift, counter)
-        b = _emit(e.b, ctx, refs, scratch, rho, shift, counter)
+        a = _emit(e.a, ctx, refs, scratch, rho, shift, counter, lshift)
+        b = _emit(e.b, ctx, refs, scratch, rho, shift, counter, lshift)
         if e.op == "add":
             return a + b
         if e.op == "sub":
@@ -273,38 +321,43 @@ def _emit(
             return jnp.where(jnp.asarray(a) > b, 1.0, 0.0)
         raise UnsupportedAccessError(f"binop {e.op} not supported by codegen")
     if isinstance(e, Select):
-        c = _emit(e.cond, ctx, refs, scratch, rho, shift, counter)
-        t = _emit(e.if_true, ctx, refs, scratch, rho, shift, counter)
-        f = _emit(e.if_false, ctx, refs, scratch, rho, shift, counter)
+        c = _emit(e.cond, ctx, refs, scratch, rho, shift, counter, lshift)
+        t = _emit(e.if_true, ctx, refs, scratch, rho, shift, counter, lshift)
+        f = _emit(e.if_false, ctx, refs, scratch, rho, shift, counter, lshift)
         return jnp.where(jnp.asarray(c) != 0, t, f)
     raise UnsupportedAccessError(f"cannot compile {e!r}")
 
 
-def _stage_panel(ctx: _StageCtx, refs, scratch, shift: int, when: str = "every"):
-    """One stage's panel value at ``shift`` (in-kernel reductions unrolled).
-    ``when`` tags which grid steps execute this evaluation site ("every" or
-    "step0") for the eval-trace instrumentation."""
+def _stage_panel(
+    ctx: _StageCtx, refs, scratch, shift: int, lshift: int = 0,
+    when: str = "every",
+):
+    """One stage's panel value at row shift ``shift`` and lane shift
+    ``lshift`` (in-kernel reductions unrolled).  ``when`` tags which grid
+    steps execute this evaluation site ("every" or "step0") for the
+    eval-trace instrumentation."""
     if EVAL_TRACE is not None:
         EVAL_TRACE.append({
             "kernel": ctx.kg.name,
             "stage": ctx.sp.name,
             "shift": shift,
+            "lane_shift": lshift,
             "rows": ctx.rows if ctx.rows is not None else ctx.block_shape[0],
             "when": when,
         })
     ns = ctx.nstage
     if ns.red_dims:
-        acc = _emit(ns.init, ctx, refs, scratch, {}, shift, [0])
+        acc = _emit(ns.init, ctx, refs, scratch, {}, shift, [0], lshift)
         acc = jnp.broadcast_to(
             jnp.asarray(acc, jnp.float32), ctx.block_shape
         ).astype(jnp.float32)
         for combo in itertools.product(*ctx.red_ranges()):
             rho = dict(zip(ns.red_dims, combo))
-            acc = acc + _emit(ns.value, ctx, refs, scratch, rho, shift, [0])
+            acc = acc + _emit(ns.value, ctx, refs, scratch, rho, shift, [0], lshift)
     else:
-        acc = _emit(ns.value, ctx, refs, scratch, {}, shift, [0])
+        acc = _emit(ns.value, ctx, refs, scratch, {}, shift, [0], lshift)
     panel = jnp.broadcast_to(jnp.asarray(acc, jnp.float32), ctx.block_shape)
-    mask = ctx.row_mask()
+    mask = ctx.panel_mask()
     if mask is not None:
         panel = jnp.where(mask, panel, 0.0)
     return panel
@@ -313,6 +366,23 @@ def _stage_panel(ctx: _StageCtx, refs, scratch, shift: int, when: str = "every")
 # ---------------------------------------------------------------------------
 # Kernel emission
 # ---------------------------------------------------------------------------
+
+
+def resolve_mode(mode: str) -> str:
+    """Resolve the execution-mode switch: ``"interpret"`` runs every
+    ``pallas_call`` through the Pallas interpreter (portable, slow),
+    ``"compiled"`` emits real Mosaic kernels (requires a TPU jax backend —
+    the emitted kernels use TPU VMEM scratch, which the GPU/Triton path
+    cannot lower), and ``"auto"`` picks compiled when the default jax
+    backend is a TPU and falls back cleanly to interpret everywhere else
+    (CPU and GPU alike)."""
+    if mode == "auto":
+        return "compiled" if jax.default_backend() == "tpu" else "interpret"
+    if mode in ("interpret", "compiled"):
+        return mode
+    raise ValueError(
+        f"unknown backend mode {mode!r}; use 'interpret' | 'compiled' | 'auto'"
+    )
 
 
 @dataclass
@@ -324,6 +394,7 @@ class CompiledKernel:
     nstage: NormalizedStage           # output stage
     plan: KernelPlan                  # unified-buffer introspection
     _call: Callable
+    mode: str = "interpret"
 
     def __call__(self, buffers: Mapping[str, jax.Array]) -> jax.Array:
         return self._call(buffers)
@@ -385,17 +456,35 @@ class CompiledKernel:
     def bindings(self) -> List[Dict[Optional[int], int]]:
         """Pre-refactor binding view (offset -> group) of the output stage."""
         return [
-            {off: g for (s, off), g in vb.items() if s == 0}
+            {k[1]: g for k, g in vb.items() if k[0] == 0}
             for vb in self.kg.output.view_binding
         ]
 
+    @property
+    def lane_grid(self):
+        return self.kg.lane_grid
+
+    @property
+    def bw(self):
+        return self.kg.bw
+
     # -- delivery arithmetic (mirrors the kernel; used by property tests) -----
-    def _group_of(self, load_idx: int, rho: Mapping[str, int]) -> ViewGroup:
+    def _bind_key(self, load_idx: int, rho: Mapping[str, int]) -> Tuple:
         sp = self.kg.output
         la = sp.accesses[load_idx]
         j0 = sp.blocked_axis_of[load_idx]
-        key = (0, la.axes[j0].offset_at(rho)) if j0 is not None else (0, None)
-        return self.kg.groups[sp.view_binding[load_idx][key]]
+        roff = la.axes[j0].offset_at(rho) if j0 is not None else None
+        if self.kg.lane_grid is None:
+            return (0, roff)
+        jL = sp.lane_axis_of[load_idx]
+        loff = la.axes[jL].offset_at(rho) if jL is not None else None
+        return (0, roff, 0, loff)
+
+    def _group_of(self, load_idx: int, rho: Mapping[str, int]) -> ViewGroup:
+        sp = self.kg.output
+        return self.kg.groups[
+            sp.view_binding[load_idx][self._bind_key(load_idx, rho)]
+        ]
 
     def element_for(self, load_idx: int, point: Mapping[str, int]) -> Tuple[int, ...]:
         """Producer element the generated kernel reads for load ``load_idx``
@@ -433,12 +522,19 @@ class CompiledKernel:
                     elem.append(e)
             return tuple(elem)
         g = self._group_of(load_idx, rho)
-        slices = g.view_slices(self.kg.e0)
-        block_shape = g.block_shape(self.bh)
+        slices = g.view_slices(self.kg.e0, self.kg.e1)
+        block_shape = g.block_shape(self.bh, self.kg.bw)
+        dL = ns.pure_dims[-1] if self.kg.lane_grid is not None else None
         step0 = point[d0] // self.bh if g.blocked_axis is not None else 0
-        stepk = point[rg.dim] // rg.chunk if g.red_axis is not None else 0
+        if g.lane_axis is not None:
+            step1 = point[dL] // self.kg.bw
+        elif g.red_axis is not None:
+            step1 = point[rg.dim] // rg.chunk
+        else:
+            step1 = 0
+        dim1 = "lane" if self.kg.lane_grid is not None else "red"
         block_idx = (
-            g.index_map(len(self.grid))(step0, stepk)
+            g.index_map(len(self.grid), dim1)(step0, step1)
             if len(self.grid) > 1
             else g.index_map(1)(step0)
         )
@@ -446,6 +542,8 @@ class CompiledKernel:
         for j, ax in enumerate(la.axes):
             if j == g.blocked_axis:
                 local = point[d0] % self.bh            # full-panel tap
+            elif j == g.lane_axis:
+                local = point[dL] % self.kg.bw         # lane offset in view l0
             elif j == g.red_axis and g.resident:
                 # resident operand: the kernel indexes the global reduction
                 # position, not the in-chunk offset
@@ -470,11 +568,13 @@ class CompiledKernel:
         return sp.ring_binding[load_idx].get(key)
 
     def delivered_interval(
-        self, load_idx: int, axis_j: int, grid_step: int, rho: Mapping[str, int]
+        self, load_idx: int, axis_j: int, grid_step: int,
+        rho: Mapping[str, int], lane_step: int = 0,
     ) -> Tuple[int, int, int]:
         """(lo, hi, step) of producer elements available in VMEM on
-        ``axis_j`` at ``grid_step`` for this load: the BlockSpec's delivered
-        block, or the ring's coverage for ring-delivered taps."""
+        ``axis_j`` at ``grid_step`` (and, for lane-blocked kernels,
+        ``lane_step``) for this load: the BlockSpec's delivered block, or
+        the ring's coverage for ring-delivered taps."""
         if self.kg.fused:
             raise NotImplementedError("delivered_interval covers unfused kernels only")
         rg = self.kg.red_grid
@@ -495,6 +595,9 @@ class CompiledKernel:
         if axis_j == g.blocked_axis:
             lo = g.k0 + g.stride0 * grid_step * self.bh
             return lo, lo + g.stride0 * (self.bh - 1), g.stride0
+        if axis_j == g.lane_axis:
+            lo = g.l0 + g.lane_stride * lane_step * self.kg.bw
+            return lo, lo + g.lane_stride * (self.kg.bw - 1), g.lane_stride
         if axis_j == g.red_axis:
             if g.resident:
                 return g.base[axis_j], g.base[axis_j] + g.span[axis_j] - 1, 1
@@ -503,9 +606,29 @@ class CompiledKernel:
         return g.base[axis_j], g.base[axis_j] + g.span[axis_j] - 1, 1
 
 
-def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
+def emit_kernel(
+    kg: KernelGroup, *, interpret: bool = True, mode: Optional[str] = None
+) -> CompiledKernel:
     """Emit one executable ``pallas_call`` from a planned kernel group.
-    All shape information (and its bounds validation) lives in the plan."""
+    All shape information (and its bounds validation) lives in the plan.
+
+    ``mode`` (when given) supersedes ``interpret``: ``"interpret"`` |
+    ``"compiled"`` | ``"auto"`` (see :func:`resolve_mode`).  The emitted
+    closure is wrapped in ``jax.jit``, so repeated calls with same-shaped
+    buffers reuse the first call's trace — binding new buffers to an
+    already-emitted kernel is cheap (the plan/emit/bind split)."""
+    if mode is not None:
+        mode = resolve_mode(mode)
+        interpret = mode != "compiled"
+    else:
+        mode = "interpret" if interpret else "compiled"
+    if mode == "compiled" and jax.default_backend() != "tpu":
+        raise RuntimeError(
+            f"backend mode 'compiled' emits real (non-interpret) Mosaic "
+            f"kernels with TPU VMEM scratch and needs a TPU jax backend; "
+            f"default_backend() is {jax.default_backend()!r}.  Use "
+            f"mode='auto' to fall back to interpret mode off-TPU."
+        )
     ctxs = {sp.name: _StageCtx(kg, sp) for sp in kg.stages}
     scratch_entries = kg.scratch_entries()
     n_groups = len(kg.groups)
@@ -513,6 +636,7 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
     out_sp = kg.output
     out_ctx = ctxs[out_sp.name]
     rg = kg.red_grid
+    lane = kg.lane_grid is not None
 
     def kernel(*args):
         refs = args[:n_groups]
@@ -526,13 +650,16 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
             scratch[(_RING, r_idx)] = ref
         bh = kg.bh
         i0 = pl.program_id(0)
-        kprog = pl.program_id(n_grid - 1) if n_grid > 1 else 0
+        # grid dim 1 is the reduction chunk *or* the lane block, never both
+        kprog = pl.program_id(n_grid - 1) if rg is not None else 0
+        jprog = pl.program_id(1) if lane else 0
         for ctx in ctxs.values():
             ctx.step0 = i0
             ctx.stepk = kprog
+            ctx.stepj = jprog
         # under a grid reduction the reduction chunk (last grid dim) varies
         # fastest: ring maintenance must run once per row panel, on chunk 0
-        kfirst = kprog == 0 if n_grid > 1 else None
+        kfirst = kprog == 0 if rg is not None else None
 
         def _guard(cond):
             return cond if kfirst is None else jnp.logical_and(cond, kfirst)
@@ -563,7 +690,12 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
         # one panel per demanded shift
         for sp, key in scratch_entries:
             ctx = ctxs[sp.name]
-            if key is None:
+            if isinstance(key, tuple):
+                # lane-blocked recompute panel at (row shift, lane shift)
+                scratch[(sp.name, key)][...] = _stage_panel(
+                    ctx, refs, scratch, key[0], key[1]
+                )
+            elif key is None:
                 lb = sp.line_buffer
                 halo = lb.halo
                 ref = scratch[(sp.name, None)]
@@ -589,7 +721,7 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
             # block, element update order identical to the unrolled path
             k = kprog
             init = _emit(ns.init, out_ctx, refs, scratch, {}, 0, [0])
-            mask = out_ctx.row_mask()
+            mask = out_ctx.panel_mask()
 
             @pl.when(k == 0)
             def _init():
@@ -626,13 +758,18 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
         for ctx in ctxs.values():
             ctx.step0 = 0
             ctx.stepk = 0
+            ctx.stepj = 0
 
+    dim1 = "lane" if lane else "red"
     in_specs = [
-        pl.BlockSpec(g.block_shape(kg.bh), g.index_map(n_grid)) for g in kg.groups
+        pl.BlockSpec(g.block_shape(kg.bh, kg.bw), g.index_map(n_grid, dim1))
+        for g in kg.groups
     ]
     out_nd = len(out_ctx.block_shape)
     if n_grid == 1:
         out_index = lambda i, nd=out_nd: (i,) + (0,) * (nd - 1)
+    elif lane:
+        out_index = lambda i, j, nd=out_nd: (i,) + (0,) * (nd - 2) + (j,)
     else:
         out_index = lambda i, k, nd=out_nd: (i,) + (0,) * (nd - 1)
     out_spec = pl.BlockSpec(out_ctx.block_shape, out_index)
@@ -646,11 +783,23 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
             pltpu.VMEM(r.ring_shape(kg.bh), jnp.float32) for r in kg.rings
         ]
     e0 = kg.e0
+    e1 = kg.e1
 
-    def call(buffers: Mapping[str, jax.Array]) -> jax.Array:
-        kg.validate_buffers(buffers)
+    # one buffer slot per distinct producer: the jitted closure takes the
+    # backing arrays positionally and carves every planned view inside the
+    # trace, so re-binding new buffers hits the jit cache (no re-trace)
+    buffer_order: List[str] = []
+    for g in kg.groups:
+        if g.buffer not in buffer_order:
+            buffer_order.append(g.buffer)
+    slot_of = {b: i for i, b in enumerate(buffer_order)}
+
+    @jax.jit
+    def _invoke(arrays):
         views = [
-            jnp.asarray(buffers[g.buffer], jnp.float32)[g.view_slices(e0)]
+            jnp.asarray(arrays[slot_of[g.buffer]], jnp.float32)[
+                g.view_slices(e0, e1)
+            ]
             for g in kg.groups
         ]
         return pl.pallas_call(
@@ -663,12 +812,17 @@ def emit_kernel(kg: KernelGroup, *, interpret: bool = True) -> CompiledKernel:
             **call_kwargs,
         )(*views)
 
+    def call(buffers: Mapping[str, jax.Array]) -> jax.Array:
+        kg.validate_buffers(buffers)
+        return _invoke(tuple(buffers[b] for b in buffer_order))
+
     return CompiledKernel(
         name=out_sp.name,
         kg=kg,
         nstage=out_sp.nstage,
         plan=kg.ub_plan(),
         _call=call,
+        mode=mode,
     )
 
 
@@ -677,7 +831,9 @@ def compile_stage(
     buffer_shapes: Mapping[str, Tuple[int, ...]],
     *,
     interpret: bool = True,
+    mode: Optional[str] = None,
     block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
     vmem_budget: int = VMEM_BYTES,
     grid_reduction: bool = False,
     red_grid_threshold: int = RED_GRID_THRESHOLD,
@@ -698,6 +854,7 @@ def compile_stage(
         [(nstage, accesses, streamed)],
         buffer_shapes,
         block_h=block_h,
+        block_w=block_w,
         vmem_budget=vmem_budget,
         cost_model=cost_model,
         grid_reduction=grid_reduction,
@@ -705,7 +862,7 @@ def compile_stage(
         line_buffer=line_buffer,
         red_resident=red_resident,
     )
-    return emit_kernel(kg, interpret=interpret)
+    return emit_kernel(kg, interpret=interpret, mode=mode)
 
 
 # pre-refactor name: a single-stage CompiledKernel is the old CompiledStage
@@ -717,4 +874,5 @@ __all__ = [
     "ViewGroup",
     "compile_stage",
     "emit_kernel",
+    "resolve_mode",
 ]

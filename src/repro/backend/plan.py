@@ -45,7 +45,18 @@ Planning passes, in order:
      ``core/scheduling.raster_cycles``, including the carry/warm-up terms;
      any height is legal — a non-divisor block yields a :class:`PaddedGrid`
      (grid = ``ceil(extent / bh)``, tail block masked by the emitter), with
-     the padding waste priced into the cost like any other step.
+     the padding waste priced into the cost like any other step,
+  6. **lane blocking** — the trailing (lane) dimension can enter the grid
+     too: a 2-D grid ``(ceil(e0/bh), ceil(e1/bw))`` with a lane-tail mask
+     mirroring the row mask, engaged explicitly (``block_w``) or
+     automatically when even a one-row full-width panel would blow the VMEM
+     budget (the paper's vectorize-to-lane-width rule, Eq. 2: a lane block
+     is a whole number of 128-wide fetches).  Column taps become per-offset
+     shifted views and fused intermediates recompute per demanded *lane
+     shift* — the PR 2 recompute scheme applied along the second axis —
+     while ``align_tpu`` rounds ``bw`` itself to 128-lane multiples so the
+     emitted blocks (not just the ``aligned_blocks()`` report) are
+     hardware-tileable.
 """
 
 from __future__ import annotations
@@ -57,10 +68,12 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 from repro.core.scheduling import raster_cycles
 from repro.core.ubplan import (
     KernelPlan,
+    LANE,
     StreamPlan,
     VMEM_BYTES,
     affine_stage_bh_cap,
     align_tpu_shape,
+    lane_width_candidates,
     plan_affine_stage,
 )
 from repro.frontend.expr import expr_depth, refs_in
@@ -83,6 +96,16 @@ VMEM_BYTES_PER_CYCLE = 8 * HBM_BYTES_PER_CYCLE
 # chunked into the grid; each chunk is at most MAX_RED_CHUNK in-kernel steps
 RED_GRID_THRESHOLD = 256
 MAX_RED_CHUNK = 128
+
+# fixed per-grid-step cost of maintaining one cross-grid-step ring: the
+# pl.when rotate/warm-up branches plus the copy issue.  A contiguous
+# (stride-1) rotation is a lane-wide VMEM move and rides the memory side at
+# VMEM_BYTES_PER_CYCLE; a *strided* ring (e.g. camera's stride-2 demosaic
+# parity class) cannot coalesce its rotation into wide vector moves, so its
+# elements are priced serially at ~1 element/cycle on top of the raster —
+# which is what makes short-grid strided rings (few steps to amortize the
+# warm-up against) lose to plain per-tap delivery under ``auto``.
+RING_STEP_OVERHEAD_CYCLES = 8
 
 
 class FusionInfeasible(Exception):
@@ -185,7 +208,11 @@ class ViewGroup:
 
     ``blocked_axis`` advances with grid dim 0 (the row-panel stream);
     ``red_axis`` advances with grid dim 1 when the kernel carries a
-    grid-level reduction (chunked delivery of a reduction-indexed axis)."""
+    grid-level reduction (chunked delivery of a reduction-indexed axis);
+    ``lane_axis`` advances with grid dim 1 when the kernel blocks the
+    trailing (lane) dimension — a column-shifted window whose start ``l0``
+    bakes the tap's lane offset into the view, exactly as ``k0`` does for
+    row shifts."""
 
     buffer: str
     ndim: int
@@ -203,8 +230,12 @@ class ViewGroup:
     rows0: int = 0                    # blocked-axis block rows when pinned
     resident: bool = False            # reduction-indexed operand kept whole
                                       # in VMEM (fetched once, not per chunk)
+    lane_axis: Optional[int] = None   # producer axis tiled over the lane grid
+    l0: int = 0                       # lane-axis view start (column shift)
+    lane_stride: int = 1              # lane-axis stride baked into the view
+    valid1: Optional[int] = None      # valid lane-axis elements of the view
 
-    def view_slices(self, e0: int) -> Tuple[slice, ...]:
+    def view_slices(self, e0: int, e1: Optional[int] = None) -> Tuple[slice, ...]:
         out = []
         for j in range(self.ndim):
             if j == self.blocked_axis:
@@ -212,30 +243,45 @@ class ViewGroup:
                 out.append(
                     slice(self.k0, self.k0 + self.stride0 * (rows - 1) + 1, self.stride0)
                 )
+            elif j == self.lane_axis:
+                out.append(
+                    slice(self.l0, self.l0 + self.lane_stride * (e1 - 1) + 1,
+                          self.lane_stride)
+                )
             else:
                 out.append(slice(self.base[j], self.base[j] + self.span[j]))
         return tuple(out)
 
-    def block_shape(self, bh: int) -> Tuple[int, ...]:
+    def block_shape(self, bh: int, bw: Optional[int] = None) -> Tuple[int, ...]:
         out = []
         for j in range(self.ndim):
             if j == self.blocked_axis:
                 out.append(self.rows0 if self.pinned else bh)
+            elif j == self.lane_axis:
+                out.append(bw)
             elif j == self.red_axis:
                 out.append(self.span[j] if self.resident else self.red_chunk)
             else:
                 out.append(self.span[j])
         return tuple(out)
 
-    def index_map(self, n_grid: int) -> Callable:
+    def index_map(self, n_grid: int, dim1: str = "red") -> Callable:
+        """BlockSpec index map.  Grid dim 0 advances ``blocked_axis``; when
+        the kernel has a second grid dim it is either the reduction chunk
+        (``dim1="red"``) or the lane block (``dim1="lane"``)."""
         blocked = None if self.pinned else self.blocked_axis
         red = None if self.resident else self.red_axis
+        lane = self.lane_axis
         nd = self.ndim
         if n_grid == 1:
             if blocked is None:
                 return lambda i, nd=nd: (0,) * nd
             return lambda i, blocked=blocked, nd=nd: tuple(
                 i if j == blocked else 0 for j in range(nd)
+            )
+        if dim1 == "lane":
+            return lambda i, k, blocked=blocked, lane=lane, nd=nd: tuple(
+                i if j == blocked else (k if j == lane else 0) for j in range(nd)
             )
         return lambda i, k, blocked=blocked, red=red, nd=nd: tuple(
             i if j == blocked else (k if j == red else 0) for j in range(nd)
@@ -247,8 +293,9 @@ class ViewGroup:
 # ---------------------------------------------------------------------------
 
 # a view binding key: (panel shift, blocked-axis offset or None for whole
-# delivery) -> index into the kernel's view groups
-BindKey = Tuple[int, Optional[int]]
+# delivery) -> index into the kernel's view groups.  Lane-blocked kernels
+# widen the key to (shift, offset, lane shift, lane offset or None).
+BindKey = Tuple
 
 
 @dataclass
@@ -277,6 +324,14 @@ class StagePlan:
     ring_binding: List[Dict[BindKey, Tuple[int, int]]] = field(
         default_factory=list
     )
+    # lane blocking (2-D grids): the lane-panel shifts at which consumers
+    # demand this stage per lane step (the column analog of ``shifts``),
+    # the kernel's lane block width, and per load the axis tiled over the
+    # lane grid.  ``bw is None`` means the kernel does not lane-block and
+    # every lane field is inert.
+    lane_shifts: Tuple[int, ...] = (0,)
+    bw: Optional[int] = None
+    lane_axis_of: List[Optional[int]] = field(default_factory=list)
 
     @property
     def name(self) -> str:
@@ -305,7 +360,10 @@ class StagePlan:
     def panel_shape(self, bh: int) -> Tuple[int, ...]:
         if not self.streamed:
             return tuple(self.nstage.pure_extents)
-        return (bh,) + tuple(self.nstage.pure_extents[1:])
+        shape = (bh,) + tuple(self.nstage.pure_extents[1:])
+        if self.bw is not None:
+            shape = shape[:-1] + (self.bw,)
+        return shape
 
     def panel_bytes(self, bh: int) -> int:
         return ELEM_BYTES * math.prod(self.panel_shape(bh))
@@ -317,9 +375,10 @@ class StagePlan:
             self.nstage.pure_extents[1:]
         )
 
-    def scratch_shape(self, bh: int, key: Optional[int]) -> Tuple[int, ...]:
+    def scratch_shape(self, bh: int, key) -> Tuple[int, ...]:
         """Shape of one scratch entry: the ring (``key is None``) or a
-        per-shift panel."""
+        per-shift panel (a row shift, or a (row, lane) shift pair under
+        lane blocking)."""
         return self.ring_shape(bh) if key is None else self.panel_shape(bh)
 
 
@@ -364,6 +423,14 @@ class KernelGroup:
     padded_grid: Optional[PaddedGrid] = None
     rings: List[RingStream] = field(default_factory=list)
     notes: Dict[str, object] = field(default_factory=dict)
+    # lane blocking: grid dim 1 walks ceil(e1/bw) lane blocks (mutually
+    # exclusive with red_grid); ``lane_grid.pad`` lanes of the tail block
+    # are masked by the emitter, mirroring the row-grid tail
+    bw: Optional[int] = None
+    lane_grid: Optional[PaddedGrid] = None
+    # working-set accounting the block height was selected under, for the
+    # planner's lane-engagement / budget checks: (bytes_per_row, fixed)
+    ws: Tuple[int, int] = (0, 0)
 
     @property
     def output(self) -> StagePlan:
@@ -408,6 +475,12 @@ class KernelGroup:
     def pad_rows(self) -> int:
         return 0 if self.padded_grid is None else self.padded_grid.pad
 
+    @property
+    def e1(self) -> Optional[int]:
+        """Output lane extent (the valid span of the lane grid), or None
+        when the kernel does not lane-block."""
+        return None if self.lane_grid is None else self.lane_grid.extent
+
     def required_extents(self) -> Dict[str, Tuple[int, ...]]:
         """Per input buffer, the minimal extent along every axis that the
         planned view slices require (the hull over this kernel's groups)."""
@@ -418,6 +491,8 @@ class KernelGroup:
                 if j == g.blocked_axis:
                     rows = g.rows0 if g.pinned else self.e0
                     need.append(g.k0 + g.stride0 * (rows - 1) + 1)
+                elif j == g.lane_axis:
+                    need.append(g.l0 + g.lane_stride * (self.e1 - 1) + 1)
                 else:
                     need.append(g.base[j] + g.span[j])
             prev = out.get(g.buffer)
@@ -452,14 +527,19 @@ class KernelGroup:
                         f"(shape {got} vs required {need})"
                     )
 
-    def scratch_entries(self) -> List[Tuple[StagePlan, Optional[int]]]:
+    def scratch_entries(self) -> List[Tuple[StagePlan, object]]:
         """(stage, key) pairs, in emission order, of every VMEM-resident
         intermediate the kernel materializes: ``key`` is a row shift for a
-        recompute-mode panel, or ``None`` for a line-buffer ring."""
-        out: List[Tuple[StagePlan, Optional[int]]] = []
+        recompute-mode panel, a ``(row shift, lane shift)`` pair under lane
+        blocking, or ``None`` for a line-buffer ring."""
+        out: List[Tuple[StagePlan, object]] = []
         for sp in self.stages[:-1]:
             if sp.line_buffer is not None:
                 out.append((sp, None))
+            elif self.lane_grid is not None:
+                out.extend(
+                    (sp, (s, t)) for s in sp.shifts for t in sp.lane_shifts
+                )
             else:
                 out.extend((sp, s) for s in sp.shifts)
         return out
@@ -476,8 +556,12 @@ class KernelGroup:
         recompute metric line buffering improves.  A recompute-mode fused
         stage evaluates ``|shifts|`` panels per grid step; a line-buffered
         one evaluates exactly ``bh`` new rows per step plus a one-time
-        ``halo``-row warm-up."""
+        ``halo``-row warm-up.  Under lane blocking a "row" is one panel row
+        per lane block: each row is evaluated once per lane step and lane
+        shift (partial-width evaluations count as rows, so the metric stays
+        comparable across lane-blocked and full-width plans of equal work)."""
         steps = self.grid[0] if self.streamed else 1
+        lane_steps = self.grid[1] if self.lane_grid is not None else 1
         out: Dict[str, int] = {}
         for sp in self.stages:
             if not (self.streamed and sp.streamed):
@@ -485,7 +569,10 @@ class KernelGroup:
             elif sp.line_buffer is not None:
                 out[sp.name] = steps * self.bh + sp.line_buffer.halo
             else:
-                out[sp.name] = steps * self.bh * len(sp.shifts)
+                out[sp.name] = (
+                    steps * self.bh * len(sp.shifts)
+                    * lane_steps * len(sp.lane_shifts)
+                )
         return out
 
     @property
@@ -502,14 +589,16 @@ class KernelGroup:
                     ax for ax, cond in (
                         (0, g.blocked_axis is not None),
                         (1, g.red_axis is not None and not g.resident),
+                        (1, g.lane_axis is not None),
                     )
                     if cond and ax < len(self.grid)
                 )
+            blk = g.block_shape(self.bh, self.bw)
             streams.append(StreamPlan(
                 f"{g.buffer}[{k}]",
-                g.block_shape(self.bh),
+                blk,
                 axes,
-                ELEM_BYTES * math.prod(g.block_shape(self.bh)),
+                ELEM_BYTES * math.prod(blk),
                 double_buffered=bool(axes),
             ))
         for r in self.rings:
@@ -542,6 +631,10 @@ class KernelGroup:
         if self.padded_grid is not None:
             pg = self.padded_grid
             notes["padded_grid"] = (pg.extent, pg.block, pg.steps)
+        if self.lane_grid is not None:
+            lg = self.lane_grid
+            notes["lane_grid"] = (lg.extent, lg.block, lg.steps)
+            notes["bw"] = self.bw
         if self.line_buffered:
             notes["linebuf"] = {
                 sp.name: (sp.line_buffer.lo, sp.line_buffer.hi)
@@ -563,19 +656,31 @@ class KernelGroup:
         once) plus the output store.  Summed over a pipeline's kernels this
         is the traffic metric fusion improves — fused intermediates never
         appear, and ring-delivered inputs count once per grid step instead
-        of once per tap."""
+        of once per tap.  Under a lane grid, dim 1 varies fastest: a
+        row-blocked lane-less stream's block index is constant across the
+        inner lane sweep, so Pallas re-fetches it only ``steps0`` times,
+        while lane-blocked streams fetch once per (row, lane) step."""
         steps0 = self.grid[0]
-        red_steps = self.grid[1] if len(self.grid) > 1 else 1
+        dim1_steps = self.grid[1] if len(self.grid) > 1 else 1
         total = ELEM_BYTES * math.prod(self.output.nstage.pure_extents)
         for g in self.groups:
-            blk = ELEM_BYTES * math.prod(g.block_shape(self.bh))
+            blk = ELEM_BYTES * math.prod(g.block_shape(self.bh, self.bw))
             if g.pinned:
                 deliveries = 1
+            elif self.lane_grid is not None:
+                if g.lane_axis is not None:
+                    # the inner lane index cycles every outer row step, so
+                    # the block index changes on every grid step
+                    deliveries = steps0 * dim1_steps
+                elif g.blocked_axis is not None:
+                    deliveries = steps0
+                else:
+                    deliveries = 1
             elif g.blocked_axis is not None:
-                deliveries = steps0 * (red_steps if g.red_axis is not None else 1)
+                deliveries = steps0 * (dim1_steps if g.red_axis is not None else 1)
             elif g.red_axis is not None and not g.resident:
                 # chunk sequence re-walked every row panel
-                deliveries = steps0 * red_steps
+                deliveries = steps0 * dim1_steps
             else:
                 deliveries = 1
             total += blk * deliveries
@@ -583,8 +688,10 @@ class KernelGroup:
 
     def aligned_blocks(self) -> Dict[str, Tuple[int, ...]]:
         """Compiled-mode (8, 128)-tile-aligned block shapes per stream, the
-        lane/sublane rounding of ``core/ubplan.align_tpu_shape``."""
-        out = {f"{g.buffer}[{k}]": align_tpu_shape(g.block_shape(self.bh))
+        lane/sublane rounding of ``core/ubplan.align_tpu_shape``.  Under an
+        ``align_tpu`` lane grid the planner already emits 128-multiple lane
+        blocks, so this report matches the emitted shapes on the lane dim."""
+        out = {f"{g.buffer}[{k}]": align_tpu_shape(g.block_shape(self.bh, self.bw))
                for k, g in enumerate(self.groups)}
         out["out"] = align_tpu_shape(self.output.panel_shape(self.bh))
         return out
@@ -627,6 +734,14 @@ class PipelinePlan:
         """Input delivery classes collapsed into cross-grid-step rings."""
         return sum(len(kg.rings) for kg in self.kernels)
 
+    @property
+    def lane_blocked(self) -> Dict[str, Tuple[int, int]]:
+        """Per lane-blocked kernel, its ``(bw, lane steps)`` decision."""
+        return {
+            kg.name: (kg.bw, kg.lane_grid.steps)
+            for kg in self.kernels if kg.lane_grid is not None
+        }
+
     def eval_rows(self) -> Dict[str, int]:
         """Rows evaluated per stage per pipeline invocation (recompute
         metric; see :meth:`KernelGroup.eval_rows`)."""
@@ -665,6 +780,7 @@ def scheduler_cost(
     *,
     carry_stmts: int = 0,
     warmup_stmts: int = 0,
+    rotate_cycles: float = 0.0,
 ) -> Callable[[int], float]:
     """Price a candidate block height with the §V-B cycle model.
 
@@ -688,10 +804,17 @@ def scheduler_cost(
     vector move charged to the memory side at ``VMEM_BYTES_PER_CYCLE``,
     overlapping the raster like any other DMA — and the step-0 warm-up
     evaluates ``warmup_stmts`` extra statements once (real PE work, priced
-    with ``raster_cycles`` and charged to the pipeline fill).  The planner
-    builds one cost per mode — recompute-mode ``stmts_per_row``/streams vs
-    carry-mode with these terms — and the cheaper modeled schedule decides
-    the chain's mode, tie-broken toward less HBM traffic.
+    with ``raster_cycles`` and charged to the pipeline fill).
+    ``rotate_cycles`` is the *serial* part of ring maintenance — the
+    per-step rotate/warm-up branches and any strided (non-coalescing)
+    rotation copies — which runs at the top of the kernel body before the
+    raster and therefore cannot hide under the DMA/compute overlap; it is
+    what lets the model decline a ring whose bookkeeping costs more than
+    the delivery it saves (the camera demosaic stride-2 parity class).
+    The planner builds one cost per mode — recompute-mode
+    ``stmts_per_row``/streams vs carry-mode with these terms — and the
+    cheaper modeled schedule decides the chain's mode, tie-broken toward
+    less HBM traffic.
     """
     def cost(bh: int) -> float:
         steps = _cdiv(e0, bh)
@@ -699,7 +822,7 @@ def scheduler_cost(
         dma = (bytes_per_row * bh) / HBM_BYTES_PER_CYCLE
         if carry_stmts:
             dma += carry_stmts * ELEM_BYTES / VMEM_BYTES_PER_CYCLE
-        per_step = max(compute, dma) + STEP_OVERHEAD_CYCLES
+        per_step = max(compute, dma) + rotate_cycles + STEP_OVERHEAD_CYCLES
         fill = min(compute, dma) + fixed_bytes / HBM_BYTES_PER_CYCLE
         if warmup_stmts:
             fill += raster_cycles((warmup_stmts,), latency)
@@ -836,6 +959,66 @@ def _shift_sets(
     return shifts_of
 
 
+def _lane_shift_sets(
+    members: Sequence[Tuple[NormalizedStage, List[LoadAccess], bool]],
+) -> Dict[str, Tuple[int, ...]]:
+    """Column analog of :func:`_shift_sets` for lane-blocked kernels: the
+    lane-panel shifts at which each fused stage must be available per lane
+    step, propagated reverse-topologically from the consumers' lane-axis
+    (trailing-axis) offsets.  Requires every in-group edge to read the
+    producer's trailing axis by the consumer's own lane dim with stride 1
+    and non-negative offsets — the same structural contract rows have —
+    and every member to be at least rank 2 (a rank-1 stage's only axis is
+    the row-blocked one).  Violations raise :class:`FusionInfeasible`,
+    which makes the *lane-blocked* fusion infeasible; the planner then
+    falls back to per-stage lane-blocked kernels."""
+    names = {ns.name for ns, _, _ in members}
+    out_ns = members[-1][0]
+    for ns, _, _ in members:
+        if len(ns.pure_dims) < 2:
+            raise FusionInfeasible(
+                f"{ns.name} is rank-1: no lane dim to block"
+            )
+    in_group: Dict[str, List[Tuple[NormalizedStage, LoadAccess]]] = {}
+    for ns, acc, _ in members:
+        for la in acc:
+            if la.buffer in names:
+                in_group.setdefault(la.buffer, []).append((ns, la))
+    lane_of: Dict[str, Tuple[int, ...]] = {out_ns.name: (0,)}
+    for ns, _, _ in reversed(members[:-1]):
+        shifts: Set[int] = set()
+        for cons, la in in_group.get(ns.name, []):
+            dl = cons.pure_dims[-1]
+            axl = la.axes[-1]
+            if axl.pure_dim != dl or axl.stride != 1:
+                raise FusionInfeasible(
+                    f"{cons.name} reads {ns.name}'s lane axis by "
+                    f"{axl.pure_dim} (stride {axl.stride}); lane blocking "
+                    f"needs the consumer lane dim at stride 1"
+                )
+            if any(
+                j != len(la.axes) - 1 and ax.pure_dim == dl
+                for j, ax in enumerate(la.axes)
+            ):
+                raise FusionInfeasible(
+                    f"{cons.name} reads {ns.name} by the lane dim on a "
+                    f"non-trailing axis"
+                )
+            red_ext = dict(zip(cons.red_dims, cons.red_extents))
+            for off in axl.offsets(red_ext):
+                if off < 0:
+                    raise FusionInfeasible(
+                        f"{cons.name} reads {ns.name} at negative lane "
+                        f"offset {off}"
+                    )
+                for t in lane_of[cons.name]:
+                    shifts.add(off + t)
+        if not shifts:
+            raise FusionInfeasible(f"{ns.name} has no in-group consumer")
+        lane_of[ns.name] = tuple(sorted(shifts))
+    return lane_of
+
+
 def _ring_rewrite(
     groups: List[ViewGroup], e0_out: int, banned: Set[Tuple]
 ) -> Tuple[List[ViewGroup], List[RingStream], Dict[int, int], Dict[int, Tuple[int, int]]]:
@@ -922,6 +1105,8 @@ def _build_kernel_group(
     buffer_shapes: Mapping[str, Tuple[int, ...]],
     *,
     block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
+    lane_block: object = "auto",
     vmem_budget: int = VMEM_BYTES,
     cost_model: str = "scheduler",
     align_tpu: bool = False,
@@ -942,6 +1127,13 @@ def _build_kernel_group(
     ``cost_model``), ``"auto"`` prefers carry wherever feasible — it is
     strictly less traffic and at most equal compute — and tags the plan
     ``linebuf_mode="carry-unpriced"``.
+
+    ``block_w`` forces a lane-blocked 2-D grid (``ceil(e0/bh)`` row panels
+    x ``ceil(e1/bw)`` lane blocks); without it the planner engages the lane
+    grid automatically when even a one-row full-width panel exceeds the
+    VMEM budget.  Lane-blocked kernels run in recompute mode (rings and
+    line buffers only span grid dim 0) and are mutually exclusive with
+    grid-level reductions.
 
     Raises :class:`FusionInfeasible` when a multi-stage group violates a
     structural constraint or cannot fit VMEM at any block height; a
@@ -969,15 +1161,45 @@ def _build_kernel_group(
     e0_out = out_ns.pure_extents[0]
     kernel_streamed = out_streamed
 
+    # -- lane-blocking candidacy ----------------------------------------------
+    # the lane grid tiles the *trailing* pure dim; it needs a streamed
+    # rank>=2 kernel, no grid reduction (both claim grid dim 1), and — for
+    # fused groups — lane shift sets satisfying the same structural
+    # contract rows have (stride-1 trailing-axis reads, offsets >= 0)
+    e1_out = out_ns.pure_extents[-1] if len(out_ns.pure_extents) >= 2 else None
+    lane_possible = (
+        lane_block is not False
+        and kernel_streamed and e1_out is not None and red_grid is None
+        and all(len(ns.pure_extents) >= 2 for ns, _, _ in members)
+    )
+    lane_shifts_of: Optional[Dict[str, Tuple[int, ...]]] = None
+    if lane_possible and multi:
+        try:
+            lane_shifts_of = _lane_shift_sets(members)
+        except FusionInfeasible:
+            if block_w is not None:
+                # forced lane blocking must not be silently dropped: fail
+                # this *fusion* so the pipeline planner falls back to
+                # per-stage kernels, each lane-blocked on its own
+                raise
+            lane_possible = False
+
     def assemble(
-        lb_names: Set[str], use_rings: bool, banned: Set[Tuple]
+        lb_names: Set[str], use_rings: bool, banned: Set[Tuple],
+        bw: Optional[int] = None,
     ) -> KernelGroup:
+        lane = bw is not None
         plans = {
             ns.name: StagePlan(ns, list(acc), streamed)
             for ns, acc, streamed in members
         }
         for n, s in shifts_of.items():
             plans[n].shifts = s
+        if lane:
+            for n, sp in plans.items():
+                sp.bw = bw
+                if lane_shifts_of is not None and n in lane_shifts_of:
+                    sp.lane_shifts = lane_shifts_of[n]
         for n in lb_names:
             s = shifts_of[n]
             plans[n].line_buffer = LineBuffer(s[0], s[-1])
@@ -986,13 +1208,16 @@ def _build_kernel_group(
         groups: List[ViewGroup] = []
         by_key: Dict[tuple, int] = {}
 
-        def group_for(key, buffer, ndim, blocked, k0, stride0, red_ax, red_chunk):
+        def group_for(key, buffer, ndim, blocked, k0, stride0, red_ax,
+                      red_chunk, lane_ax=None, l0=0, lane_stride=1):
             if key not in by_key:
                 by_key[key] = len(groups)
                 groups.append(ViewGroup(
                     buffer, ndim, blocked, k0, stride0, red_ax, red_chunk,
                     base=[None] * ndim, span=[0] * ndim,  # type: ignore[list-item]
                     valid0=e0_out if blocked is not None else None,
+                    lane_axis=lane_ax, l0=l0, lane_stride=lane_stride,
+                    valid1=e1_out if lane_ax is not None else None,
                 ))
             return by_key[key]
 
@@ -1008,6 +1233,8 @@ def _build_kernel_group(
             # — and hence only those view starts — exist
             lb = sp.line_buffer
             bind_shifts = sp.shifts if lb is None else (lb.lo, lb.hi)
+            bind_lanes = sp.lane_shifts if lane else (0,)
+            lane_dim = ns.pure_dims[-1] if lane else None
             for k, la in enumerate(acc):
                 if la.buffer in names:
                     sp.load_kind.append("scratch")
@@ -1015,33 +1242,56 @@ def _build_kernel_group(
                     sp.view_binding.append({})
                     sp.ring_binding.append({})
                     sp.blocked_axis_of.append(0)
+                    sp.lane_axis_of.append(len(la.axes) - 1 if lane else None)
                     continue
                 j0 = _blocked_axis(la, sp.d0) if kernel_streamed and sp.streamed else None
                 jr = red_axis_of.get(k)
+                jL = None
+                if lane:
+                    for j, ax in enumerate(la.axes):
+                        if ax.pure_dim == lane_dim and j != j0:
+                            jL = j
                 sp.load_kind.append("view")
                 sp.scratch_producer.append(None)
                 sp.blocked_axis_of.append(j0)
+                sp.lane_axis_of.append(jL)
                 sp.ring_binding.append({})
                 binding: Dict[BindKey, int] = {}
                 ndim = len(la.axes)
-                if j0 is not None:
-                    stride0 = la.axes[j0].stride
-                    for shift in bind_shifts:
-                        for off in la.axes[j0].offsets(red_ext):
-                            k0 = off + stride0 * shift
-                            key = (la.buffer, j0, stride0, k0, jr)
-                            binding[(shift, off)] = group_for(
-                                key, la.buffer, ndim, j0, k0, stride0,
-                                jr, red_grid.chunk if jr is not None else 1,
-                            )
-                else:
-                    key = (la.buffer, None, 1, 0, jr)
-                    gidx = group_for(
-                        key, la.buffer, ndim, None, 0, 1,
-                        jr, red_grid.chunk if jr is not None else 1,
-                    )
-                    for shift in bind_shifts:
-                        binding[(shift, None)] = gidx
+                stride0 = la.axes[j0].stride if j0 is not None else 1
+                lstride = la.axes[jL].stride if jL is not None else 1
+                row_offs = (
+                    la.axes[j0].offsets(red_ext) if j0 is not None else [None]
+                )
+                lane_offs = (
+                    la.axes[jL].offsets(red_ext) if jL is not None else [None]
+                )
+                for shift in bind_shifts:
+                    for off in row_offs:
+                        k0 = 0 if off is None else off + stride0 * shift
+                        for lshift in bind_lanes:
+                            for loff in lane_offs:
+                                l0 = (
+                                    0 if loff is None
+                                    else loff + lstride * lshift
+                                )
+                                key = (
+                                    la.buffer,
+                                    None if off is None else j0, stride0, k0,
+                                    jr, jL, lstride, l0,
+                                )
+                                gidx = group_for(
+                                    key, la.buffer, ndim,
+                                    None if off is None else j0, k0, stride0,
+                                    jr,
+                                    red_grid.chunk if jr is not None else 1,
+                                    lane_ax=jL, l0=l0, lane_stride=lstride,
+                                )
+                                bk = (
+                                    (shift, off, lshift, loff) if lane
+                                    else (shift, off)
+                                )
+                                binding[bk] = gidx
                 sp.view_binding.append(binding)
 
                 # hull the non-blocked axes of every group this load touches
@@ -1050,6 +1300,9 @@ def _build_kernel_group(
                     for j, ax in enumerate(la.axes):
                         if j == g.blocked_axis:
                             g.span[j] = e0_out
+                            continue
+                        if j == g.lane_axis:
+                            g.span[j] = e1_out
                             continue
                         if j == g.red_axis:
                             g.base[j] = 0
@@ -1069,6 +1322,8 @@ def _build_kernel_group(
         for g in groups:
             if g.blocked_axis is not None:
                 g.base[g.blocked_axis] = g.k0
+            if g.lane_axis is not None:
+                g.base[g.lane_axis] = g.l0
 
         # -- collapse shifted delivery classes into ring streams -------------
         rings: List[RingStream] = []
@@ -1104,6 +1359,8 @@ def _build_kernel_group(
                 if j == g.blocked_axis:
                     rows = g.rows0 if g.pinned else e0_out
                     top = g.k0 + g.stride0 * (rows - 1)
+                elif j == g.lane_axis:
+                    top = g.l0 + g.lane_stride * (e1_out - 1)
                 else:
                     top = g.base[j] + g.span[j] - 1
                 if g.base[j] < 0 or top >= shape[j]:
@@ -1113,21 +1370,28 @@ def _build_kernel_group(
                     )
 
         # -- VMEM accounting + block height ----------------------------------
-        inner_out = (
-            math.prod(out_ns.pure_extents[1:]) if len(out_ns.pure_extents) > 1 else 1
-        )
+        inner_shape = list(out_ns.pure_extents[1:])
+        if lane and inner_shape:
+            inner_shape[-1] = bw
+        inner_out = math.prod(inner_shape) if inner_shape else 1
         bytes_per_row = inner_out * ELEM_BYTES      # the output panel
         fixed_bytes = 0
         for g in groups:
             sz = ELEM_BYTES * math.prod(
-                (g.span[j] if g.resident else g.red_chunk)
-                if j == g.red_axis else g.span[j]
+                bw if j == g.lane_axis else (
+                    (g.span[j] if g.resident else g.red_chunk)
+                    if j == g.red_axis else g.span[j]
+                )
                 for j in range(g.ndim) if j != g.blocked_axis
             )
             if g.pinned:
                 fixed_bytes += g.rows0 * sz
             elif g.blocked_axis is not None:
                 bytes_per_row += sz
+            elif g.lane_axis is not None:
+                # a lane-only stream is re-delivered (double-buffered) every
+                # grid step but does not scale with the block height
+                fixed_bytes += 2 * sz
             else:
                 fixed_bytes += sz
         for r in rings:
@@ -1139,14 +1403,15 @@ def _build_kernel_group(
         scratch_rows = 0                            # scratch scales with bh too
         for ns, _, _ in members[:-1]:
             sp = plans[ns.name]
-            inner = (
-                math.prod(ns.pure_extents[1:]) if len(ns.pure_extents) > 1 else 1
-            )
+            sh = list(ns.pure_extents[1:])
+            if lane and sh:
+                sh[-1] = bw
+            inner = math.prod(sh) if sh else 1
             if sp.line_buffer is not None:
                 scratch_rows += inner
                 fixed_bytes += sp.line_buffer.halo * inner * ELEM_BYTES
             else:
-                scratch_rows += len(sp.shifts) * inner
+                scratch_rows += len(sp.shifts) * len(sp.lane_shifts) * inner
         bytes_per_row += scratch_rows * ELEM_BYTES
 
         cost = None
@@ -1164,12 +1429,13 @@ def _build_kernel_group(
                 stmts_per_row = 0
                 carry_stmts = 0
                 warmup_stmts = 0
+                rotate = 0.0
                 for ns, _, _ in members:
                     sp = plans[ns.name]
-                    inner = (
-                        math.prod(ns.pure_extents[1:])
-                        if len(ns.pure_extents) > 1 else 1
-                    )
+                    sh = list(ns.pure_extents[1:])
+                    if lane and sh:
+                        sh[-1] = bw
+                    inner = math.prod(sh) if sh else 1
                     red = math.prod(ns.red_extents) if ns.red_dims else 1
                     if red_grid is not None:
                         red = (red // ns.red_extents[0]) * red_grid.chunk
@@ -1178,16 +1444,28 @@ def _build_kernel_group(
                         carry_stmts += sp.line_buffer.halo * inner
                         warmup_stmts += sp.line_buffer.halo * inner * red
                     else:
-                        stmts_per_row += len(sp.shifts) * inner * red
+                        stmts_per_row += (
+                            len(sp.shifts) * len(sp.lane_shifts) * inner * red
+                        )
                 for r in rings:
                     inner = math.prod(
                         r.span[j] for j in range(r.ndim) if j != r.axis
                     )
-                    carry_stmts += r.halo * inner
+                    elems = r.halo * inner
+                    if r.stride0 == 1:
+                        # contiguous rotation: a lane-wide VMEM move that
+                        # overlaps the raster on the memory side
+                        carry_stmts += elems
+                    else:
+                        # strided rotation cannot coalesce into wide vector
+                        # moves: serial element shuffles on top of the
+                        # raster, plus the per-step branch machinery
+                        rotate += float(elems) + RING_STEP_OVERHEAD_CYCLES
                 latency = max(_stage_latency(ns) for ns, _, _ in members)
                 cost = scheduler_cost(
                     e0_out, stmts_per_row, latency, bytes_per_row, fixed_bytes,
                     carry_stmts=carry_stmts, warmup_stmts=warmup_stmts,
+                    rotate_cycles=rotate,
                 )
             bh = plan_affine_stage(
                 e0_out, bytes_per_row, fixed_bytes,
@@ -1200,11 +1478,16 @@ def _build_kernel_group(
             )
 
         padded_grid: Optional[PaddedGrid] = None
+        lane_grid: Optional[PaddedGrid] = None
         if kernel_streamed:
             steps0 = _cdiv(e0_out, bh)
             grid: Tuple[int, ...] = (steps0,)
             if steps0 * bh != e0_out:
                 padded_grid = PaddedGrid(e0_out, bh, steps0)
+            if lane:
+                steps1 = _cdiv(e1_out, bw)
+                grid = (steps0, steps1)
+                lane_grid = PaddedGrid(e1_out, bw, steps1)
         else:
             grid = (1,)
         if red_grid is not None:
@@ -1224,6 +1507,9 @@ def _build_kernel_group(
             padded_grid=padded_grid,
             rings=rings,
             notes=notes,
+            bw=bw if lane else None,
+            lane_grid=lane_grid,
+            ws=(bytes_per_row, fixed_bytes),
         )
 
     # -- mode selection: recompute fusion vs cross-grid-step carry -----------
@@ -1261,41 +1547,98 @@ def _build_kernel_group(
             banned |= bad_rings
         return assemble(set(), False, set())
 
-    if not want_rings:
-        return attempt((), False)
-    try:
-        kg_lb = attempt(lb_capable, True)
-    except FusionInfeasible:
-        # carry bookkeeping cannot fit where plain recompute fusion might
-        return attempt((), False)
-    if line_buffer is True:
+    def plan_no_lane() -> KernelGroup:
+        if not want_rings:
+            return attempt((), False)
+        try:
+            kg_lb = attempt(lb_capable, True)
+        except FusionInfeasible:
+            # carry bookkeeping cannot fit where plain recompute fusion might
+            return attempt((), False)
+        if line_buffer is True:
+            return kg_lb
+        if not kg_lb.line_buffered and not kg_lb.rings:
+            return kg_lb
+        c_lb = kg_lb.notes.get("model_cycles")
+        if c_lb is None:
+            # no scheduler pricing (explicit block_h / other cost model):
+            # carry is strictly less traffic and at most equal compute, so
+            # prefer it and record the choice was not cost-arbitrated
+            kg_lb.notes["linebuf_mode"] = "carry-unpriced"
+            return kg_lb
+        try:
+            kg_rc = attempt((), False)
+        except FusionInfeasible:
+            return kg_lb
+        c_rc = kg_rc.notes.get("model_cycles")
+        if c_rc is not None:
+            # recompute must be cheaper by more than one step's fixed
+            # overhead (sub-overhead differences are model noise) to justify
+            # its extra HBM traffic; at comparable cycles the carry plan's
+            # traffic wins
+            meaningfully_cheaper = c_rc < c_lb - STEP_OVERHEAD_CYCLES
+            cheaper_and_no_worse = (
+                c_rc < c_lb and kg_rc.hbm_bytes() <= kg_lb.hbm_bytes()
+            )
+            if meaningfully_cheaper or cheaper_and_no_worse:
+                kg_rc.notes["linebuf_mode"] = "recompute-cheaper"
+                return kg_rc
         return kg_lb
-    if not kg_lb.line_buffered and not kg_lb.rings:
-        return kg_lb
-    c_lb = kg_lb.notes.get("model_cycles")
-    if c_lb is None:
-        # no scheduler pricing (explicit block_h / other cost model): carry
-        # is strictly less traffic and at most equal compute, so prefer it
-        # and record that the mode choice was not cost-arbitrated
-        kg_lb.notes["linebuf_mode"] = "carry-unpriced"
-        return kg_lb
-    try:
-        kg_rc = attempt((), False)
-    except FusionInfeasible:
-        return kg_lb
-    c_rc = kg_rc.notes.get("model_cycles")
-    if c_rc is not None:
-        # recompute must be cheaper by more than one step's fixed overhead
-        # (sub-overhead differences are model noise) to justify its extra
-        # HBM traffic; at comparable cycles the carry plan's traffic wins
-        meaningfully_cheaper = c_rc < c_lb - STEP_OVERHEAD_CYCLES
-        cheaper_and_no_worse = (
-            c_rc < c_lb and kg_rc.hbm_bytes() <= kg_lb.hbm_bytes()
+
+    # -- lane blocking: explicit block_w, or VMEM-driven auto engagement -----
+    # lane-blocked kernels run in recompute mode: rings and line buffers
+    # only span grid dim 0 and do not compose with a lane grid (yet)
+    def attempt_lane(bw: int) -> KernelGroup:
+        kg = assemble(set(), False, set(), bw=bw)
+        kg.notes["lane"] = "forced" if block_w is not None else "auto-vmem"
+        return kg
+
+    if block_w is not None:
+        if lane_possible:
+            bw_eff = min(block_w, e1_out)
+            if align_tpu:
+                # emission-time lane rounding: the emitted blocks themselves
+                # are 128-lane multiples (masked lane tail), not just the
+                # aligned_blocks() report
+                bw_eff = _cdiv(bw_eff, LANE) * LANE
+            return attempt_lane(bw_eff)
+        # structurally no lane dim to block (rank-1, unstreamed, or a grid
+        # reduction owns dim 1): plan flat, but say so in the plan notes
+        # instead of dropping the request silently
+        kg = plan_no_lane()
+        kg.notes["lane"] = "unsupported"
+        return kg
+
+    def overflows(kg: KernelGroup) -> bool:
+        bpr, fixed = kg.ws
+        return (
+            kernel_streamed and 2 * bpr * kg.bh + fixed > vmem_budget
         )
-        if meaningfully_cheaper or cheaper_and_no_worse:
-            kg_rc.notes["linebuf_mode"] = "recompute-cheaper"
-            return kg_rc
-    return kg_lb
+
+    kg_flat: Optional[KernelGroup] = None
+    try:
+        kg_flat = plan_no_lane()
+    except FusionInfeasible:
+        if not lane_possible:
+            raise
+    if kg_flat is not None and not (lane_possible and overflows(kg_flat)):
+        return kg_flat
+    # even a one-row full-width panel exceeds the budget (or fusion only
+    # fits lane-blocked): tile the lane dim, widest fitting block first
+    # (128-multiples lead the candidate list, so align_tpu engagement
+    # lands on a lane-tileable width whenever one fits the budget)
+    for bw_cand in lane_width_candidates(e1_out):
+        try:
+            kg2 = attempt_lane(bw_cand)
+        except FusionInfeasible:
+            continue
+        if not overflows(kg2):
+            return kg2
+    if kg_flat is not None:
+        return kg_flat
+    raise FusionInfeasible(
+        f"group ending at {out_ns.name}: no lane-blocked plan fits VMEM"
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -1307,6 +1650,8 @@ def build_pipeline_plan(
     pipe: Pipeline,
     *,
     block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
+    lane_block: object = "auto",
     fuse: bool = True,
     grid_reduction: bool = True,
     red_grid_threshold: int = RED_GRID_THRESHOLD,
@@ -1341,7 +1686,9 @@ def build_pipeline_plan(
     members: Dict[str, List[str]] = {n: [n] for n in order}
 
     build_kw = dict(
-        block_h=block_h, vmem_budget=vmem_budget, cost_model=cost_model,
+        block_h=block_h, block_w=block_w, lane_block=lane_block,
+        vmem_budget=vmem_budget,
+        cost_model=cost_model,
         align_tpu=align_tpu, grid_reduction=grid_reduction,
         red_grid_threshold=red_grid_threshold,
         line_buffer=line_buffer, red_resident=red_resident,
@@ -1386,7 +1733,7 @@ def build_pipeline_plan(
             "fuse": fuse, "grid_reduction": grid_reduction,
             "cost_model": cost_model, "vmem_budget": vmem_budget,
             "align_tpu": align_tpu, "line_buffer": line_buffer,
-            "red_resident": red_resident,
+            "red_resident": red_resident, "block_w": block_w,
         },
     )
 

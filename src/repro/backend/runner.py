@@ -7,6 +7,18 @@ driven block heights) and emits one generated Pallas kernel per planned
 Only kernel *outputs* are materialized in HBM — fused intermediates live and
 die in VMEM scratch, which is the point of the plan/emit split.
 
+The split is really plan/emit/**bind**: every emitted kernel is a
+``jax.jit``-wrapped closure, so calling an already-compiled pipeline with
+new same-shaped buffers reuses the first call's trace.  On top of that,
+``compile_pipeline(..., cache=True)`` keys whole compiled pipelines on a
+content hash of the lowered pipeline + every plan-affecting parameter + the
+execution mode (see :func:`plan_cache_key`), so the serve path, benchmarks
+and sweeps skip re-planning *and* re-tracing on repeat invocations.
+
+``mode`` selects the execution path: ``"interpret"`` (portable Pallas
+interpreter, the CPU default), ``"compiled"`` (real Mosaic kernels; needs a
+TPU backend), ``"auto"`` (compiled on TPU, interpret elsewhere).
+
 ``reference_arrays`` converts the von-Neumann reference interpreter's value
 tables (absolute coordinates) into the same zero-based dense layout so
 differential tests can compare bit-for-bit element-wise.
@@ -14,6 +26,8 @@ differential tests can compare bit-for-bit element-wise.
 
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional
 
@@ -22,9 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ubplan import VMEM_BYTES
-from repro.frontend.lower import Pipeline, execute_pipeline
+from repro.frontend.lower import Pipeline, execute_pipeline, normalize_pipeline
 
-from .codegen import CompiledKernel, emit_kernel
+from .codegen import CompiledKernel, emit_kernel, resolve_mode
 from .plan import PipelinePlan, RED_GRID_THRESHOLD, build_pipeline_plan
 
 
@@ -35,6 +49,8 @@ class PallasPipeline:
     pipeline: Pipeline
     kernels: List[CompiledKernel]
     plan: PipelinePlan
+    mode: str = "interpret"
+    cache_key: Optional[str] = None
 
     @property
     def stages(self) -> List[CompiledKernel]:
@@ -93,11 +109,58 @@ class PallasPipeline:
         return self.run(inputs)[self.pipeline.output]
 
 
+# ---------------------------------------------------------------------------
+# Plan-keyed pipeline cache
+# ---------------------------------------------------------------------------
+
+_PIPELINE_CACHE: "OrderedDict[str, PallasPipeline]" = OrderedDict()
+_PIPELINE_CACHE_MAX = 128
+
+
+def plan_cache_key(pipe: Pipeline, mode: str, plan_kwargs: Mapping) -> str:
+    """Content hash identifying a compiled pipeline: the *inputs* of
+    planning — every normalized stage (zero-based access maps, value
+    expressions, extents), the buffer boxes, the stream element dtype — plus
+    every plan-affecting keyword and the resolved execution mode.  Two
+    pipelines with identical lowered content and parameters share one cache
+    entry; changing any extent, expression, plan knob, or the mode produces
+    a different key.  Frozen-dataclass ``repr``s make the serialization
+    deterministic; planning itself is *not* run to compute the key, which
+    is what lets a cache hit skip re-planning entirely."""
+    h = hashlib.sha256()
+    h.update(mode.encode())
+    h.update(repr(sorted(plan_kwargs.items(), key=lambda kv: kv[0])).encode())
+    h.update(repr(pipe.output).encode())
+    h.update(repr(sorted(pipe.inputs)).encode())
+    for name, box in sorted(pipe.buffer_boxes.items()):
+        h.update(f"{name}:{box.dims}:{box.intervals};".encode())
+    for ns in normalize_pipeline(pipe):
+        h.update(repr((
+            ns.name, ns.pure_dims, ns.pure_extents, ns.red_dims,
+            ns.red_extents, ns.value, ns.init, ns.loads, ns.dim_lower,
+            ns.on_host,
+        )).encode())
+    h.update(b"elem:f32")
+    return h.hexdigest()
+
+
+def clear_pipeline_cache() -> None:
+    _PIPELINE_CACHE.clear()
+
+
+def pipeline_cache_size() -> int:
+    return len(_PIPELINE_CACHE)
+
+
 def compile_pipeline(
     pipe: Pipeline,
     *,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
+    mode: str = "interpret",
+    cache: bool = False,
     block_h: Optional[int] = None,
+    block_w: Optional[int] = None,
+    lane_block: object = "auto",
     fuse: bool = True,
     grid_reduction: bool = True,
     red_grid_threshold: int = RED_GRID_THRESHOLD,
@@ -114,10 +177,21 @@ def compile_pipeline(
     feasible, ``"auto"`` (default) lets the scheduler cost model choose per
     chain.  ``red_resident`` keeps small reduction-invariant operands whole
     in VMEM under grid reductions instead of refetching chunks per row
-    panel."""
-    plan = build_pipeline_plan(
-        pipe,
+    panel.  ``block_w`` forces 2-D lane-blocked grids (see
+    ``plan.build_pipeline_plan``).
+
+    ``mode`` is the execution switch (``"interpret"`` | ``"compiled"`` |
+    ``"auto"``); the legacy ``interpret`` boolean, when given, overrides it.
+    ``cache=True`` consults the plan-keyed pipeline cache: a hit returns
+    the previously compiled :class:`PallasPipeline` (its jit-warmed kernels
+    included) without re-planning or re-emitting."""
+    if interpret is not None:
+        mode = "interpret" if interpret else "compiled"
+    mode = resolve_mode(mode)
+    plan_kwargs = dict(
         block_h=block_h,
+        block_w=block_w,
+        lane_block=lane_block,
         fuse=fuse,
         grid_reduction=grid_reduction,
         red_grid_threshold=red_grid_threshold,
@@ -127,8 +201,21 @@ def compile_pipeline(
         line_buffer=line_buffer,
         red_resident=red_resident,
     )
-    kernels = [emit_kernel(kg, interpret=interpret) for kg in plan.kernels]
-    return PallasPipeline(pipe, kernels, plan)
+    key: Optional[str] = None
+    if cache:
+        key = plan_cache_key(pipe, mode, plan_kwargs)
+        hit = _PIPELINE_CACHE.get(key)
+        if hit is not None:
+            _PIPELINE_CACHE.move_to_end(key)
+            return hit
+    plan = build_pipeline_plan(pipe, **plan_kwargs)
+    kernels = [emit_kernel(kg, mode=mode) for kg in plan.kernels]
+    pp = PallasPipeline(pipe, kernels, plan, mode=mode, cache_key=key)
+    if cache:
+        _PIPELINE_CACHE[key] = pp
+        while len(_PIPELINE_CACHE) > _PIPELINE_CACHE_MAX:
+            _PIPELINE_CACHE.popitem(last=False)
+    return pp
 
 
 def reference_arrays(
@@ -167,4 +254,12 @@ def max_abs_error(
     }
 
 
-__all__ = ["PallasPipeline", "compile_pipeline", "reference_arrays", "max_abs_error"]
+__all__ = [
+    "PallasPipeline",
+    "compile_pipeline",
+    "plan_cache_key",
+    "clear_pipeline_cache",
+    "pipeline_cache_size",
+    "reference_arrays",
+    "max_abs_error",
+]

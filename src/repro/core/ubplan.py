@@ -169,6 +169,24 @@ def plan_affine_stage(
     return min(fitting, key=lambda bh: (cost(bh), waste(bh), -bh))
 
 
+def lane_width_candidates(lane_extent: int) -> List[int]:
+    """Candidate lane-block widths for a 2-D (row x lane) grid, widest
+    first: every multiple of the 128-lane vector width below the extent
+    (the wide-fetch FW of paper Eq. 2 — a lane block is a whole number of
+    wide fetches), then power-of-two fallbacks (all < 128, so the two
+    pools are disjoint) as the escape hatch of last resort.  Because the
+    128-multiples lead, budget-driven engagement naturally lands on a
+    lane-tileable width whenever one fits, and falls through to narrower
+    blocks only to honour the VMEM guarantee — the same
+    budget-beats-alignment rule as :func:`plan_affine_stage`.
+
+    Widths >= the extent are excluded — they are the degenerate "full
+    width resident" plan the lane grid exists to avoid."""
+    mults = list(range((lane_extent - 1) // LANE * LANE, 0, -LANE))
+    small = [w for w in (64, 32, 16, 8, 4, 2, 1) if w < lane_extent]
+    return (mults + small) or [1]
+
+
 def align_tpu_shape(shape: Sequence[int], dtype_bytes: int = 4) -> Tuple[int, ...]:
     """Round a block shape up to TPU tile granularity: the minor (lane) dim
     to a multiple of 128 and the second-minor (sublane) dim to the dtype's
@@ -352,6 +370,7 @@ __all__ = [
     "KernelPlan",
     "affine_stage_bh_cap",
     "plan_affine_stage",
+    "lane_width_candidates",
     "align_tpu_shape",
     "plan_matmul",
     "plan_attention",

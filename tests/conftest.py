@@ -169,9 +169,13 @@ def _maybe_block(rng: random.Random) -> Optional[int]:
 
 def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
     """The deterministic shape-sweep case list: ≥200 (app, extent, dtype,
-    fusion, block) combinations across all seven paper apps plus matmul,
-    biased toward extents with no friendly divisor (primes, odd sizes)."""
+    fusion, block, lanes) combinations across all seven paper apps plus
+    matmul, biased toward extents with no friendly divisor (primes, odd
+    sizes).  The ``lanes`` axis draws from an *independent* seeded stream
+    (``rng_lane``) so adding it did not reshuffle the pre-existing axes'
+    draws — the non-lane face of the sweep is byte-identical to PR 4's."""
     rng = random.Random(seed)
+    rng_lane = random.Random(seed ^ 0x1A9E5)
     cases: list = []
 
     def add(name, kw, **ckw):
@@ -191,6 +195,13 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
             ckw.setdefault("line_buffer", False)
         elif r < 0.45:
             ckw.setdefault("line_buffer", True)
+        # lanes axis: ~1/6 of cases force a small non-divisor lane block,
+        # planning 2-D (row x lane) grids with masked lane tails; skipped
+        # under align_tpu (which would round bw to 128 and blow interpret
+        # runtime on these small extents — the explicit anchors cover the
+        # align_tpu x lane composition instead)
+        if not ckw.get("align_tpu") and rng_lane.random() < 0.16:
+            ckw.setdefault("block_w", rng_lane.choice([3, 4, 5, 7, 9]))
         cases.append((name, kw, dtype, fuse, ckw))
 
     primes = [5, 7, 11, 13, 17, 19, 23, 29, 31]
@@ -266,6 +277,27 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
         ("mobilenet", {"img": 7, "cin": 4, "cout": 4}, "u4", True,
          {"block_h": 3, "line_buffer": True}),
     ]
+    # guaranteed-lane anchors (appended verbatim, no draws): 2-D
+    # lane-blocked grids with non-divisor widths on every lane-capable
+    # shape class — a prime 253-column tile at the hardware lane width 128
+    # (ragged 253 = 128 + masked 125-tail; the full 191x253 flagship lives
+    # in test_shape_sweep.test_flagship_prime_extents_191x253), a fused
+    # cascade with in-group lane shift sets, align_tpu lane rounding at
+    # emission (bw rounded to a 128 multiple, masked lane tail), and a
+    # both-axes-padded matmul
+    cases += [
+        ("gaussian", {"size": 33, "width": 255}, "u4", True,
+         {"block_w": 128}),
+        ("harris", {"schedule": "sch3", "size": 21}, "u4", True,
+         {"block_w": 6, "block_h": 5}),
+        ("unsharp", {"size": 17}, "i8", True, {"block_w": 5}),
+        ("gaussian", {"size": 18}, "u4", True,
+         {"block_w": 7, "align_tpu": True}),
+        ("matmul", {"m": 19, "n": 23, "k": 7}, "u4", False,
+         {"block_w": 6, "block_h": 4}),
+        ("resnet", {"img": 7, "cin": 3, "cout": 3}, "u4", True,
+         {"block_w": 3, "block_h": 2}),
+    ]
     return cases
 
 
@@ -283,4 +315,6 @@ def sweep_case_id(case: SweepCase) -> str:
         bits.append("rg")
     if "line_buffer" in ckw:
         bits.append("lb" if ckw["line_buffer"] else "nolb")
+    if "block_w" in ckw:
+        bits.append(f"bw{ckw['block_w']}")
     return "-".join(bits)

@@ -161,7 +161,10 @@ def test_fusion_shift_sets_cover_consumer_demand():
 
 def test_fusion_respects_vmem_budget():
     """Property: fusion never merges stages whose intermediate live range
-    exceeds the VMEM budget; a tiny budget degrades to per-stage kernels."""
+    exceeds the VMEM budget.  Tight budgets no longer force a split: the
+    planner narrows the lane dim (2-D lane-blocked grid) until the fused
+    working set fits, so the chain keeps its VMEM intermediates at a
+    fraction of the old minimum footprint."""
     app = make_app("unsharp", size=18)
     # generous budget -> single fused kernel whose working set fits
     for budget in (1 << 20, 8 << 20, 96 << 20):
@@ -169,15 +172,24 @@ def test_fusion_respects_vmem_budget():
         for kg in plan.kernels:
             if kg.fused:
                 assert kg.vmem_bytes <= budget, (budget, kg.vmem_bytes)
-    # an intermediate budget: the 4-stage chain no longer fits one kernel,
-    # but pairs do — the planner splits instead of giving up entirely
-    plan = build_pipeline_plan(app.pipeline, vmem_budget=1024)
+    # a budget far below the full-width working set: the lane grid rescues
+    # the fusion — one kernel, 2-D grid, still within budget
+    for budget in (256, 1024):
+        plan = build_pipeline_plan(app.pipeline, vmem_budget=budget)
+        assert plan.n_kernels == 1
+        kg = plan.kernels[0]
+        assert kg.fused and kg.lane_grid is not None and len(kg.grid) == 2
+        assert kg.vmem_bytes <= budget, (budget, kg.vmem_bytes)
+    # with the lane grid disabled the old degradation applies: the 4-stage
+    # chain no longer fits one kernel, but pairs do -> the planner splits
+    plan = build_pipeline_plan(app.pipeline, vmem_budget=1024, lane_block=False)
     assert plan.n_kernels > 1
     for kg in plan.kernels:
+        assert kg.lane_grid is None
         if kg.fused:
             assert kg.vmem_bytes <= 1024
     # budget below any fused pair's working set -> no fusion at all
-    plan = build_pipeline_plan(app.pipeline, vmem_budget=256)
+    plan = build_pipeline_plan(app.pipeline, vmem_budget=256, lane_block=False)
     assert all(not kg.fused for kg in plan.kernels)
     assert plan.n_kernels == plan.n_stages
 
@@ -662,6 +674,164 @@ def test_grid_reduction_masked_tail_with_padded_rows():
     out = np.asarray(pp({"A": a, "B": b}), np.float64)
     want = a.astype(np.float64) @ b.astype(np.float64)
     assert np.array_equal(out, want)
+
+
+# ---------------------------------------------------------------------------
+# Lane-blocked 2-D grids
+# ---------------------------------------------------------------------------
+
+
+def test_lane_width_candidates():
+    """Widest-first lane candidates: every 128-multiple below the extent
+    leads (so budget-driven engagement lands lane-tileable whenever one
+    fits), then power-of-two escape hatches; never the full extent (that's
+    the flat plan)."""
+    from repro.core.ubplan import lane_width_candidates
+
+    c = lane_width_candidates(2046)
+    assert c[0] == 1920 and all(w % 128 == 0 for w in c[: c.index(64)])
+    assert all(w < 2046 for w in c)
+    assert sorted(set(c), reverse=True) == c           # strictly descending
+    assert lane_width_candidates(300)[:2] == [256, 128]
+    # small extents: only the fallbacks exist
+    assert lane_width_candidates(100) == [64, 32, 16, 8, 4, 2, 1]
+    assert lane_width_candidates(1) == [1]
+
+
+def test_lane_blocked_grid_bit_exact():
+    """Explicit block_w tiles the trailing dim: grid (ceil(e0/bh),
+    ceil(e1/bw)), lane-tail masks on non-divisor widths, bit-exact on
+    integer inputs — including a fused cascade whose in-group column
+    offsets become per-lane-shift recompute panels."""
+    for name, kw, ckw in [
+        ("gaussian", {"size": 18}, {"block_w": 5}),       # 16 = 3x5 + tail 1
+        ("gaussian", {"size": 13}, {"block_w": 4, "block_h": 3}),
+        ("matmul", {"m": 19, "n": 13, "k": 11}, {"block_w": 4}),
+        ("upsample", {"size": 11}, {"block_w": 1}),
+        ("resnet", {"img": 7, "cin": 3, "cout": 3}, {"block_w": 3, "block_h": 2}),
+    ]:
+        app = make_app(name, **kw)
+        pp = compile_pipeline(app.pipeline, **ckw)
+        lane_kernels = [ck for ck in pp.kernels if ck.lane_grid is not None]
+        assert lane_kernels, name
+        for ck in lane_kernels:
+            lg = ck.lane_grid
+            assert ck.grid[1] == -(-lg.extent // lg.block) == lg.steps
+            assert ck.bw == lg.block
+        inputs = _inputs(app)
+        got = np.asarray(pp(inputs), np.float64)
+        want = reference_arrays(app.pipeline, inputs)[app.pipeline.output]
+        assert np.array_equal(got, want), name
+
+
+def test_lane_blocked_fused_chain_with_lane_shifts():
+    """harris reads its fused intermediates at column offsets 0..2: under a
+    lane grid those become lane shift sets — per-(row, lane)-shift scratch
+    panels — and the fusion survives with the plan still matching the
+    reference within tolerance."""
+    app = make_app("harris", schedule="sch3", size=20)
+    pp = compile_pipeline(app.pipeline, block_w=5)
+    assert pp.plan.n_kernels == 1
+    ck = pp.kernels[0]
+    assert ck.fused and ck.lane_grid is not None
+    lane_shifted = [
+        sp.name for sp in ck.kg.stages[:-1] if len(sp.lane_shifts) > 1
+    ]
+    assert lane_shifted, "expected in-group column offsets to widen lane shifts"
+    keys = {key for _, key in ck.kg.scratch_entries()}
+    assert all(isinstance(k, tuple) for k in keys)
+    errs = max_abs_error(pp, _inputs(app))
+    assert max(errs.values()) <= TOL, errs
+
+
+def test_lane_metadata_and_element_for():
+    """Delivery metadata stays exact under lane blocking: element_for
+    reconstructs each read from view/BlockSpec/lane metadata and matches
+    the access map, and delivered_interval covers it at the right (row,
+    lane) step."""
+    from repro.frontend.lower import normalize_pipeline
+
+    app = make_app("gaussian", size=18)
+    pp = compile_pipeline(app.pipeline, fuse=False, block_w=5,
+                          line_buffer=False)
+    cs = pp.kernels[0]
+    assert cs.lane_grid is not None
+    ns = normalize_pipeline(app.pipeline)[0]
+    rng = np.random.default_rng(0)
+    dims = ns.pure_dims + ns.red_dims
+    extents = ns.pure_extents + ns.red_extents
+    for _ in range(30):
+        point = {d: int(rng.integers(0, e)) for d, e in zip(dims, extents)}
+        grid_step = point[ns.pure_dims[0]] // cs.bh
+        lane_step = point[ns.pure_dims[-1]] // cs.kg.bw
+        for k, (buf, acc) in enumerate(ns.loads):
+            want = acc.eval(point)
+            got = cs.element_for(k, point)
+            assert got == want, (buf, point, got, want)
+            rho = {r: point[r] for r in ns.red_dims}
+            for j, e in enumerate(want):
+                lo, hi, step = cs.delivered_interval(
+                    k, j, grid_step, rho, lane_step
+                )
+                assert lo <= e <= hi and (e - lo) % step == 0, (buf, j, e)
+
+
+def test_align_tpu_rounds_bw_at_emission():
+    """Under align_tpu a lane-blocked kernel's emitted lane width is a
+    128-lane multiple — the blocks themselves, not just the
+    aligned_blocks() report — with the ragged lane tail masked."""
+    app = make_app("gaussian", size=18)           # 16 columns
+    pp = compile_pipeline(app.pipeline, block_w=5, align_tpu=True)
+    ck = pp.kernels[0]
+    assert ck.bw == 128 and ck.lane_grid.steps == 1
+    assert ck.lane_grid.pad == 128 - 16
+    assert ck.kg.output.panel_shape(ck.bh)[-1] == 128
+    for g in ck.groups:
+        assert g.block_shape(ck.bh, ck.bw)[g.lane_axis] == 128
+    inputs = _inputs(app)
+    got = np.asarray(pp(inputs), np.float64)
+    want = reference_arrays(app.pipeline, inputs)[app.pipeline.output]
+    assert np.array_equal(got, want)
+
+
+def test_wide_extent_auto_lane_engagement():
+    """The acceptance shape: a width-2048 tile under a budget where today's
+    planner either fails or must hold the full width resident.  The lane
+    grid engages automatically, the per-kernel VMEM estimate lands under
+    the budget, and the result stays bit-exact on integer inputs."""
+    app = make_app("gaussian", size=16, width=2048)   # 14 x 2046 output
+    budget = 48 * 1024
+
+    # today's (flat) planner: even a one-row full-width panel overflows
+    flat = build_pipeline_plan(app.pipeline, vmem_budget=budget,
+                               lane_block=False)
+    kg = flat.kernels[0]
+    bpr, fixed = kg.ws
+    assert kg.bh == 1 and 2 * bpr + fixed > budget
+
+    plan = build_pipeline_plan(app.pipeline, vmem_budget=budget)
+    kg = plan.kernels[0]
+    assert kg.lane_grid is not None and len(kg.grid) == 2
+    assert kg.lane_grid.extent == 2046 and kg.bw % 128 == 0
+    assert kg.vmem_bytes <= budget, (kg.vmem_bytes, budget)
+
+    pp = compile_pipeline(app.pipeline, vmem_budget=budget)
+    inputs = _inputs(app)
+    got = np.asarray(pp(inputs), np.float64)
+    want = reference_arrays(app.pipeline, inputs)[app.pipeline.output]
+    assert np.array_equal(got, want)
+
+
+def test_lane_rescued_fusion_stays_budgeted():
+    """Fusion survives budgets far below the full-width working set by
+    narrowing the lane dim (see test_fusion_respects_vmem_budget); the
+    numeric contract holds on the rescued plan."""
+    app = make_app("unsharp", size=18)
+    pp = compile_pipeline(app.pipeline, vmem_budget=1024)
+    ck = pp.kernels[0]
+    assert ck.fused and ck.lane_grid is not None
+    errs = max_abs_error(pp, _inputs(app))
+    assert max(errs.values()) <= TOL, errs
 
 
 # ---------------------------------------------------------------------------

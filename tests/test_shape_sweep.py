@@ -107,6 +107,34 @@ def test_sweep_covers_carry_plans_per_app():
         assert carrying_padded.get(name, 0) >= 1, (name, carrying_padded)
 
 
+def test_sweep_covers_lane_blocked_plans():
+    """The lanes axis is not vacuous: the sweep contains cases whose plans
+    actually run 2-D lane-blocked grids, including ragged (masked-tail)
+    lane grids and at least one fused kernel with multiple lane shifts
+    (column-halo recompute).  Plan-only, so this check is cheap."""
+    lane_cases = 0
+    ragged = 0
+    fused_lane_shifts = 0
+    for name, kw, _, fuse, ckw in SWEEP_CASES:
+        if "block_w" not in ckw:
+            continue
+        plan = build_pipeline_plan(make_app(name, **kw).pipeline, fuse=fuse, **ckw)
+        for kg in plan.kernels:
+            if kg.lane_grid is None:
+                continue
+            lane_cases += 1
+            assert len(kg.grid) >= 2 and kg.grid[1] == kg.lane_grid.steps
+            if kg.lane_grid.pad > 0:
+                ragged += 1
+            if kg.fused and any(
+                len(sp.lane_shifts) > 1 for sp in kg.stages[:-1]
+            ):
+                fused_lane_shifts += 1
+    assert lane_cases >= 5, lane_cases
+    assert ragged >= 2, ragged
+    assert fused_lane_shifts >= 1, fused_lane_shifts
+
+
 def test_flagship_prime_extents_191x253():
     """The acceptance shapes: extents 191 and 253 have no divisor the
     streaming cap admits except 1, so these plans are padded end-to-end.
@@ -130,6 +158,20 @@ def test_flagship_prime_extents_191x253():
     assert pp.kernels[0].padded_grid is not None
     inputs = sweep_inputs(app, SWEEP_SEED, "u4")
     assert_matches_reference(app, pp, inputs, exact=True, label="gaussian-193")
+
+    # the lane flagship: the full 191x253 prime pair at the hardware lane
+    # width — grid (rows, ceil(253/128)=2) with a masked 3-lane tail,
+    # bit-exact against the reference interpreter
+    app = make_app("gaussian", size=193, width=255)   # 191 x 253 output
+    pp = compile_pipeline(app.pipeline, block_w=128)
+    ck = pp.kernels[0]
+    assert ck.lane_grid is not None
+    assert ck.lane_grid.extent == 253 and ck.bw == 128
+    assert ck.grid[1] == 2 and ck.lane_grid.pad == 3
+    inputs = sweep_inputs(app, SWEEP_SEED + 1, "u4")
+    assert_matches_reference(
+        app, pp, inputs, exact=True, label="gaussian-191x253-bw128"
+    )
 
 
 def test_sweep_case_list_is_deterministic():
