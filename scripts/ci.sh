@@ -4,11 +4,42 @@
 #   bash scripts/ci.sh               # full suite
 #   bash scripts/ci.sh --fast        # skip the slow end-to-end system tests
 #   bash scripts/ci.sh --backend     # backend (plan/emit) suite standalone
+#   bash scripts/ci.sh --verify     # static plan-verifier gate standalone
 #   bash scripts/ci.sh --bench-smoke # regenerate 2 BENCH rows, check schema
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+run_verify_stage() {
+    # Static plan certification (backend/verify): the sweep case list and
+    # every golden app must verify clean, and each seeded plan corruption
+    # must be rejected with its specific named rule.  Purely static — no
+    # kernel is executed — so this stage is seconds, not minutes.
+    python -m pytest -q -m verify
+    # Demo in --verify mode doubles as the certification smoke test: every
+    # app row must report verified=yes, and the verifier's share of cold
+    # plan wall-clock is printed (acceptance: < 20%).
+    python -m repro.backend.demo --smoke --verify
+    # Repo static gate (configured in pyproject.toml).  ruff/mypy are not
+    # baked into the reference container; skip with a notice when absent
+    # rather than failing CI on a missing tool.
+    if command -v ruff >/dev/null 2>&1; then
+        ruff check src/repro/backend src/repro/core
+    else
+        echo "verify stage: ruff not installed; skipping lint gate"
+    fi
+    if python -c 'import mypy' >/dev/null 2>&1; then
+        python -m mypy src/repro/backend src/repro/core
+    else
+        echo "verify stage: mypy not installed; skipping type gate"
+    fi
+}
+
+if [[ "${1:-}" == "--verify" ]]; then
+    run_verify_stage
+    exit 0
+fi
 
 # Wall-clock budget for the backend suite: the recorded baseline (seconds,
 # measured on the reference container after the 2-D-lane/compiled-path PR:
@@ -48,7 +79,10 @@ if [[ "${1:-}" == "--backend" ]]; then
     #
     # The whole block runs under a wall-clock budget pinned to the recorded
     # baseline (see above).
+    # The static plan-verifier gate runs first: if certification itself is
+    # broken there is no point executing hundreds of differential cases.
     start_s=$SECONDS
+    run_verify_stage
     python -m pytest -q -m backend
     python -m pytest -q -m linebuf
     HYPOTHESIS_PROFILE=sweep python -m pytest -q -m sweep

@@ -39,6 +39,13 @@ from .runner import (
     plan_cache_key,
     reference_arrays,
 )
+from .verify import (
+    RULES,
+    PlanVerificationError,
+    PlanViolation,
+    assert_plan_verified,
+    verify_plan,
+)
 
 __all__ = [
     "AxisAccess",
@@ -68,4 +75,9 @@ __all__ = [
     "resolve_mode",
     "max_abs_error",
     "reference_arrays",
+    "RULES",
+    "PlanViolation",
+    "PlanVerificationError",
+    "verify_plan",
+    "assert_plan_verified",
 ]

@@ -29,8 +29,9 @@ panel, the paper's Fig. 8a chain lifted from pixels to rows).
 from __future__ import annotations
 
 import itertools
+from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Mapping, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +56,43 @@ from .plan import (
 # with (stage name, shift) keys)
 _RING = object()
 
-# test instrumentation: when set to a list, every panel/warm-up evaluation
-# site records {kernel, stage, shift, rows, when} as the kernel function is
-# traced — the eval counter behind the computed-exactly-once property tests
+# test instrumentation: every panel/warm-up evaluation site records
+# {kernel, stage, shift, rows, when} as the kernel function is traced — the
+# eval counter behind the computed-exactly-once property tests.  Scopes are
+# opened with the ``eval_trace()`` context manager and nest (each scope gets
+# its own list, so parametrized/parallel tests cannot clobber each other's
+# counters); the module-global ``EVAL_TRACE`` remains as a backwards-compat
+# shim for legacy callers that assign a list directly.
+_EVAL_TRACE_STACK: List[List[Dict]] = []
 EVAL_TRACE: Optional[List[Dict]] = None
+
+
+@contextmanager
+def eval_trace() -> Iterator[List[Dict]]:
+    """Collect eval-site records for kernels *traced* inside the scope::
+
+        with codegen.eval_trace() as trace:
+            pp.run(inputs)
+        assert trace  # [{kernel, stage, shift, lane_shift, rows, when}, ...]
+
+    Sites fire at jit-trace time, so re-running an already-warm pipeline
+    records nothing — arm the scope around the first invocation.  Scopes
+    nest: records go to the innermost active scope (plus the legacy
+    ``EVAL_TRACE`` shim when armed), so a helper tracing its own compile
+    does not pollute an enclosing test's counter."""
+    trace: List[Dict] = []
+    _EVAL_TRACE_STACK.append(trace)
+    try:
+        yield trace
+    finally:
+        _EVAL_TRACE_STACK.remove(trace)
+
+
+def _record_eval(record: Dict) -> None:
+    if _EVAL_TRACE_STACK:
+        _EVAL_TRACE_STACK[-1].append(record)
+    if EVAL_TRACE is not None:
+        EVAL_TRACE.append(record)
 
 
 # ---------------------------------------------------------------------------
@@ -336,8 +370,8 @@ def _stage_panel(
     ``lshift`` (in-kernel reductions unrolled).  ``when`` tags which grid
     steps execute this evaluation site ("every" or "step0") for the
     eval-trace instrumentation."""
-    if EVAL_TRACE is not None:
-        EVAL_TRACE.append({
+    if _EVAL_TRACE_STACK or EVAL_TRACE is not None:
+        _record_eval({
             "kernel": ctx.kg.name,
             "stage": ctx.sp.name,
             "shift": shift,
@@ -874,5 +908,6 @@ __all__ = [
     "ViewGroup",
     "compile_stage",
     "emit_kernel",
+    "eval_trace",
     "resolve_mode",
 ]

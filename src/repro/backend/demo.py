@@ -68,9 +68,10 @@ def _make(name: str, kw: Dict):
 
 def run_demo(
     app_names=None, smoke: bool = False, fuse: bool = True,
-    mode: str = "interpret",
+    mode: str = "interpret", verify: bool = False,
 ) -> List[Dict]:
-    from repro.backend import compile_pipeline, max_abs_error
+    from repro.backend import build_pipeline_plan, compile_pipeline, max_abs_error
+    from repro.backend.golden import check_plan_verified
 
     wanted = set(app_names) if app_names else None
     if wanted is not None:
@@ -87,9 +88,22 @@ def run_demo(
         if wanted is not None and name not in wanted:
             continue
         app = _make(name, kw)
+        plan_us = None
+        if verify:
+            # cold plan wall-clock, measured without certification, so the
+            # verifier's overhead share below is an honest ratio
+            t0 = time.perf_counter()
+            build_pipeline_plan(app.pipeline, fuse=fuse)
+            plan_us = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
-        pp = compile_pipeline(app.pipeline, fuse=fuse, mode=mode)
+        # verify=False here: the golden certification contract below reports
+        # violations as plan_notes (a MISMATCH row + exit 1) instead of a
+        # PlanVerificationError traceback mid-table
+        pp = compile_pipeline(app.pipeline, fuse=fuse, mode=mode, verify=False)
         compile_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        verify_notes = check_plan_verified(name, pp.plan)
+        verify_us = (time.perf_counter() - t0) * 1e6
         rng = np.random.default_rng(0)
         inputs = {
             n: rng.integers(0, 16, s).astype(np.float32)
@@ -106,7 +120,7 @@ def run_demo(
         warm[pp.pipeline.output].block_until_ready()
         warm_us = (time.perf_counter() - t0) * 1e6
 
-        plan_notes: List[str] = []
+        plan_notes: List[str] = list(verify_notes)
         if name == "matmul_bigk":
             # reference-interpreter tables are too slow at K=2048; the dense
             # f64 matmul is the same golden value
@@ -132,7 +146,6 @@ def run_demo(
         # match the golden table — a silent fallback to recompute fusion
         # fails the demo even though the numerics still match
         if fuse:
-            from repro.backend import build_pipeline_plan
             from repro.backend.golden import check_linebuf_plan, expected_linebuf
 
             if expected_linebuf(name, kw.get("schedule")) is not None:
@@ -159,6 +172,9 @@ def run_demo(
                 "run_us_interp": round(run_us),
                 "run_us_warm": round(warm_us),
                 "max_err": err,
+                "verified": "yes" if not verify_notes else "FAIL",
+                "verify_us": round(verify_us),
+                "plan_us": round(plan_us) if plan_us is not None else None,
                 "plan_notes": plan_notes,
                 "ok": err <= TOL and not plan_notes,
             }
@@ -180,14 +196,19 @@ def main(argv=None) -> int:
         help="execution path: interpret (portable), compiled (TPU Mosaic), "
              "auto (compiled on TPU, interpret elsewhere)",
     )
+    ap.add_argument(
+        "--verify", action="store_true",
+        help="also report the static verifier's share of cold plan "
+             "wall-clock (every plan is certified either way)",
+    )
     args = ap.parse_args(argv)
     names = args.apps.split(",") if args.apps else None
 
     rows = run_demo(names, smoke=args.smoke, fuse=not args.no_fuse,
-                    mode=args.mode)
+                    mode=args.mode, verify=args.verify)
     print(
         "app,stages,kernels,streams,linebuf,rings,eval_rows,vmem_kib,"
-        "hbm_kib,compile_us,run_us_interp,run_us_warm,max_err,status"
+        "hbm_kib,compile_us,run_us_interp,run_us_warm,max_err,verified,status"
     )
     ok = True
     for r in rows:
@@ -197,10 +218,20 @@ def main(argv=None) -> int:
             f"{r['app']},{r['stages']},{r['kernels']},{r['streams']},"
             f"{r['linebuf']},{r['rings']},{r['eval_rows']},"
             f"{r['vmem_kib']},{r['hbm_kib']},{r['compile_us']},"
-            f"{r['run_us_interp']},{r['run_us_warm']},{r['max_err']:.2e},{status}"
+            f"{r['run_us_interp']},{r['run_us_warm']},{r['max_err']:.2e},"
+            f"{r['verified']},{status}"
         )
         for note in r["plan_notes"]:
             print(f"#   {r['app']}: {note}", file=sys.stderr)
+    if args.verify:
+        plan_us = sum(r["plan_us"] for r in rows)
+        verify_us = sum(r["verify_us"] for r in rows)
+        pct = 100.0 * verify_us / max(plan_us, 1.0)
+        print(
+            f"# verify: {verify_us / 1e3:.1f}ms over {plan_us / 1e3:.1f}ms "
+            f"cold plan wall-clock ({pct:.1f}% overhead)",
+            file=sys.stderr,
+        )
     if not ok:
         print("backend demo: MISMATCH against reference/plan", file=sys.stderr)
         return 1

@@ -127,10 +127,23 @@ def check_linebuf_plan(name, schedule, plan, plan_recompute) -> list:
     return problems
 
 
+def check_plan_verified(name, plan) -> list:
+    """Static certification contract: every golden app's default plan must
+    pass the full ``backend.verify`` rule catalog (bounds, mask soundness,
+    exactly-once writes, budget audit).  Returns one problem string per
+    violation (empty = certified); the demo folds these into ``plan_notes``
+    so a single violating plan fails the smoke test — and CI — even when
+    the numerics happen to still match."""
+    from repro.backend.verify import verify_plan
+
+    return [f"plan verification: {v}" for v in verify_plan(plan)]
+
+
 __all__ = [
     "GOLDEN_PLAN_SHAPES",
     "GOLDEN_LINEBUF",
     "expected_plan_shape",
     "expected_linebuf",
     "check_linebuf_plan",
+    "check_plan_verified",
 ]

@@ -381,6 +381,25 @@ class StagePlan:
         lane blocking)."""
         return self.ring_shape(bh) if key is None else self.panel_shape(bh)
 
+    # -- verifier-facing metadata ------------------------------------------
+
+    def bind_shifts(self) -> Tuple[int, ...]:
+        """Row shifts at which this stage's panels are actually materialized
+        per grid step: the full demanded shift set in recompute mode, but
+        only ``(lo, hi)`` under a line buffer (warm-up seeds ``lo..hi`` once;
+        every steady step evaluates the single leading-edge panel ``hi``)."""
+        lb = self.line_buffer
+        return self.shifts if lb is None else (lb.lo, lb.hi)
+
+    def red_extent_map(self, red_grid: Optional["RedGrid"]) -> Dict[str, int]:
+        """In-kernel reduction extents, as the emitter iterates them: a dim
+        lifted into the grid (``red_grid``) contributes only its in-chunk
+        extent per grid step — the grid index advances the rest."""
+        ext = dict(zip(self.nstage.red_dims, self.nstage.red_extents))
+        if red_grid is not None and red_grid.dim in ext:
+            ext[red_grid.dim] = red_grid.chunk
+        return ext
+
 
 @dataclass(frozen=True)
 class RedGrid:
@@ -480,6 +499,16 @@ class KernelGroup:
         """Output lane extent (the valid span of the lane grid), or None
         when the kernel does not lane-block."""
         return None if self.lane_grid is None else self.lane_grid.extent
+
+    @property
+    def steps0(self) -> int:
+        """Grid extent along the row dim (1 for unstreamed kernels)."""
+        return self.grid[0]
+
+    @property
+    def lane_steps(self) -> int:
+        """Grid extent along the lane dim (1 when not lane-blocked)."""
+        return self.grid[1] if self.lane_grid is not None else 1
 
     def required_extents(self) -> Dict[str, Tuple[int, ...]]:
         """Per input buffer, the minimal extent along every axis that the

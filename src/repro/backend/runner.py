@@ -40,6 +40,7 @@ from repro.frontend.lower import Pipeline, execute_pipeline, normalize_pipeline
 
 from .codegen import CompiledKernel, emit_kernel, resolve_mode
 from .plan import PipelinePlan, RED_GRID_THRESHOLD, build_pipeline_plan
+from .verify import assert_plan_verified
 
 
 @dataclass
@@ -169,6 +170,7 @@ def compile_pipeline(
     align_tpu: bool = False,
     line_buffer: object = "auto",
     red_resident: bool = True,
+    verify: object = "auto",
 ) -> PallasPipeline:
     """``line_buffer`` picks the recompute-vs-carry mode for fused
     intermediates and shifted input deliveries: ``False`` restores the
@@ -184,7 +186,16 @@ def compile_pipeline(
     ``"auto"``); the legacy ``interpret`` boolean, when given, overrides it.
     ``cache=True`` consults the plan-keyed pipeline cache: a hit returns
     the previously compiled :class:`PallasPipeline` (its jit-warmed kernels
-    included) without re-planning or re-emitting."""
+    included) without re-planning or re-emitting.
+
+    ``verify`` gates static plan certification (``backend.verify``): every
+    freshly built plan is checked before emission and a violation raises
+    :class:`~repro.backend.verify.PlanVerificationError` instead of emitting
+    a kernel from a broken plan.  ``"auto"`` (default) verifies fresh plans
+    only (cache hits were certified when first built), ``True`` also
+    re-verifies on cache hits, ``False`` skips verification.  The knob does
+    not affect the plan itself, so it is deliberately *not* part of the
+    plan cache key."""
     if interpret is not None:
         mode = "interpret" if interpret else "compiled"
     mode = resolve_mode(mode)
@@ -201,14 +212,20 @@ def compile_pipeline(
         line_buffer=line_buffer,
         red_resident=red_resident,
     )
+    if verify not in (True, False, "auto"):
+        raise ValueError(f"verify must be True, False, or 'auto': {verify!r}")
     key: Optional[str] = None
     if cache:
         key = plan_cache_key(pipe, mode, plan_kwargs)
         hit = _PIPELINE_CACHE.get(key)
         if hit is not None:
             _PIPELINE_CACHE.move_to_end(key)
+            if verify is True:
+                assert_plan_verified(hit.plan)
             return hit
     plan = build_pipeline_plan(pipe, **plan_kwargs)
+    if verify is not False:
+        assert_plan_verified(plan)
     kernels = [emit_kernel(kg, mode=mode) for kg in plan.kernels]
     pp = PallasPipeline(pipe, kernels, plan, mode=mode, cache_key=key)
     if cache:

@@ -1,0 +1,913 @@
+"""Static plan verification: certify a :class:`PipelinePlan` before emission.
+
+The planner derives every delivery decision (views, rings, line buffers,
+padded grids, lane blocks, grid reductions) from affine access maps, and the
+emitter trusts those decisions blindly — a drifted field in the plan IR
+turns into a silent mis-slice or an unmasked tail inside ``pallas_call``.
+This pass re-proves the contract between the two from the plan IR alone,
+using the ``core/poly`` affine machinery (map images, box differences,
+emptiness): no kernel is executed, no buffer is touched, and a plan no test
+has ever run still gets certified.
+
+Four rule families, ``UB``-prefixed after the unified-buffer abstraction
+they guard:
+
+``UB1xx`` — **bounds**.  Every HBM view, delivered block tap, ring tap, and
+scratch tap, composed with the kernel's (valid) grid domain, lands inside
+its declared buffer / block / ring / panel extents.  Padded-grid delivery
+*past* the valid extent is exempt here by design — proving it is masked is
+the ``UB2xx`` family's job.
+
+``UB2xx`` — **mask soundness**.  Wherever delivered or computed rows/lanes
+exceed the valid extents (``valid0``/``valid1``, reduction tails), the plan
+carries the masking metadata (``PaddedGrid``/``lane_grid``/``RedGrid``) the
+emitter keys its iota masks on, with mutually consistent fields; ring
+warm-up views cover exactly the carried halo before any steady-state read,
+and line-buffer halos fit the block (no torn rotates, no uninitialized
+carried rows).
+
+``UB3xx`` — **write disjointness / exactly-once**.  No two grid steps write
+the same output element except through a declared ``RedGrid`` accumulation;
+per-stage shift sets re-derived from the raw access maps match the planned
+ones, and the implied eval-row counts match ``KernelGroup.eval_rows()``.
+
+``UB4xx`` — **budget audit**.  An independent re-summation of view, ring,
+scratch, and output bytes against ``vmem_bytes()``, and of the planner's
+working-set accounting ``(bytes_per_row, fixed)`` against ``KernelGroup.ws``
+and the recorded VMEM budget.
+
+Every violation carries the rule id, the offending kernel/stage/view, and a
+concrete witness point (a buffer coordinate, a tap row, or the offending
+byte counts).  ``verify_plan`` returns all violations; callers that want a
+hard gate use :func:`assert_plan_verified` or
+``compile_pipeline(verify=True)``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.poly import AffineExpr, AffineMap, Box, map_image
+from repro.core.ubplan import VMEM_BYTES
+
+from .access import AxisAccess, LoadAccess
+from .plan import (
+    ELEM_BYTES,
+    KernelGroup,
+    PipelinePlan,
+    RingStream,
+    StagePlan,
+    ViewGroup,
+)
+
+__all__ = [
+    "RULES",
+    "PlanViolation",
+    "PlanVerificationError",
+    "verify_plan",
+    "assert_plan_verified",
+]
+
+
+# Rule catalog: id -> what the rule proves (see backend/README.md for the
+# prose version; keep the two in sync).
+RULES: Dict[str, str] = {
+    "UB101": "HBM view bounds: every view image lies inside its buffer",
+    "UB102": "delivered-block bounds: in-block and ring taps fit the block",
+    "UB103": "scratch bounds: fused taps hit materialized panels/ring rows",
+    "UB201": "padded-grid masks: tail delivery is masked and metadata-consistent",
+    "UB202": "ring warm-up: the pinned prefix covers the halo before any read",
+    "UB203": "line-buffer carry: halo fits the block; shifts span lo..hi",
+    "UB204": "reduction tails: RedGrid covers the true extent, ceil-stepped",
+    "UB301": "exactly-once: extra grid dims are declared; rows cover the extent",
+    "UB302": "eval accounting: derived shift sets and eval rows match the plan",
+    "UB401": "VMEM re-summation: stream/ring/scratch bytes match vmem_bytes()",
+    "UB402": "VMEM budget: the working set fits the recorded budget",
+    "UB403": "working-set drift: re-derived (bytes_per_row, fixed) match ws",
+}
+
+
+@dataclass(frozen=True)
+class PlanViolation:
+    """One broken plan invariant: a named rule, where, and a witness."""
+
+    rule: str
+    kernel: str
+    message: str
+    stage: Optional[str] = None
+    view: Optional[str] = None
+    witness: Tuple[int, ...] = ()
+
+    def __str__(self) -> str:
+        where = self.kernel
+        if self.stage and self.stage != self.kernel:
+            where += f"/{self.stage}"
+        if self.view:
+            where += f" view={self.view}"
+        wit = f" witness={self.witness}" if self.witness else ""
+        return f"[{self.rule}] {where}: {self.message}{wit}"
+
+
+class PlanVerificationError(Exception):
+    """A plan failed static verification; ``.violations`` has the details."""
+
+    def __init__(self, violations: Sequence[PlanViolation]):
+        self.violations = list(violations)
+        lines = "\n".join(f"  {v}" for v in self.violations)
+        super().__init__(
+            f"plan verification failed ({len(self.violations)} violation(s)):\n"
+            f"{lines}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _tap_interval(
+    ax: AxisAccess, red_ext: Dict[str, int], extent_of
+) -> Tuple[int, int]:
+    """Inclusive element interval one tap axis touches: the reduction-offset
+    range widened by the pure-dim sweep (``stride * (extent - 1)``)."""
+    lo, hi = ax.offset_range(red_ext)
+    if ax.pure_dim is not None:
+        d = ax.stride * (extent_of(ax.pure_dim) - 1)
+        lo, hi = lo + min(0, d), hi + max(0, d)
+    return lo, hi
+
+
+def _interval_witness(lo: int, hi: int, n: int) -> Optional[int]:
+    """A point of ``[lo, hi]`` outside ``[0, n - 1]``, or None if contained.
+    Uses the 1-D box difference so the witness is an *extreme* offender."""
+    if lo > hi or n <= 0:
+        return lo
+    outside = Box(("o",), ((lo, hi),)).difference(Box(("o",), ((0, n - 1),)))
+    if not outside:
+        return None
+    olo, ohi = outside[0].intervals[0]
+    return olo if olo < 0 else ohi
+
+
+def _view_label(kg: KernelGroup, gi: int) -> str:
+    g = kg.groups[gi]
+    return f"{g.buffer}[{gi}]"
+
+
+# ---------------------------------------------------------------------------
+# UB1xx — bounds
+# ---------------------------------------------------------------------------
+
+
+def _check_view_bounds(
+    kg: KernelGroup, shapes: Dict[str, Tuple[int, ...]], out: List[PlanViolation]
+) -> None:
+    """UB101: the affine image of every view's valid domain lies inside its
+    buffer's extents.  The domain is the *valid* part of the padded grid —
+    rows ``[0, e0)``, lanes ``[0, e1)`` — because delivery past the valid
+    extent is clamped/masked (proved by UB2xx), exactly the contract
+    ``required_extents()`` promises callers."""
+    for gi, g in enumerate(kg.groups):
+        label = _view_label(kg, gi)
+        shape = shapes.get(g.buffer)
+        if shape is None:
+            out.append(PlanViolation(
+                "UB101", kg.name, f"view of unknown buffer {g.buffer!r}",
+                view=label,
+            ))
+            continue
+        if len(shape) != g.ndim:
+            out.append(PlanViolation(
+                "UB101", kg.name,
+                f"view rank {g.ndim} != buffer rank {len(shape)}", view=label,
+            ))
+            continue
+        rows = g.rows0 if g.pinned else kg.e0
+        dims: List[str] = []
+        ivs: List[Tuple[int, int]] = []
+        exprs: List[AffineExpr] = []
+        bad = None
+        for j in range(g.ndim):
+            d = f"i{j}"
+            dims.append(d)
+            if j == g.blocked_axis:
+                if rows <= 0:
+                    bad = f"degenerate blocked axis {j}: {rows} rows"
+                    break
+                ivs.append((0, rows - 1))
+                exprs.append(AffineExpr.var(d) * g.stride0 + AffineExpr.constant(g.k0))
+            elif j == g.lane_axis:
+                e1 = kg.e1 if kg.e1 is not None else 1
+                if e1 <= 0:
+                    bad = f"degenerate lane axis {j}: {e1} lanes"
+                    break
+                ivs.append((0, e1 - 1))
+                exprs.append(
+                    AffineExpr.var(d) * g.lane_stride + AffineExpr.constant(g.l0)
+                )
+            else:
+                if g.span[j] <= 0:
+                    bad = f"degenerate axis {j}: span {g.span[j]}"
+                    break
+                ivs.append((g.base[j], g.base[j] + g.span[j] - 1))
+                exprs.append(AffineExpr.var(d))
+        if bad is not None:
+            out.append(PlanViolation("UB101", kg.name, bad, view=label))
+            continue
+        dom = Box(tuple(dims), tuple(ivs))
+        image = map_image(
+            AffineMap(tuple(dims), tuple(exprs)), dom,
+            out_dims=tuple(f"x{j}" for j in range(g.ndim)),
+        )
+        buf = Box.from_extents(tuple(f"x{j}" for j in range(g.ndim)), shape)
+        escaped = image.difference(buf)
+        if escaped:
+            witness = tuple(lo for lo, _ in escaped[0].intervals)
+            out.append(PlanViolation(
+                "UB101", kg.name,
+                f"view image {image.intervals} escapes buffer extents {shape}",
+                view=label, witness=witness,
+            ))
+
+
+def _check_block_taps(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB102: in-kernel tap slices fit the delivered block.  Per view
+    binding, every non-blocked/non-lane axis's tap interval (reduction
+    offsets + pure-dim sweep, relative to the group's hulled base) must fit
+    the group's span; ring taps must start inside the carried halo and at
+    the row the binding's view start implies."""
+    rg = kg.red_grid
+    for sp in kg.stages:
+        red_ext = sp.red_extent_map(rg)
+        ext_of = sp.nstage.extent
+        for k, la in enumerate(sp.accesses):
+            if sp.load_kind[k] != "view":
+                continue
+            for bk, gi in sp.view_binding[k].items():
+                if not (0 <= gi < len(kg.groups)):
+                    out.append(PlanViolation(
+                        "UB102", kg.name, f"binding {bk} -> missing group {gi}",
+                        stage=sp.name,
+                    ))
+                    continue
+                g = kg.groups[gi]
+                label = _view_label(kg, gi)
+                shift, off = bk[0], bk[1]
+                if g.blocked_axis is not None and off is not None:
+                    want_k0 = off + g.stride0 * shift
+                    if g.k0 != want_k0:
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"binding {bk} implies view start {want_k0}, "
+                            f"group has k0={g.k0}",
+                            stage=sp.name, view=label, witness=(g.k0,),
+                        ))
+                for j, ax in enumerate(la.axes):
+                    if j == g.blocked_axis or j == g.lane_axis:
+                        continue                 # block-relative; tile by bh/bw
+                    if j == g.red_axis:
+                        if rg is None:
+                            continue             # undeclared dim: UB301 reports
+                        if g.resident:
+                            full = ext_of(rg.dim)
+                            if g.base[j] != 0 or g.span[j] < full:
+                                out.append(PlanViolation(
+                                    "UB102", kg.name,
+                                    f"resident reduction axis {j} holds "
+                                    f"[{g.base[j]}, {g.base[j] + g.span[j]}) "
+                                    f"but the kernel indexes [0, {full})",
+                                    stage=sp.name, view=label,
+                                    witness=(full - 1,),
+                                ))
+                        else:
+                            lo, hi = ax.offset_range(red_ext)
+                            w = _interval_witness(lo, hi, g.red_chunk)
+                            if w is not None:
+                                out.append(PlanViolation(
+                                    "UB102", kg.name,
+                                    f"reduction-axis tap offset {w} outside "
+                                    f"the delivered chunk [0, {g.red_chunk})",
+                                    stage=sp.name, view=label, witness=(w,),
+                                ))
+                        continue
+                    lo, hi = _tap_interval(ax, red_ext, ext_of)
+                    w = _interval_witness(lo - g.base[j], hi - g.base[j], g.span[j])
+                    if w is not None:
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"axis {j} tap [{lo}, {hi}] outside delivered "
+                            f"span [{g.base[j]}, {g.base[j] + g.span[j]})",
+                            stage=sp.name, view=label, witness=(w + g.base[j],),
+                        ))
+            for bk, (ri, t0) in sp.ring_binding[k].items():
+                if not (0 <= ri < len(kg.rings)):
+                    out.append(PlanViolation(
+                        "UB102", kg.name, f"binding {bk} -> missing ring {ri}",
+                        stage=sp.name,
+                    ))
+                    continue
+                r = kg.rings[ri]
+                label = f"ring:{r.buffer}[{ri}]"
+                shift, off = bk[0], bk[1]
+                start = off + r.stride0 * shift - r.lo
+                if start % r.stride0 != 0 or start // r.stride0 != t0:
+                    out.append(PlanViolation(
+                        "UB102", kg.name,
+                        f"ring tap {bk} starts at row {t0}, but its view "
+                        f"start implies row {start}/{r.stride0}",
+                        stage=sp.name, view=label, witness=(t0,),
+                    ))
+                if not (0 <= t0 <= r.halo):
+                    out.append(PlanViolation(
+                        "UB102", kg.name,
+                        f"ring tap row {t0} outside the carried halo "
+                        f"[0, {r.halo}] — the tap window [{t0}, {t0}+bh) "
+                        f"escapes the {r.halo}+bh-row ring",
+                        stage=sp.name, view=label, witness=(t0,),
+                    ))
+                for j, ax in enumerate(la.axes):
+                    if j == r.axis:
+                        continue
+                    lo, hi = _tap_interval(ax, red_ext, ext_of)
+                    w = _interval_witness(lo - r.base[j], hi - r.base[j], r.span[j])
+                    if w is not None:
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"axis {j} ring tap [{lo}, {hi}] outside hull "
+                            f"[{r.base[j]}, {r.base[j] + r.span[j]})",
+                            stage=sp.name, view=label, witness=(w + r.base[j],),
+                        ))
+
+
+def _check_scratch_taps(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB103: every fused (scratch) tap hits a panel the producer actually
+    materializes — a planned ``(shift, lane shift)`` panel in recompute
+    mode, a ring row within ``[lo, hi]`` under a line buffer — and the
+    producer runs before the consumer, so no read sees uninitialized
+    scratch.  Inner tap axes must also fit the producer's panel extents."""
+    order = {sp.name: i for i, sp in enumerate(kg.stages)}
+    lane = kg.lane_grid is not None
+    for ci, sp in enumerate(kg.stages):
+        red_ext = sp.red_extent_map(kg.red_grid)
+        ext_of = sp.nstage.extent
+        for k, la in enumerate(sp.accesses):
+            if sp.load_kind[k] != "scratch":
+                continue
+            pname = sp.scratch_producer[k]
+            if pname is None or pname not in order:
+                out.append(PlanViolation(
+                    "UB103", kg.name,
+                    f"scratch load {k} names unknown producer {pname!r}",
+                    stage=sp.name,
+                ))
+                continue
+            if order[pname] >= ci:
+                out.append(PlanViolation(
+                    "UB103", kg.name,
+                    f"reads {pname!r} before it is evaluated "
+                    f"(stage order {order[pname]} >= {ci})",
+                    stage=sp.name,
+                ))
+                continue
+            psp = kg.stage_plan(pname)
+            plb = psp.line_buffer
+            row_offs = la.axes[0].offsets(red_ext)
+            jL = sp.lane_axis_of[k] if lane else None
+            lane_offs = la.axes[jL].offsets(red_ext) if jL is not None else [0]
+            panels = {
+                (s, t) for s in psp.shifts for t in psp.lane_shifts
+            }
+            for s in sp.bind_shifts():
+                for o in row_offs:
+                    slot = o + s
+                    if plb is not None:
+                        if not (plb.lo <= slot <= plb.hi):
+                            out.append(PlanViolation(
+                                "UB103", kg.name,
+                                f"taps {pname!r} at row shift {slot}, but its "
+                                f"ring carries [{plb.lo}, {plb.hi}]",
+                                stage=sp.name, witness=(slot,),
+                            ))
+                        continue
+                    for t in sp.lane_shifts if lane else (0,):
+                        for lo_ in lane_offs:
+                            lslot = lo_ + t
+                            if (slot, lslot) not in panels:
+                                out.append(PlanViolation(
+                                    "UB103", kg.name,
+                                    f"taps {pname!r} at panel "
+                                    f"(shift {slot}, lane {lslot}) which is "
+                                    f"never materialized "
+                                    f"(planned {sorted(panels)})",
+                                    stage=sp.name, witness=(slot, lslot),
+                                ))
+            # inner axes index the producer's panel directly
+            pext = psp.nstage.pure_extents
+            for j, ax in enumerate(la.axes):
+                if j == 0 or j == jL or j >= len(pext):
+                    continue
+                lo, hi = _tap_interval(ax, red_ext, ext_of)
+                w = _interval_witness(lo, hi, pext[j])
+                if w is not None:
+                    out.append(PlanViolation(
+                        "UB103", kg.name,
+                        f"axis {j} taps {pname!r} panel at [{lo}, {hi}] "
+                        f"outside extent {pext[j]}",
+                        stage=sp.name, witness=(w,),
+                    ))
+
+
+# ---------------------------------------------------------------------------
+# UB2xx — mask soundness
+# ---------------------------------------------------------------------------
+
+
+def _check_masks(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB201: wherever the grid delivers rows/lanes past the valid extents,
+    the plan carries consistent masking metadata.  The emitter's taint
+    discipline — iota row/lane masks keyed on ``padded_grid``/``lane_grid``,
+    applied to every store and accumulate — kills any value derived from
+    rows beyond ``valid_e0`` / lanes beyond ``valid1``; this rule proves the
+    metadata those masks are keyed on exists and matches the grid, and that
+    every streaming view declares the valid extents the masks assume."""
+    if kg.streamed:
+        steps0 = kg.grid[0]
+        pg = kg.padded_grid
+        if pg is not None:
+            if (pg.extent, pg.block, pg.steps) != (kg.e0, kg.bh, steps0):
+                out.append(PlanViolation(
+                    "UB201", kg.name,
+                    f"padded_grid ({pg.extent}, {pg.block}, {pg.steps}) != "
+                    f"grid reality ({kg.e0}, {kg.bh}, {steps0})",
+                    witness=(pg.extent, pg.block, pg.steps),
+                ))
+        elif steps0 * kg.bh > kg.e0:
+            out.append(PlanViolation(
+                "UB201", kg.name,
+                f"{steps0} x {kg.bh}-row steps deliver "
+                f"{steps0 * kg.bh - kg.e0} rows past the {kg.e0}-row extent "
+                f"with no padded_grid to mask them",
+                witness=(kg.e0,),
+            ))
+        lg = kg.lane_grid
+        if lg is not None:
+            steps1 = kg.grid[1] if len(kg.grid) > 1 else 0
+            if kg.bw is None or (lg.extent, lg.block, lg.steps) != (
+                kg.e1, kg.bw, steps1
+            ):
+                out.append(PlanViolation(
+                    "UB201", kg.name,
+                    f"lane_grid ({lg.extent}, {lg.block}, {lg.steps}) != "
+                    f"grid reality ({kg.e1}, {kg.bw}, {steps1})",
+                    witness=(lg.extent, lg.block, lg.steps),
+                ))
+        elif kg.bw is not None:
+            out.append(PlanViolation(
+                "UB201", kg.name,
+                f"lane block bw={kg.bw} without a lane_grid declaring the "
+                f"valid lane extent",
+            ))
+    else:
+        if kg.padded_grid is not None or kg.lane_grid is not None:
+            out.append(PlanViolation(
+                "UB201", kg.name,
+                "unstreamed kernel carries padded/lane grid metadata",
+            ))
+    for gi, g in enumerate(kg.groups):
+        if g.blocked_axis is not None and not g.pinned and g.valid0 != kg.e0:
+            out.append(PlanViolation(
+                "UB201", kg.name,
+                f"streaming view valid0={g.valid0} != output extent {kg.e0}: "
+                f"tail masks would trust the wrong valid row count",
+                view=_view_label(kg, gi),
+                witness=() if g.valid0 is None else (g.valid0,),
+            ))
+        if g.lane_axis is not None and g.valid1 != kg.e1:
+            out.append(PlanViolation(
+                "UB201", kg.name,
+                f"lane view valid1={g.valid1} != lane extent {kg.e1}",
+                view=_view_label(kg, gi),
+                witness=() if g.valid1 is None else (g.valid1,),
+            ))
+
+
+def _check_rings(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB202: each input ring's warm-up (pinned prefix) view covers exactly
+    the carried halo starting at the trailing view start ``lo``, the steady
+    view streams from the leading start ``hi``, and the halo fits the block
+    (a rotate whose source overlaps its destination would tear the carried
+    rows) — so every carried row is initialized before any tap reads it."""
+    for ri, r in enumerate(kg.rings):
+        label = f"ring:{r.buffer}[{ri}]"
+        if r.hi <= r.lo or r.stride0 < 1 or (r.hi - r.lo) % r.stride0 != 0:
+            out.append(PlanViolation(
+                "UB202", kg.name,
+                f"degenerate ring window lo={r.lo} hi={r.hi} "
+                f"stride={r.stride0}",
+                view=label, witness=(r.lo, r.hi),
+            ))
+            continue
+        if r.halo > kg.bh:
+            out.append(PlanViolation(
+                "UB202", kg.name,
+                f"carried halo {r.halo} exceeds block height {kg.bh}: the "
+                f"rotate's source overlaps rows it has not yet refreshed",
+                view=label, witness=(r.halo,),
+            ))
+        ok_prefix = (
+            0 <= r.prefix < len(kg.groups)
+            and kg.groups[r.prefix].pinned
+            and kg.groups[r.prefix].rows0 == r.halo
+            and kg.groups[r.prefix].k0 == r.lo
+            and kg.groups[r.prefix].stride0 == r.stride0
+            and kg.groups[r.prefix].blocked_axis == r.axis
+        )
+        if not ok_prefix:
+            got = (
+                kg.groups[r.prefix] if 0 <= r.prefix < len(kg.groups) else None
+            )
+            out.append(PlanViolation(
+                "UB202", kg.name,
+                f"warm-up view must pin {r.halo} rows from {r.lo} "
+                f"(stride {r.stride0}) on axis {r.axis}; got "
+                + (
+                    f"rows0={got.rows0} k0={got.k0} stride={got.stride0} "
+                    f"pinned={got.pinned}" if got is not None
+                    else f"missing group {r.prefix}"
+                ),
+                view=label, witness=(r.halo,),
+            ))
+        ok_steady = (
+            0 <= r.steady < len(kg.groups)
+            and not kg.groups[r.steady].pinned
+            and kg.groups[r.steady].k0 == r.hi
+            and kg.groups[r.steady].stride0 == r.stride0
+            and kg.groups[r.steady].blocked_axis == r.axis
+        )
+        if not ok_steady:
+            out.append(PlanViolation(
+                "UB202", kg.name,
+                f"steady view must stream from the leading start {r.hi} "
+                f"(stride {r.stride0}) on axis {r.axis}",
+                view=label, witness=(r.hi,),
+            ))
+
+
+def _check_line_buffers(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB203: a line-buffered stage's ring spans exactly the demanded shift
+    window (``lo = min(shifts)``, ``hi = max(shifts)``), its halo fits the
+    block (steady steps compute ``bh`` rows; a larger halo would carry rows
+    no step ever wrote), and carry never composes with a lane grid (the
+    emitter has no lane-aware rotate — planner and verifier both refuse)."""
+    for sp in kg.stages:
+        lb = sp.line_buffer
+        if lb is None:
+            continue
+        if kg.lane_grid is not None:
+            out.append(PlanViolation(
+                "UB203", kg.name,
+                "line buffer composed with a lane grid is unsupported "
+                "(no lane-aware rotate exists)",
+                stage=sp.name,
+            ))
+        if sp is kg.stages[-1]:
+            out.append(PlanViolation(
+                "UB203", kg.name, "output stage cannot be line-buffered",
+                stage=sp.name,
+            ))
+            continue
+        if not sp.shifts or lb.lo != min(sp.shifts) or lb.hi != max(sp.shifts):
+            out.append(PlanViolation(
+                "UB203", kg.name,
+                f"ring window [{lb.lo}, {lb.hi}] != demanded shift span "
+                f"[{min(sp.shifts) if sp.shifts else 0}, "
+                f"{max(sp.shifts) if sp.shifts else 0}]",
+                stage=sp.name, witness=(lb.lo, lb.hi),
+            ))
+        if lb.halo > kg.bh:
+            out.append(PlanViolation(
+                "UB203", kg.name,
+                f"carried halo {lb.halo} exceeds block height {kg.bh}",
+                stage=sp.name, witness=(lb.halo,),
+            ))
+        if not kg.streamed or not sp.streamed:
+            out.append(PlanViolation(
+                "UB203", kg.name,
+                "line buffer on an unstreamed stage has no grid to carry "
+                "across",
+                stage=sp.name,
+            ))
+
+
+def _check_red_grid(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB204: a grid-lifted reduction covers its true extent by
+    ceil-division — the masked tail is the only shortfall allowed — and the
+    declared dim is the stage's leading reduction dim (the contract that
+    keeps chunked accumulation order identical to the reference)."""
+    rg = kg.red_grid
+    if rg is None:
+        return
+    if len(kg.stages) != 1:
+        out.append(PlanViolation(
+            "UB204", kg.name,
+            "grid reduction on a fused kernel is unsupported",
+        ))
+        return
+    ns = kg.output.nstage
+    if not ns.red_dims or rg.dim != ns.red_dims[0]:
+        out.append(PlanViolation(
+            "UB204", kg.name,
+            f"RedGrid dim {rg.dim!r} is not the leading reduction dim "
+            f"{ns.red_dims[:1]}",
+        ))
+        return
+    true_extent = ns.red_extents[0]
+    if rg.extent != true_extent:
+        out.append(PlanViolation(
+            "UB204", kg.name,
+            f"RedGrid extent {rg.extent} != true reduction extent "
+            f"{true_extent}: tail terms would be mis-masked",
+            witness=(rg.extent,),
+        ))
+    if rg.chunk < 1 or rg.steps != _cdiv(rg.extent, rg.chunk):
+        out.append(PlanViolation(
+            "UB204", kg.name,
+            f"RedGrid steps {rg.steps} != ceil({rg.extent}/{rg.chunk}): "
+            f"accumulation would drop or repeat chunks",
+            witness=(rg.steps,),
+        ))
+    if not kg.grid or kg.grid[-1] != rg.steps:
+        out.append(PlanViolation(
+            "UB204", kg.name,
+            f"grid {kg.grid} does not end with the {rg.steps} reduction "
+            f"steps",
+        ))
+
+
+# ---------------------------------------------------------------------------
+# UB3xx — write disjointness / exactly-once
+# ---------------------------------------------------------------------------
+
+
+def _check_write_once(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB301: grid dim 0 tiles the output rows disjointly and covers the
+    extent; every *additional* grid dim must be declared — the lane grid
+    (disjoint lane blocks) or a RedGrid (accumulation) — otherwise two grid
+    steps would store the same output element twice."""
+    n_extra = len(kg.grid) - 1
+    declared = (1 if kg.lane_grid is not None else 0) + (
+        1 if kg.red_grid is not None else 0
+    )
+    if kg.lane_grid is not None and kg.red_grid is not None:
+        out.append(PlanViolation(
+            "UB301", kg.name,
+            "lane grid and reduction grid both claim grid dim 1",
+        ))
+    if n_extra != declared:
+        out.append(PlanViolation(
+            "UB301", kg.name,
+            f"grid {kg.grid} has {n_extra} dim(s) beyond the row dim but "
+            f"only {declared} declared (lane_grid/red_grid): undeclared "
+            f"steps would rewrite the same output element",
+            witness=(0,) * len(kg.output.nstage.pure_extents),
+        ))
+    if kg.streamed:
+        covered = kg.grid[0] * kg.bh
+        if covered < kg.e0:
+            out.append(PlanViolation(
+                "UB301", kg.name,
+                f"{kg.grid[0]} x {kg.bh}-row steps cover {covered} of "
+                f"{kg.e0} output rows: rows [{covered}, {kg.e0}) are never "
+                f"written",
+                witness=(covered,),
+            ))
+        if kg.lane_grid is not None:
+            steps1 = kg.grid[1] if len(kg.grid) > 1 else 0
+            lane_cov = steps1 * (kg.bw or 0)
+            if kg.e1 is not None and lane_cov < kg.e1:
+                out.append(PlanViolation(
+                    "UB301", kg.name,
+                    f"lane steps cover {lane_cov} of {kg.e1} lanes",
+                    witness=(0, lane_cov),
+                ))
+    else:
+        if kg.grid != (1,):
+            out.append(PlanViolation(
+                "UB301", kg.name,
+                f"unstreamed kernel must run a single grid step, got "
+                f"{kg.grid}",
+            ))
+
+
+def _derive_shift_sets(kg: KernelGroup) -> Dict[str, Set[int]]:
+    """Re-derive each fused stage's demanded row-shift set straight from
+    the raw access maps (the same reverse-topological propagation the
+    planner runs, but independent of the stored ``shifts`` fields)."""
+    derived: Dict[str, Set[int]] = {kg.stages[-1].name: {0}}
+    for sp in reversed(kg.stages[:-1]):
+        req: Set[int] = set()
+        for cons in kg.stages:
+            if cons.name == sp.name:
+                continue
+            red_ext = dict(
+                zip(cons.nstage.red_dims, cons.nstage.red_extents)
+            )
+            for k, la in enumerate(cons.accesses):
+                if (
+                    cons.load_kind[k] != "scratch"
+                    or cons.scratch_producer[k] != sp.name
+                ):
+                    continue
+                for off in la.axes[0].offsets(red_ext):
+                    for s in derived.get(cons.name, set()):
+                        req.add(off + s)
+        derived[sp.name] = req
+    return derived
+
+
+def _check_eval_accounting(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB302: the planned shift sets match the ones the access maps demand,
+    and the per-stage eval-row counts implied by those derived sets (and
+    the grid) match ``KernelGroup.eval_rows()`` — the metric every
+    recompute-vs-carry decision and test harness trusts."""
+    derived = _derive_shift_sets(kg)
+    reported = kg.eval_rows()
+    steps = kg.grid[0] if kg.streamed else 1
+    lane_steps = kg.lane_steps
+    for sp in kg.stages:
+        want = derived.get(sp.name, set())
+        if set(sp.shifts) != want:
+            out.append(PlanViolation(
+                "UB302", kg.name,
+                f"planned shifts {sorted(sp.shifts)} != demanded "
+                f"{sorted(want)}",
+                stage=sp.name,
+            ))
+            continue
+        if not (kg.streamed and sp.streamed):
+            expect = sp.e0
+        elif sp.line_buffer is not None:
+            expect = steps * kg.bh + (max(want) - min(want))
+        else:
+            expect = (
+                steps * kg.bh * len(want) * lane_steps * len(sp.lane_shifts)
+            )
+        got = reported.get(sp.name)
+        if got != expect:
+            out.append(PlanViolation(
+                "UB302", kg.name,
+                f"eval_rows reports {got}, derived accounting says {expect}",
+                stage=sp.name,
+                witness=(got if got is not None else -1, expect),
+            ))
+
+
+# ---------------------------------------------------------------------------
+# UB4xx — budget audit
+# ---------------------------------------------------------------------------
+
+
+def _resummed_vmem_bytes(kg: KernelGroup) -> int:
+    """Independent re-summation of the kernel's VMEM residency under the
+    declared double-buffering rules: grid-advanced view streams are double
+    buffered, pinned/resident views, rings, and scratch are single, the
+    output panel is pipelined (double)."""
+    total = 0
+    for g in kg.groups:
+        advanced = not g.pinned and (
+            g.blocked_axis is not None
+            or (g.red_axis is not None and not g.resident and len(kg.grid) > 1)
+            or (g.lane_axis is not None and len(kg.grid) > 1)
+        )
+        blk = ELEM_BYTES * math.prod(g.block_shape(kg.bh, kg.bw))
+        total += blk * (2 if advanced else 1)
+    for r in kg.rings:
+        total += r.ring_bytes(kg.bh)
+    for sp, key in kg.scratch_entries():
+        total += ELEM_BYTES * math.prod(sp.scratch_shape(kg.bh, key))
+    total += 2 * kg.output.panel_bytes(kg.bh)
+    return total
+
+
+def _resummed_ws(kg: KernelGroup) -> Tuple[int, int]:
+    """Independent re-derivation of the planner's working-set accounting:
+    ``bytes_per_row`` (everything that scales with the block height: the
+    output panel, blocked view streams, ring bodies, scratch rows) and
+    ``fixed`` (pinned warm-ups, broadcast/resident views, carried halos)."""
+    lane = kg.bw is not None
+    out_ns = kg.output.nstage
+    inner_shape = list(out_ns.pure_extents[1:])
+    if lane and inner_shape:
+        inner_shape[-1] = kg.bw
+    bpr = (math.prod(inner_shape) if inner_shape else 1) * ELEM_BYTES
+    fixed = 0
+    for g in kg.groups:
+        sz = ELEM_BYTES * math.prod(
+            (kg.bw or 1) if j == g.lane_axis else (
+                (g.span[j] if g.resident else g.red_chunk)
+                if j == g.red_axis else g.span[j]
+            )
+            for j in range(g.ndim) if j != g.blocked_axis
+        )
+        if g.pinned:
+            fixed += g.rows0 * sz
+        elif g.blocked_axis is not None:
+            bpr += sz
+        elif g.lane_axis is not None:
+            fixed += 2 * sz
+        else:
+            fixed += sz
+    for r in kg.rings:
+        inner = math.prod(r.span[j] for j in range(r.ndim) if j != r.axis)
+        bpr += inner * ELEM_BYTES
+        fixed += r.halo * inner * ELEM_BYTES
+    scratch_rows = 0
+    for sp in kg.stages[:-1]:
+        sh = list(sp.nstage.pure_extents[1:])
+        if lane and sh:
+            sh[-1] = kg.bw
+        inner = math.prod(sh) if sh else 1
+        if sp.line_buffer is not None:
+            scratch_rows += inner
+            fixed += sp.line_buffer.halo * inner * ELEM_BYTES
+        else:
+            scratch_rows += len(sp.shifts) * len(sp.lane_shifts) * inner
+    bpr += scratch_rows * ELEM_BYTES
+    return bpr, fixed
+
+
+def _check_budget(
+    kg: KernelGroup, budget: int, out: List[PlanViolation]
+) -> None:
+    """UB401/UB402/UB403: re-summed residency vs ``vmem_bytes()``, the
+    double-buffered working set vs the recorded VMEM budget, and the
+    re-derived ``(bytes_per_row, fixed)`` pair vs the stored ``ws``."""
+    resum = _resummed_vmem_bytes(kg)
+    declared = kg.vmem_bytes
+    if resum != declared:
+        out.append(PlanViolation(
+            "UB401", kg.name,
+            f"re-summed VMEM residency {resum} B != declared "
+            f"vmem_bytes {declared} B",
+            witness=(resum, declared),
+        ))
+    bpr, fixed = _resummed_ws(kg)
+    if (bpr, fixed) != tuple(kg.ws):
+        out.append(PlanViolation(
+            "UB403", kg.name,
+            f"re-derived working set (bytes_per_row={bpr}, fixed={fixed}) "
+            f"!= planned ws {tuple(kg.ws)}",
+            witness=(bpr, fixed),
+        ))
+    if kg.streamed:
+        live = 2 * bpr * kg.bh + fixed
+        if live > budget:
+            out.append(PlanViolation(
+                "UB402", kg.name,
+                f"double-buffered working set {live} B exceeds the "
+                f"recorded VMEM budget {budget} B",
+                witness=(live, budget),
+            ))
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def verify_plan(plan: PipelinePlan) -> List[PlanViolation]:
+    """Statically verify every kernel of ``plan``; return all violations
+    (empty list == certified).  Purely a function of the plan IR — no
+    kernel is compiled or executed."""
+    shapes = {
+        n: tuple(b.extents) for n, b in plan.pipeline.buffer_boxes.items()
+    }
+    budget = int(plan.notes.get("vmem_budget", VMEM_BYTES))
+    out: List[PlanViolation] = []
+    for kg in plan.kernels:
+        _check_view_bounds(kg, shapes, out)
+        _check_block_taps(kg, out)
+        _check_scratch_taps(kg, out)
+        _check_masks(kg, out)
+        _check_rings(kg, out)
+        _check_line_buffers(kg, out)
+        _check_red_grid(kg, out)
+        _check_write_once(kg, out)
+        _check_eval_accounting(kg, out)
+        _check_budget(kg, budget, out)
+    return out
+
+
+def assert_plan_verified(plan: PipelinePlan) -> PipelinePlan:
+    """Raise :class:`PlanVerificationError` if ``plan`` has any violation;
+    return the plan unchanged otherwise (chainable)."""
+    violations = verify_plan(plan)
+    if violations:
+        raise PlanVerificationError(violations)
+    return plan

@@ -247,6 +247,41 @@ class Box:
             ivs.append((lo, hi))
         return Box(self.dims, tuple(ivs))
 
+    def intersects(self, other: "Box") -> bool:
+        """Emptiness test on the intersection (Boxes themselves are always
+        non-empty by construction, so emptiness only arises from set
+        operations: an empty intersection here, an empty difference below)."""
+        return self.intersect(other) is not None
+
+    def difference(self, other: "Box") -> List["Box"]:
+        """``self \\ other`` as a list of *disjoint* boxes (possibly empty).
+
+        Standard slab decomposition: walk the dims outermost-first, carving
+        off the below/above slabs on each dim with every earlier dim already
+        clamped to the intersection, so the pieces partition the difference
+        exactly.  An empty list means ``self`` is covered by ``other``."""
+        if self.dims != other.dims:
+            raise ValueError("difference requires identical dim tuples")
+        inter = self.intersect(other)
+        if inter is None:
+            return [self]
+        out: List["Box"] = []
+        clamped: List[Tuple[int, int]] = []
+        for i in range(len(self.dims)):
+            lo, hi = self.intervals[i]
+            ilo, ihi = inter.intervals[i]
+            rest = self.intervals[i + 1:]
+            if lo < ilo:
+                out.append(Box(self.dims, tuple(clamped) + ((lo, ilo - 1),) + rest))
+            if ihi < hi:
+                out.append(Box(self.dims, tuple(clamped) + ((ihi + 1, hi),) + rest))
+            clamped.append((ilo, ihi))
+        return out
+
+    def covers(self, other: "Box") -> bool:
+        """True iff ``other \\ self`` is empty (``other`` ⊆ ``self``)."""
+        return not other.difference(self)
+
     def hull(self, other: "Box") -> "Box":
         if self.dims != other.dims:
             raise ValueError("hull requires identical dim tuples")
@@ -327,6 +362,19 @@ class AffineMap:
         """Per-output-dim exact interval hull of the image of ``box``."""
         names = tuple(out_dims) if out_dims else tuple(f"o{i}" for i in range(self.n_out))
         return Box(names, tuple(e.range_over(box) for e in self.exprs))
+
+    def image(self, box: Box, out_dims: Optional[Sequence[str]] = None) -> Box:
+        """Image of ``box`` under the map, as a Box over the output dims.
+
+        For this restricted model the per-output interval hull *is* the
+        rectangular hull of the true image, and each axis interval is tight
+        (``AffineExpr.range_over`` is exact over a box).  The hull
+        over-approximates the image only when outputs are correlated
+        through shared input dims — which makes it a *sound* basis for
+        bounds checking: ``image ⊆ extents`` proves every accessed element
+        is in bounds, and a witness corner of ``image \\ extents`` is a
+        per-axis-reachable out-of-bounds coordinate."""
+        return self.range_box(box, out_dims)
 
     def matrix(self) -> List[List[int]]:
         """Coefficient matrix, rows = outputs, cols = in_dims (no constant)."""
@@ -459,6 +507,28 @@ def strip_mine_subst(dim: str, factor: int, outer: str, inner: str) -> Dict[str,
 
 
 # ---------------------------------------------------------------------------
+# Set operations (functional spellings of the Box/AffineMap methods; the
+# plan verifier composes these: access-map image over the full grid domain,
+# differenced against the declared extents, empty == proven in bounds)
+# ---------------------------------------------------------------------------
+
+
+def map_image(m: AffineMap, box: Box, out_dims: Optional[Sequence[str]] = None) -> Box:
+    """Image of ``box`` under ``m`` (see :meth:`AffineMap.image`)."""
+    return m.image(box, out_dims)
+
+
+def box_difference(a: Box, b: Box) -> List[Box]:
+    """``a \\ b`` as disjoint boxes; empty list iff ``a`` ⊆ ``b``."""
+    return a.difference(b)
+
+
+def boxes_intersect(a: Box, b: Box) -> bool:
+    """Non-emptiness of ``a ∩ b``."""
+    return a.intersects(b)
+
+
+# ---------------------------------------------------------------------------
 # Dependence analysis
 # ---------------------------------------------------------------------------
 
@@ -574,6 +644,9 @@ __all__ = [
     "AffineMap",
     "Box",
     "Schedule",
+    "map_image",
+    "box_difference",
+    "boxes_intersect",
     "strip_mine_box",
     "strip_mine_subst",
     "dependence_distance",

@@ -2,7 +2,7 @@
 
 Property tests for the carry scheme that replaces recompute fusion:
 
-* **exactly-once** — instrumented eval counter (``codegen.EVAL_TRACE``)
+* **exactly-once** — instrumented eval counter (``codegen.eval_trace()``)
   proving each line-buffered intermediate row is evaluated exactly once per
   pipeline invocation (steady ``bh`` rows per step + a one-time halo
   warm-up), while recompute mode demonstrably evaluates overlap rows
@@ -58,11 +58,8 @@ def _inputs(app, seed=0):
 
 def _traced_run(pp, inputs):
     """Run a pipeline with the eval-trace hook armed; returns the records."""
-    codegen_mod.EVAL_TRACE = trace = []
-    try:
+    with codegen_mod.eval_trace() as trace:
         pp.run(inputs)
-    finally:
-        codegen_mod.EVAL_TRACE = None
     return trace
 
 

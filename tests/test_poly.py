@@ -229,3 +229,53 @@ def test_min_schedule_gap_vectorized_port():
     from repro.core.poly import _min_schedule_gap
 
     assert _min_schedule_gap(s) == 4
+
+
+# ---------------------------------------------------------------------------
+# Set operations behind the plan verifier (image / difference / coverage)
+# ---------------------------------------------------------------------------
+
+
+def test_box_intersects_and_covers():
+    from repro.core.poly import boxes_intersect
+
+    a = Box(("x", "y"), ((0, 9), (0, 9)))
+    b = Box(("x", "y"), ((5, 14), (3, 6)))
+    c = Box(("x", "y"), ((10, 12), (0, 9)))
+    assert a.intersects(b) and boxes_intersect(a, b)
+    assert not a.intersects(c) and not boxes_intersect(a, c)
+    assert a.covers(Box(("x", "y"), ((2, 7), (1, 8))))
+    assert not a.covers(b)
+    assert a.covers(a)
+
+
+def test_box_difference_is_exact_disjoint_partition():
+    a = Box(("x", "y"), ((0, 9), (0, 9)))
+    b = Box(("x", "y"), ((3, 6), (4, 12)))
+    pieces = a.difference(b)
+    pts = lambda box: {tuple(p.values()) for p in box.points()}
+    got = [q for piece in pieces for q in pts(piece)]
+    want = pts(a) - pts(b)
+    assert sorted(got) == sorted(want)       # exact
+    assert len(got) == len(set(got))         # and disjoint (no dupes)
+    assert a.difference(a) == []             # covered -> empty
+    far = Box(("x", "y"), ((20, 25), (0, 9)))
+    assert a.difference(far) == [a]          # disjoint -> untouched
+    with pytest.raises(ValueError):
+        a.difference(Box(("u", "v"), ((0, 1), (0, 1))))
+
+
+def test_map_image_tight_per_axis():
+    from repro.core.poly import box_difference, map_image
+
+    # the planner's streamed-view shape: row = 3*i - 2, col = j + 5
+    m = AffineMap(("i", "j"), (AffineExpr.var("i") * 3 - 2, AffineExpr.var("j") + 5))
+    dom = Box(("i", "j"), ((0, 4), (0, 2)))
+    img = m.image(dom, out_dims=("r", "c"))
+    assert img.intervals == ((-2, 10), (5, 7))
+    assert map_image(m, dom).intervals == img.intervals
+    # bounds-check idiom: image \ extents yields a reachable witness corner
+    buf = Box(("r", "c"), ((0, 10), (0, 7)))
+    escaped = box_difference(img, buf)
+    assert escaped and escaped[0].intervals[0] == (-2, -1)
+    assert box_difference(m.image(Box(("i", "j"), ((1, 4), (0, 2))), ("r", "c")), buf) == []

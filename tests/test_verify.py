@@ -1,0 +1,228 @@
+"""Static plan-verifier suite (marker ``verify``).
+
+Two halves, both purely static (no kernel is ever executed):
+
+* **completeness** — every plan the repo can produce today is certified
+  clean: the full deterministic shape-sweep case list (the same ≥200
+  combinations ``test_shape_sweep`` runs differentially) and every golden
+  demo app verify with zero violations;
+* **soundness** — a seeded plan-mutation suite corrupts certified plans in
+  targeted ways (drop a tail mask, undersize a ring by one row, undeclare a
+  grid reduction, overstate the VMEM budget, shift a view's base, shrink a
+  line buffer, misstate the working set) and asserts each corruption is
+  rejected with its *specific* named rule, so the verifier cannot silently
+  become vacuous.
+
+The rules are named ``UBxyz`` after the unified-buffer property families
+they prove (1xx bounds, 2xx masks/warm-up, 3xx exactly-once, 4xx budget);
+see ``backend/verify.RULES`` and the README rule catalog.
+"""
+
+from conftest import generate_sweep_cases, sweep_case_id
+
+import pytest
+
+from repro.apps.paper_apps import make_app
+from repro.backend import (
+    LineBuffer,
+    PlanVerificationError,
+    RULES,
+    assert_plan_verified,
+    build_pipeline_plan,
+    compile_pipeline,
+    verify_plan,
+)
+from repro.backend.demo import DEMO_APPS, _make
+from repro.backend.golden import check_plan_verified
+
+pytestmark = pytest.mark.verify
+
+SWEEP_CASES = generate_sweep_cases()
+assert len(SWEEP_CASES) >= 200, len(SWEEP_CASES)
+
+
+# ---------------------------------------------------------------------------
+# Completeness: everything the planner emits today verifies clean
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_plans_verify_clean():
+    """Every shape-sweep plan — padded grids, lane blocks, rings, grid
+    reductions, all of it — passes the full rule catalog, statically."""
+    bad = []
+    for i, (name, kw, _, fuse, ckw) in enumerate(SWEEP_CASES):
+        plan = build_pipeline_plan(make_app(name, **kw).pipeline, fuse=fuse, **ckw)
+        violations = verify_plan(plan)
+        if violations:
+            case = sweep_case_id(SWEEP_CASES[i])
+            bad.append((case, [str(v) for v in violations]))
+    assert not bad, bad
+
+
+def test_golden_apps_verify_clean():
+    """Every demo app's default plan is certified, and the golden contract
+    helper the demo calls reports the same zero problems."""
+    for name, kw in DEMO_APPS:
+        plan = build_pipeline_plan(_make(name, kw).pipeline)
+        assert verify_plan(plan) == [], name
+        assert check_plan_verified(name, plan) == [], name
+        assert assert_plan_verified(plan) is plan  # chainable on success
+
+
+def test_rule_catalog_is_documented():
+    vs = verify_plan(build_pipeline_plan(make_app("gaussian", size=13).pipeline))
+    assert vs == []
+    assert RULES and all(k.startswith("UB") and RULES[k] for k in RULES)
+
+
+# ---------------------------------------------------------------------------
+# Soundness: seeded corruptions are rejected with their specific rule
+# ---------------------------------------------------------------------------
+
+
+def _gaussian_plan(**ckw):
+    ckw.setdefault("fuse", True)
+    return build_pipeline_plan(
+        make_app("gaussian", size=13).pipeline, block_h=4, **ckw
+    )
+
+
+def _padded_kernel(plan):
+    for kg in plan.kernels:
+        if kg.padded_grid is not None:
+            return kg
+    raise AssertionError("expected a padded-grid kernel")
+
+
+def _drop_tail_mask(plan):
+    _padded_kernel(plan).padded_grid = None
+
+
+def _undersize_ring(plan):
+    kg = next(kg for kg in plan.kernels if kg.rings)
+    r = kg.rings[0]
+    r.hi -= r.stride0                 # ring one carried row too small
+
+
+def _undeclare_red_grid(plan):
+    kg = next(kg for kg in plan.kernels if kg.red_grid is not None)
+    kg.red_grid = None                # grid dim 1 now revisits outputs
+
+
+def _overstate_budget(plan):
+    plan.notes["vmem_budget"] = 64    # working set can no longer fit
+
+
+def _shift_view_base(plan):
+    kg = plan.kernels[0]
+    kg.groups[0].k0 += 1000           # view escapes the buffer box
+
+
+def _inflate_valid(plan):
+    kg = _padded_kernel(plan)
+    kg.groups[0].valid0 += 3          # mask admits padded garbage rows
+
+
+def _shrink_line_buffer(plan):
+    kg = next(
+        kg for kg in plan.kernels
+        if any(sp.line_buffer is not None for sp in kg.stages)
+    )
+    sp = next(sp for sp in kg.stages if sp.line_buffer is not None)
+    lb = sp.line_buffer
+    sp.line_buffer = LineBuffer(lb.lo, lb.hi - 1)
+
+
+def _misstate_ws(plan):
+    kg = plan.kernels[0]
+    kg.ws = (kg.ws[0] + 16, kg.ws[1])
+
+
+def _unsharp_lb_plan():
+    return build_pipeline_plan(
+        make_app("unsharp", size=15).pipeline,
+        fuse=True, block_h=5, line_buffer=True,
+    )
+
+
+def _matmul_redgrid_plan():
+    return build_pipeline_plan(
+        make_app("matmul", m=24, n=16, k=256).pipeline, red_grid_threshold=64
+    )
+
+
+# (id, plan builder, corruption, rules that MUST fire, exact rule set or
+# None when downstream cascade rules are expected and documented)
+MUTATIONS = [
+    ("drop-tail-mask", _gaussian_plan, _drop_tail_mask,
+     {"UB201"}, {"UB201"}),
+    # shrinking the ring breaks the binding arithmetic (UB102) and the
+    # warm-up coverage (UB202); the working-set audit cascades (UB403)
+    ("undersize-ring",
+     lambda: _gaussian_plan(line_buffer=True, fuse=False),
+     _undersize_ring, {"UB102", "UB202"}, None),
+    ("undeclare-red-grid", _matmul_redgrid_plan, _undeclare_red_grid,
+     {"UB301"}, {"UB301"}),
+    ("overstate-budget", _gaussian_plan, _overstate_budget,
+     {"UB402"}, {"UB402"}),
+    # the shifted view escapes the buffer (UB101) and contradicts its own
+    # binding arithmetic (UB102)
+    ("shift-view-base",
+     lambda: _gaussian_plan(line_buffer=False),
+     _shift_view_base, {"UB101", "UB102"}, {"UB101", "UB102"}),
+    ("inflate-valid", _gaussian_plan, _inflate_valid,
+     {"UB201"}, {"UB201"}),
+    # a one-row-short line buffer breaks carry coverage (UB203); scratch
+    # taps, eval accounting and the ws audit cascade behind it
+    ("shrink-line-buffer", _unsharp_lb_plan, _shrink_line_buffer,
+     {"UB203"}, None),
+    ("misstate-ws", _gaussian_plan, _misstate_ws,
+     {"UB403"}, {"UB403"}),
+]
+
+
+@pytest.mark.parametrize(
+    "plan_builder,corrupt,must,exact",
+    [m[1:] for m in MUTATIONS], ids=[m[0] for m in MUTATIONS],
+)
+def test_mutated_plan_rejected_with_named_rule(plan_builder, corrupt, must, exact):
+    plan = plan_builder()
+    assert verify_plan(plan) == []            # certified before corruption
+    corrupt(plan)
+    violations = verify_plan(plan)
+    fired = {v.rule for v in violations}
+    assert must <= fired, (must, fired, [str(v) for v in violations])
+    if exact is not None:
+        assert fired == exact, (fired, [str(v) for v in violations])
+    for v in violations:
+        assert v.rule in RULES and v.kernel and v.message
+    with pytest.raises(PlanVerificationError) as ei:
+        assert_plan_verified(plan)
+    assert ei.value.violations == violations
+
+
+# ---------------------------------------------------------------------------
+# The compile-time gate
+# ---------------------------------------------------------------------------
+
+
+def test_compile_pipeline_gates_on_verification(monkeypatch):
+    """``compile_pipeline`` refuses to emit from a violating plan by default
+    and only proceeds when the caller explicitly opts out."""
+    import repro.backend.runner as runner_mod
+
+    app = make_app("gaussian", size=13)
+
+    def _broken_plan(pipe, **kw):
+        plan = build_pipeline_plan(pipe, **kw)
+        _misstate_ws(plan)                    # harmless to emission itself
+        return plan
+
+    monkeypatch.setattr(runner_mod, "build_pipeline_plan", _broken_plan)
+    with pytest.raises(PlanVerificationError):
+        compile_pipeline(app.pipeline)        # verify="auto" gates
+    pp = compile_pipeline(app.pipeline, verify=False)
+    assert pp.kernels                         # explicit opt-out still emits
+
+    with pytest.raises(ValueError):
+        compile_pipeline(app.pipeline, verify="always")
