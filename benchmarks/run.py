@@ -29,17 +29,23 @@ def main() -> None:
 
 
 def write_backend_bench(path: str | None = None) -> str:
-    """Benchmark the generated backend kernels and persist BENCH_backend.json."""
+    """Benchmark the generated backend kernels plus the serve bridge and
+    persist BENCH_backend.json (``generated_kernels`` + ``serve`` keys)."""
     import json
 
     from benchmarks.kernel_bench import backend_rows
+    from benchmarks.serve_bench import serve_rows
 
     if path is None:
         path = os.path.join(os.path.dirname(__file__), "..", "BENCH_backend.json")
     rows = backend_rows()
+    srows = serve_rows()
     with open(path, "w") as f:
-        json.dump({"generated_kernels": rows}, f, indent=2)
-    print(f"# wrote {os.path.normpath(path)} ({len(rows)} generated-kernel entries)")
+        json.dump({"generated_kernels": rows, "serve": srows}, f, indent=2)
+    print(
+        f"# wrote {os.path.normpath(path)} ({len(rows)} generated-kernel "
+        f"entries, {len(srows)} serve entries)"
+    )
     return path
 
 

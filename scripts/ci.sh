@@ -6,6 +6,7 @@
 #   bash scripts/ci.sh --backend     # backend (plan/emit) suite standalone
 #   bash scripts/ci.sh --verify     # static plan-verifier gate standalone
 #   bash scripts/ci.sh --bench-smoke # regenerate 2 BENCH rows, check schema
+#   bash scripts/ci.sh --serve       # serve-bridge suite + serve bench schema
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -56,6 +57,16 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     # regenerate the two fast benchmark rows and diff their key sets
     # against BENCH_backend.json — catches stale-schema drift in seconds
     python -m benchmarks.run --bench-smoke
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve" ]]; then
+    # serve-bridge stage: the PipelineServer slot/drain/cache-stats suite,
+    # then the serve benchmark in smoke mode — regenerate cheap images/sec
+    # rows (bit-exactness asserted inside) and diff their key sets against
+    # the "serve" rows persisted in BENCH_backend.json
+    python -m pytest -q -m serve
+    python -m benchmarks.serve_bench --smoke
     exit 0
 fi
 

@@ -36,9 +36,11 @@ from .runner import (
     compile_pipeline,
     max_abs_error,
     pipeline_cache_size,
+    pipeline_cache_stats,
     plan_cache_key,
     reference_arrays,
 )
+from .serve_bridge import PipelineServer, TileRequest
 from .verify import (
     RULES,
     PlanVerificationError,
@@ -72,9 +74,12 @@ __all__ = [
     "plan_cache_key",
     "clear_pipeline_cache",
     "pipeline_cache_size",
+    "pipeline_cache_stats",
     "resolve_mode",
     "max_abs_error",
     "reference_arrays",
+    "PipelineServer",
+    "TileRequest",
     "RULES",
     "PlanViolation",
     "PlanVerificationError",

@@ -172,6 +172,13 @@ class _StageCtx:
             )
             lmask = lanes + self.stepj * self.bw < lg.extent
             mask = lmask if mask is None else jnp.logical_and(mask, lmask)
+        # A ragged batch tail (batch_grid.pad > 0) is deliberately NOT
+        # value-masked here: a where() wrapped around the accumulate path
+        # blocks XLA's multiply-add contraction, so even the all-valid
+        # slots would round differently from the unbatched emission.
+        # Padded slots instead run on zero-filled input tiles (well-defined
+        # values, never NaN deliveries) and the runner slices them off
+        # before anything downstream can observe them.
         return mask
 
     # pre-lane name, kept for introspection/tests
@@ -530,6 +537,11 @@ class CompiledKernel:
         kernels expose only their output stage here.)"""
         if self.kg.fused:
             raise NotImplementedError("element_for covers unfused kernels only")
+        if self.kg.batch_grid is not None:
+            raise NotImplementedError(
+                "element_for addresses per-tile elements; batched kernels "
+                "replicate the per-tile delivery per slot"
+            )
         sp = self.kg.output
         ns = self.nstage
         la = sp.accesses[load_idx]
@@ -611,6 +623,11 @@ class CompiledKernel:
         the ring's coverage for ring-delivered taps."""
         if self.kg.fused:
             raise NotImplementedError("delivered_interval covers unfused kernels only")
+        if self.kg.batch_grid is not None:
+            raise NotImplementedError(
+                "delivered_interval addresses per-tile delivery; batched "
+                "kernels replicate it per slot"
+            )
         rg = self.kg.red_grid
         rho_l = dict(rho)
         if rg is not None and rg.dim in rho_l:
@@ -671,6 +688,13 @@ def emit_kernel(
     out_ctx = ctxs[out_sp.name]
     rg = kg.red_grid
     lane = kg.lane_grid is not None
+    # batch grid: dim 0 sweeps batch slots (slowest-varying), the per-tile
+    # structural dims shift right by bofs.  Because the row step cycles
+    # once per slot, every ``i0 == 0`` warm-up below re-fires at each batch
+    # boundary — the ring-reset rule falls out of the grid ordering
+    bg = kg.batch_grid
+    bofs = kg.bofs
+    n_base = n_grid - bofs
 
     def kernel(*args):
         refs = args[:n_groups]
@@ -683,10 +707,12 @@ def emit_kernel(
         for r_idx, ref in enumerate(args[pos:pos + len(kg.rings)]):
             scratch[(_RING, r_idx)] = ref
         bh = kg.bh
-        i0 = pl.program_id(0)
-        # grid dim 1 is the reduction chunk *or* the lane block, never both
+        i0 = pl.program_id(bofs)
+        # grid dim 1+bofs is the reduction chunk *or* the lane block, never
+        # both (the reduction chunk stays the last — fastest-varying — dim)
         kprog = pl.program_id(n_grid - 1) if rg is not None else 0
-        jprog = pl.program_id(1) if lane else 0
+        jprog = pl.program_id(1 + bofs) if lane else 0
+        stepb = pl.program_id(0) if bg is not None else 0
         for ctx in ctxs.values():
             ctx.step0 = i0
             ctx.stepk = kprog
@@ -698,16 +724,35 @@ def emit_kernel(
         def _guard(cond):
             return cond if kfirst is None else jnp.logical_and(cond, kfirst)
 
+        def _carry_guards(reset: bool):
+            """(rotate, warm-up) conditions for a cross-grid-step ring.
+
+            ``reset=True`` (the only planned value): the bare row step —
+            with the batch dim leading, ``i0`` cycles per slot, so the
+            warm-up re-fires at every batch boundary and no carried rows
+            cross it.  ``reset=False`` exists only for seeded corruption
+            plans: it emits the genuinely wrong global variant (one warm-up
+            on the very first grid step, rotation everywhere else), which
+            carries the previous tile's rows into the next slot — the bug
+            verify rule UB502 rejects statically."""
+            if bg is None or reset:
+                return i0 > 0, i0 == 0
+            return (
+                jnp.logical_or(i0 > 0, stepb > 0),
+                jnp.logical_and(i0 == 0, stepb == 0),
+            )
+
         # input delivery rings: rotate the carried halo, land the new block
         for r_idx, ring in enumerate(kg.rings):
             ref = scratch[(_RING, r_idx)]
             halo = ring.halo
+            rot_c, warm_c = _carry_guards(ring.batch_reset)
 
-            @pl.when(_guard(i0 > 0))
+            @pl.when(_guard(rot_c))
             def _carry(ref=ref, halo=halo):
                 ref[0:halo] = ref[bh:bh + halo]
 
-            @pl.when(_guard(i0 == 0))
+            @pl.when(_guard(warm_c))
             def _warmup(ref=ref, halo=halo, pi=ring.prefix):
                 ref[0:halo] = refs[pi][...]
 
@@ -733,14 +778,15 @@ def emit_kernel(
                 lb = sp.line_buffer
                 halo = lb.halo
                 ref = scratch[(sp.name, None)]
+                rot_c, warm_c = _carry_guards(lb.batch_reset)
 
-                @pl.when(i0 > 0)
+                @pl.when(rot_c)
                 def _rotate(ref=ref, halo=halo):
                     ref[0:halo] = ref[bh:bh + halo]
 
                 pctx = ctx.with_rows(halo)
 
-                @pl.when(i0 == 0)
+                @pl.when(warm_c)
                 def _warm(ref=ref, pctx=pctx, lo=lb.lo, halo=halo):
                     ref[0:halo] = _stage_panel(
                         pctx, refs, scratch, lo, when="step0"
@@ -795,19 +841,35 @@ def emit_kernel(
             ctx.stepj = 0
 
     dim1 = "lane" if lane else "red"
+
+    # under a batch grid every spec gains a leading size-None batch block:
+    # Pallas squeezes the unit batch dim away, so the kernel body sees
+    # refs shaped exactly as in the unbatched plan — the whole batched
+    # emission reduces to program-id offsets plus these spec wrappers
+    def _batch_spec(block_shape, index_map):
+        if bg is None:
+            return pl.BlockSpec(block_shape, index_map)
+        return pl.BlockSpec(
+            (None,) + tuple(block_shape),
+            lambda b, *idx, f=index_map: (b,) + tuple(f(*idx)),
+        )
+
     in_specs = [
-        pl.BlockSpec(g.block_shape(kg.bh, kg.bw), g.index_map(n_grid, dim1))
+        _batch_spec(g.block_shape(kg.bh, kg.bw), g.index_map(n_base, dim1))
         for g in kg.groups
     ]
     out_nd = len(out_ctx.block_shape)
-    if n_grid == 1:
+    if n_base == 1:
         out_index = lambda i, nd=out_nd: (i,) + (0,) * (nd - 1)
     elif lane:
         out_index = lambda i, j, nd=out_nd: (i,) + (0,) * (nd - 2) + (j,)
     else:
         out_index = lambda i, k, nd=out_nd: (i,) + (0,) * (nd - 1)
-    out_spec = pl.BlockSpec(out_ctx.block_shape, out_index)
-    out_shape = jax.ShapeDtypeStruct(tuple(out_sp.nstage.pure_extents), jnp.float32)
+    out_spec = _batch_spec(out_ctx.block_shape, out_index)
+    out_extents = tuple(out_sp.nstage.pure_extents)
+    if bg is not None:
+        out_extents = (bg.steps,) + out_extents
+    out_shape = jax.ShapeDtypeStruct(out_extents, jnp.float32)
     call_kwargs: Dict[str, object] = {}
     if scratch_entries or kg.rings:
         call_kwargs["scratch_shapes"] = [
@@ -828,11 +890,15 @@ def emit_kernel(
             buffer_order.append(g.buffer)
     slot_of = {b: i for i, b in enumerate(buffer_order)}
 
+    # batched arrays are stacked (capacity, *buffer); the per-tile view
+    # slices apply past the untouched batch dim
+    lead = (slice(None),) if bg is not None else ()
+
     @jax.jit
     def _invoke(arrays):
         views = [
             jnp.asarray(arrays[slot_of[g.buffer]], jnp.float32)[
-                g.view_slices(e0, e1)
+                lead + g.view_slices(e0, e1)
             ]
             for g in kg.groups
         ]

@@ -7,7 +7,10 @@
 default interpret runs everywhere, auto upgrades to real Mosaic kernels on
 a TPU host.  The table's ``run_us_warm`` column is the second invocation of
 the same compiled pipeline — the emitted kernels are jit-bound closures, so
-warm calls skip re-tracing entirely (the plan/emit/bind split).
+warm calls skip re-tracing entirely (the plan/emit/bind split).  Compiles
+go through the plan-keyed pipeline cache: an identical re-compile per app
+must hit (a miss is a MISMATCH note), and a stderr footer reports the
+process-wide cache counters (``pipeline_cache_stats``).
 
 For each app: lower -> plan (fusion / grid reductions / scheduler block
 heights) -> generated Pallas kernels (interpret mode on CPU), run on random
@@ -70,9 +73,15 @@ def run_demo(
     app_names=None, smoke: bool = False, fuse: bool = True,
     mode: str = "interpret", verify: bool = False,
 ) -> List[Dict]:
-    from repro.backend import build_pipeline_plan, compile_pipeline, max_abs_error
+    from repro.backend import (
+        build_pipeline_plan,
+        clear_pipeline_cache,
+        compile_pipeline,
+        max_abs_error,
+    )
     from repro.backend.golden import check_plan_verified
 
+    clear_pipeline_cache()
     wanted = set(app_names) if app_names else None
     if wanted is not None:
         known = {name for name, _ in DEMO_APPS}
@@ -99,7 +108,9 @@ def run_demo(
         # verify=False here: the golden certification contract below reports
         # violations as plan_notes (a MISMATCH row + exit 1) instead of a
         # PlanVerificationError traceback mid-table
-        pp = compile_pipeline(app.pipeline, fuse=fuse, mode=mode, verify=False)
+        pp = compile_pipeline(
+            app.pipeline, fuse=fuse, mode=mode, verify=False, cache=True
+        )
         compile_us = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
         verify_notes = check_plan_verified(name, pp.plan)
@@ -121,6 +132,13 @@ def run_demo(
         warm_us = (time.perf_counter() - t0) * 1e6
 
         plan_notes: List[str] = list(verify_notes)
+        # cache observability smoke: an identical re-compile must hit the
+        # plan-keyed pipeline cache (counted in the stats line main prints)
+        again = compile_pipeline(
+            app.pipeline, fuse=fuse, mode=mode, verify=False, cache=True
+        )
+        if again is not pp:
+            plan_notes.append("identical re-compile missed the pipeline cache")
         if name == "matmul_bigk":
             # reference-interpreter tables are too slow at K=2048; the dense
             # f64 matmul is the same golden value
@@ -223,6 +241,14 @@ def main(argv=None) -> int:
         )
         for note in r["plan_notes"]:
             print(f"#   {r['app']}: {note}", file=sys.stderr)
+    from repro.backend import pipeline_cache_stats
+
+    cs = pipeline_cache_stats()
+    print(
+        f"# pipeline cache: {cs['misses']} cold compiles, {cs['hits']} hits, "
+        f"{cs['evictions']} evictions, {cs['entries']} entries",
+        file=sys.stderr,
+    )
     if args.verify:
         plan_us = sum(r["plan_us"] for r in rows)
         verify_us = sum(r["verify_us"] for r in rows)

@@ -126,10 +126,19 @@ class LineBuffer:
     intermediate row is evaluated exactly once; step 0 additionally fills
     the ``halo`` warm-up rows (the first rows of the shift-``lo`` panel).
     Consumers tap the ring at ``[shift - lo, shift - lo + bh)`` exactly
-    where they used to tap the per-shift panel."""
+    where they used to tap the per-shift panel.
+
+    ``batch_reset`` governs behaviour under a batch grid (the leading grid
+    dim sweeping independent tiles): the warm-up must re-fire at the first
+    row step of *every* batch element, because the rows carried out of the
+    previous tile belong to a different image.  ``False`` is never planned —
+    it exists so seeded corruption tests can materialize the
+    carried-across-a-batch-boundary bug and prove the verifier rejects it
+    (rule UB502)."""
 
     lo: int                           # min consumer-demanded row shift
     hi: int                           # max consumer-demanded row shift
+    batch_reset: bool = True          # re-warm at every batch boundary
 
     @property
     def halo(self) -> int:
@@ -161,6 +170,9 @@ class RingStream:
     base: List[int]                   # hull base per axis (axis: ``lo``)
     span: List[int]                   # hull span per non-ring axis
     key: Tuple = ()                   # delivery-class key (for plan retries)
+    batch_reset: bool = True          # re-warm at every batch boundary
+                                      # (False only via seeded corruption;
+                                      # rejected by verify rule UB502)
 
     @property
     def halo(self) -> int:
@@ -450,6 +462,14 @@ class KernelGroup:
     # working-set accounting the block height was selected under, for the
     # planner's lane-engagement / budget checks: (bytes_per_row, fixed)
     ws: Tuple[int, int] = (0, 0)
+    # batch grid: a leading grid dim sweeping ``batch_grid.extent``
+    # independent tiles (``batch_grid.steps`` slots; extent < steps is a
+    # ragged final batch whose padded slots are masked to zero).  The
+    # per-tile structure — views, rings, scratch, block shapes — is reused
+    # unchanged per batch step: rings and line-buffer warm-ups *reset* at
+    # batch boundaries (re-fire their step-0 warm-up), they are not
+    # re-allocated, so the VMEM footprint is batch-invariant
+    batch_grid: Optional[PaddedGrid] = None
 
     @property
     def output(self) -> StagePlan:
@@ -501,14 +521,35 @@ class KernelGroup:
         return None if self.lane_grid is None else self.lane_grid.extent
 
     @property
+    def batched(self) -> bool:
+        return self.batch_grid is not None
+
+    @property
+    def bofs(self) -> int:
+        """Grid-dim offset of the row axis: 1 when a leading batch dim is
+        present, else 0.  Every structural grid index (row panels, lane
+        blocks, reduction chunks) shifts right by this amount."""
+        return 1 if self.batch_grid is not None else 0
+
+    @property
+    def batch_steps(self) -> int:
+        """Batch slots swept per invocation (1 when not batched)."""
+        return self.batch_grid.steps if self.batch_grid is not None else 1
+
+    @property
+    def base_grid(self) -> Tuple[int, ...]:
+        """The per-tile grid (batch dim stripped)."""
+        return self.grid[self.bofs:]
+
+    @property
     def steps0(self) -> int:
         """Grid extent along the row dim (1 for unstreamed kernels)."""
-        return self.grid[0]
+        return self.grid[self.bofs]
 
     @property
     def lane_steps(self) -> int:
         """Grid extent along the lane dim (1 when not lane-blocked)."""
-        return self.grid[1] if self.lane_grid is not None else 1
+        return self.grid[self.bofs + 1] if self.lane_grid is not None else 1
 
     def required_extents(self) -> Dict[str, Tuple[int, ...]]:
         """Per input buffer, the minimal extent along every axis that the
@@ -534,7 +575,12 @@ class KernelGroup:
         """Check the arrays backing this kernel's view streams against the
         plan's declared extents, raising a clear error naming the buffer and
         axis instead of letting a mis-shaped array surface as a cryptic
-        BlockSpec/slice failure inside ``pallas_call``."""
+        BlockSpec/slice failure inside ``pallas_call``.
+
+        Under a batch grid every backing array carries one extra leading
+        dim of exactly ``batch_grid.steps`` (the slot capacity — the runner
+        pads ragged batches up to it); the per-tile extents follow."""
+        bg = self.batch_grid
         for buf, need in self.required_extents().items():
             if buf not in buffers:
                 raise KeyError(
@@ -542,7 +588,16 @@ class KernelGroup:
                     f"(needs extents >= {need})"
                 )
             got = tuple(getattr(buffers[buf], "shape", ()))
-            if len(got) != len(need):
+            if bg is not None:
+                if len(got) != len(need) + 1 or got[0] != bg.steps:
+                    raise ValueError(
+                        f"kernel {self.name!r}: buffer {buf!r} has shape "
+                        f"{got}, but the batched plan needs a leading batch "
+                        f"dim of exactly {bg.steps} slots followed by "
+                        f"per-tile extents >= {need}"
+                    )
+                got = got[1:]
+            elif len(got) != len(need):
                 raise ValueError(
                     f"kernel {self.name!r}: buffer {buf!r} has rank {len(got)} "
                     f"(shape {got}), but the plan's views need rank {len(need)} "
@@ -588,17 +643,24 @@ class KernelGroup:
         ``halo``-row warm-up.  Under lane blocking a "row" is one panel row
         per lane block: each row is evaluated once per lane step and lane
         shift (partial-width evaluations count as rows, so the metric stays
-        comparable across lane-blocked and full-width plans of equal work)."""
-        steps = self.grid[0] if self.streamed else 1
-        lane_steps = self.grid[1] if self.lane_grid is not None else 1
+        comparable across lane-blocked and full-width plans of equal work).
+
+        A batch grid multiplies everything by the batch-slot count: each
+        slot re-runs the full per-tile sweep, including the line-buffer
+        warm-up (the per-batch exactly-once property — rule UB503 — is
+        exactly this ``batch_steps * (steps * bh + halo)`` shape, *not* a
+        single globally amortized warm-up)."""
+        steps = self.steps0 if self.streamed else 1
+        lane_steps = self.lane_steps
+        bsteps = self.batch_steps
         out: Dict[str, int] = {}
         for sp in self.stages:
             if not (self.streamed and sp.streamed):
-                out[sp.name] = sp.e0
+                out[sp.name] = bsteps * sp.e0
             elif sp.line_buffer is not None:
-                out[sp.name] = steps * self.bh + sp.line_buffer.halo
+                out[sp.name] = bsteps * (steps * self.bh + sp.line_buffer.halo)
             else:
-                out[sp.name] = (
+                out[sp.name] = bsteps * (
                     steps * self.bh * len(sp.shifts)
                     * lane_steps * len(sp.lane_shifts)
                 )
@@ -609,18 +671,26 @@ class KernelGroup:
         return self.ub_plan().vmem_bytes
 
     def ub_plan(self) -> KernelPlan:
-        """The kernel's unified-buffer structure, for introspection."""
+        """The kernel's unified-buffer structure, for introspection.
+
+        Stream ``axes`` name the grid dims a stream's block index advances
+        with; under a batch grid the structural dims shift right by
+        ``bofs``.  The batch dim itself is deliberately *not* listed — the
+        per-tile stream structure (and hence the VMEM footprint and the
+        double-buffering decisions) is batch-invariant, which is the point
+        of the batch grid."""
+        bofs = self.bofs
         streams = []
         for k, g in enumerate(self.groups):
             axes: Tuple[int, ...] = ()
             if not g.pinned:
                 axes = tuple(
-                    ax for ax, cond in (
+                    ax + bofs for ax, cond in (
                         (0, g.blocked_axis is not None),
                         (1, g.red_axis is not None and not g.resident),
                         (1, g.lane_axis is not None),
                     )
-                    if cond and ax < len(self.grid)
+                    if cond and ax < len(self.base_grid)
                 )
             blk = g.block_shape(self.bh, self.bw)
             streams.append(StreamPlan(
@@ -644,7 +714,7 @@ class KernelGroup:
             ))
         out = self.output
         streams.append(StreamPlan(
-            "out", out.panel_shape(self.bh), (0,) if out.streamed else (),
+            "out", out.panel_shape(self.bh), (bofs,) if out.streamed else (),
             out.panel_bytes(self.bh),
         ))
         notes = {
@@ -664,6 +734,9 @@ class KernelGroup:
             lg = self.lane_grid
             notes["lane_grid"] = (lg.extent, lg.block, lg.steps)
             notes["bw"] = self.bw
+        if self.batch_grid is not None:
+            bg = self.batch_grid
+            notes["batch_grid"] = (bg.extent, bg.block, bg.steps)
         if self.line_buffered:
             notes["linebuf"] = {
                 sp.name: (sp.line_buffer.lo, sp.line_buffer.hi)
@@ -688,9 +761,15 @@ class KernelGroup:
         of once per tap.  Under a lane grid, dim 1 varies fastest: a
         row-blocked lane-less stream's block index is constant across the
         inner lane sweep, so Pallas re-fetches it only ``steps0`` times,
-        while lane-blocked streams fetch once per (row, lane) step."""
-        steps0 = self.grid[0]
-        dim1_steps = self.grid[1] if len(self.grid) > 1 else 1
+        while lane-blocked streams fetch once per (row, lane) step.
+
+        A batch grid multiplies the whole per-tile traffic by the slot
+        count: every input stream (pinned warm-up views included) carries a
+        batch index, so its block changes — and is re-fetched — once per
+        batch slot, and each slot stores its own output tile."""
+        base = self.base_grid
+        steps0 = base[0]
+        dim1_steps = base[1] if len(base) > 1 else 1
         total = ELEM_BYTES * math.prod(self.output.nstage.pure_extents)
         for g in self.groups:
             blk = ELEM_BYTES * math.prod(g.block_shape(self.bh, self.bw))
@@ -713,7 +792,7 @@ class KernelGroup:
             else:
                 deliveries = 1
             total += blk * deliveries
-        return total
+        return self.batch_steps * total
 
     def aligned_blocks(self) -> Dict[str, Tuple[int, ...]]:
         """Compiled-mode (8, 128)-tile-aligned block shapes per stream, the
@@ -770,6 +849,17 @@ class PipelinePlan:
             kg.name: (kg.bw, kg.lane_grid.steps)
             for kg in self.kernels if kg.lane_grid is not None
         }
+
+    @property
+    def batch(self) -> Optional[int]:
+        """Valid tiles per invocation, or None for an unbatched plan."""
+        return self.notes.get("batch")
+
+    @property
+    def batch_capacity(self) -> Optional[int]:
+        """Batch slots per invocation (>= ``batch``; the runner zero-pads
+        the ragged tail), or None for an unbatched plan."""
+        return self.notes.get("batch_capacity")
 
     def eval_rows(self) -> Dict[str, int]:
         """Rows evaluated per stage per pipeline invocation (recompute
@@ -1689,7 +1779,30 @@ def build_pipeline_plan(
     align_tpu: bool = False,
     line_buffer: object = "auto",
     red_resident: bool = True,
+    batch: Optional[int] = None,
+    batch_capacity: Optional[int] = None,
 ) -> PipelinePlan:
+    """``batch=N`` plans a leading grid dim sweeping N independent tiles
+    through one ``pallas_call`` per kernel group: every input buffer (and
+    every kernel output) gains a leading batch dim, the per-tile plan —
+    views, rings, scratch, block heights — is reused unchanged per batch
+    step, and ring / line-buffer warm-ups re-fire at each batch boundary
+    (reset, not re-allocate: the VMEM footprint is batch-invariant).
+    ``batch_capacity`` (default ``batch``) sizes the grid in *slots*: a
+    plan with ``batch < batch_capacity`` is a ragged final batch whose
+    padded slots are masked to exact zeros, so one capacity-sized compile
+    serves any occupancy up to it."""
+    if batch_capacity is not None and batch is None:
+        raise ValueError("batch_capacity requires batch")
+    if batch is not None:
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1: {batch}")
+        if batch_capacity is None:
+            batch_capacity = batch
+        elif batch_capacity < batch:
+            raise ValueError(
+                f"batch_capacity {batch_capacity} < batch {batch}"
+            )
     nstages = normalize_pipeline(pipe)
     shapes = {n: tuple(b.extents) for n, b in pipe.buffer_boxes.items()}
     infos = []
@@ -1756,15 +1869,26 @@ def build_pipeline_plan(
         if assign[name] != name or name not in members:
             continue
         kernels.append(_build_kernel_group(group_infos(name), shapes, **build_kw))
-    return PipelinePlan(
-        pipe, nstages, kernels,
-        notes={
-            "fuse": fuse, "grid_reduction": grid_reduction,
-            "cost_model": cost_model, "vmem_budget": vmem_budget,
-            "align_tpu": align_tpu, "line_buffer": line_buffer,
-            "red_resident": red_resident, "block_w": block_w,
-        },
-    )
+    notes = {
+        "fuse": fuse, "grid_reduction": grid_reduction,
+        "cost_model": cost_model, "vmem_budget": vmem_budget,
+        "align_tpu": align_tpu, "line_buffer": line_buffer,
+        "red_resident": red_resident, "block_w": block_w,
+    }
+    if batch is not None:
+        # the batch dim is a post-processing step over finished per-tile
+        # kernel groups: fusion trials, block-height pricing, and VMEM
+        # budgeting all ran on the per-tile problem, and the batch axis is
+        # prepended as the slowest-varying grid dim — so the inner row
+        # step cycles once per slot and every step-0 warm-up re-fires per
+        # batch element by construction
+        bg = PaddedGrid(extent=batch, block=1, steps=batch_capacity)
+        for kg in kernels:
+            kg.batch_grid = bg
+            kg.grid = (batch_capacity,) + kg.grid
+        notes["batch"] = batch
+        notes["batch_capacity"] = batch_capacity
+    return PipelinePlan(pipe, nstages, kernels, notes=notes)
 
 
 __all__ = [

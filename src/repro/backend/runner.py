@@ -80,7 +80,16 @@ class PallasPipeline:
         (and again per kernel by ``KernelGroup.validate_buffers``), so a
         mis-shaped array raises a clear error naming the buffer and the
         expected box instead of a cryptic BlockSpec/slice failure inside
-        ``pallas_call``."""
+        ``pallas_call``.
+
+        A batched pipeline (``compile_pipeline(..., batch=N)``) takes every
+        input with one extra leading dim of exactly ``N`` independent
+        tiles.  When the plan's slot capacity exceeds ``N`` (a ragged final
+        batch) the inputs are zero-padded up to capacity before the sweep
+        and every returned buffer is sliced back to the ``N`` valid tiles —
+        callers never see the padded slots."""
+        batch = self.plan.notes.get("batch")
+        cap = self.plan.notes.get("batch_capacity", batch)
         buffers: Dict[str, jax.Array] = {}
         for name in self.pipeline.inputs:
             if name not in inputs:
@@ -90,20 +99,30 @@ class PallasPipeline:
                 )
             arr = jnp.asarray(inputs[name], jnp.float32)
             want = tuple(self.pipeline.buffer_boxes[name].extents)
+            if batch is not None:
+                want = (batch,) + want
             if arr.ndim != len(want):
                 raise ValueError(
                     f"input {name!r}: rank {arr.ndim} (shape "
                     f"{tuple(arr.shape)}) != plan's declared rank "
-                    f"{len(want)} (extents {want})"
+                    f"{len(want)} (extents {want}"
+                    + (f", leading dim = batch {batch})" if batch else ")")
                 )
             if tuple(arr.shape) != want:
                 raise ValueError(
                     f"input {name!r}: shape {tuple(arr.shape)} != the "
                     f"plan's declared extents {want}"
+                    + (f" (leading dim = batch {batch})" if batch else "")
+                )
+            if batch is not None and cap > batch:
+                arr = jnp.concatenate(
+                    [arr, jnp.zeros((cap - batch,) + want[1:], jnp.float32)]
                 )
             buffers[name] = arr
         for ck in self.kernels:
             buffers[ck.name] = ck(buffers)
+        if batch is not None and cap > batch:
+            buffers = {name: arr[:batch] for name, arr in buffers.items()}
         return buffers
 
     def __call__(self, inputs: Mapping[str, np.ndarray]) -> jax.Array:
@@ -116,6 +135,11 @@ class PallasPipeline:
 
 _PIPELINE_CACHE: "OrderedDict[str, PallasPipeline]" = OrderedDict()
 _PIPELINE_CACHE_MAX = 128
+# cache observability: cumulative counters over every ``cache=True``
+# compile (uncached compiles are not cache traffic and are not counted).
+# ``clear_pipeline_cache`` resets them together with the entries, so a
+# bench/serve phase that clears the cache starts its stats from zero.
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def plan_cache_key(pipe: Pipeline, mode: str, plan_kwargs: Mapping) -> str:
@@ -147,10 +171,21 @@ def plan_cache_key(pipe: Pipeline, mode: str, plan_kwargs: Mapping) -> str:
 
 def clear_pipeline_cache() -> None:
     _PIPELINE_CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
 
 def pipeline_cache_size() -> int:
     return len(_PIPELINE_CACHE)
+
+
+def pipeline_cache_stats() -> Dict[str, int]:
+    """Hit/miss/eviction counters of the plan-keyed pipeline cache since
+    the last :func:`clear_pipeline_cache`, plus the live entry count.  A
+    miss is a ``cache=True`` compile that had to plan+emit; an eviction is
+    an LRU drop past the ``_PIPELINE_CACHE_MAX``-entry capacity — under
+    mixed serve traffic ``hits / (hits + misses)`` is the
+    compile-amortization rate the batch bridge depends on."""
+    return {**_CACHE_STATS, "entries": len(_PIPELINE_CACHE)}
 
 
 def compile_pipeline(
@@ -170,6 +205,8 @@ def compile_pipeline(
     align_tpu: bool = False,
     line_buffer: object = "auto",
     red_resident: bool = True,
+    batch: Optional[int] = None,
+    batch_capacity: Optional[int] = None,
     verify: object = "auto",
 ) -> PallasPipeline:
     """``line_buffer`` picks the recompute-vs-carry mode for fused
@@ -187,6 +224,13 @@ def compile_pipeline(
     ``cache=True`` consults the plan-keyed pipeline cache: a hit returns
     the previously compiled :class:`PallasPipeline` (its jit-warmed kernels
     included) without re-planning or re-emitting.
+
+    ``batch=N`` plans a leading batch grid dim sweeping N independent
+    tiles per invocation (``batch_capacity`` sizes the grid in slots for
+    ragged final batches; see ``plan.build_pipeline_plan``).  Both are
+    plan kwargs and therefore part of the cache key: a batched and an
+    unbatched compile of the same pipeline — or two different capacities —
+    can never collide on one cache entry.
 
     ``verify`` gates static plan certification (``backend.verify``): every
     freshly built plan is checked before emission and a violation raises
@@ -211,6 +255,8 @@ def compile_pipeline(
         align_tpu=align_tpu,
         line_buffer=line_buffer,
         red_resident=red_resident,
+        batch=batch,
+        batch_capacity=batch_capacity,
     )
     if verify not in (True, False, "auto"):
         raise ValueError(f"verify must be True, False, or 'auto': {verify!r}")
@@ -219,10 +265,12 @@ def compile_pipeline(
         key = plan_cache_key(pipe, mode, plan_kwargs)
         hit = _PIPELINE_CACHE.get(key)
         if hit is not None:
+            _CACHE_STATS["hits"] += 1
             _PIPELINE_CACHE.move_to_end(key)
             if verify is True:
                 assert_plan_verified(hit.plan)
             return hit
+        _CACHE_STATS["misses"] += 1
     plan = build_pipeline_plan(pipe, **plan_kwargs)
     if verify is not False:
         assert_plan_verified(plan)
@@ -232,6 +280,7 @@ def compile_pipeline(
         _PIPELINE_CACHE[key] = pp
         while len(_PIPELINE_CACHE) > _PIPELINE_CACHE_MAX:
             _PIPELINE_CACHE.popitem(last=False)
+            _CACHE_STATS["evictions"] += 1
     return pp
 
 
@@ -259,9 +308,26 @@ def max_abs_error(
     """Per-kernel max |generated - reference| over every buffer the pipeline
     materializes (differential validation; fused intermediates have no HBM
     realization to compare).  Pass ``got`` (the result of ``pp.run``) to
-    reuse already-computed buffers instead of re-executing the pipeline."""
+    reuse already-computed buffers instead of re-executing the pipeline.
+
+    For a batched pipeline the reference interpreter (which is per-tile)
+    runs once per batch slot and the reported error is the max over
+    slots — so a ring carried across a batch boundary, which corrupts
+    every slot after the first, cannot hide behind slot 0 being right."""
     if got is None:
         got = pp.run(inputs)
+    batch = pp.plan.notes.get("batch")
+    if batch is not None:
+        errs = {ck.name: 0.0 for ck in pp.kernels}
+        for b in range(batch):
+            tile_in = {n: np.asarray(a)[b] for n, a in inputs.items()}
+            want = reference_arrays(pp.pipeline, tile_in)
+            for ck in pp.kernels:
+                w = want[ck.name]
+                if w.size:
+                    e = float(np.max(np.abs(np.asarray(got[ck.name][b]) - w)))
+                    errs[ck.name] = max(errs[ck.name], e)
+        return errs
     want = reference_arrays(pp.pipeline, inputs)
     return {
         ck.name: float(np.max(np.abs(np.asarray(got[ck.name]) - want[ck.name])))
@@ -277,6 +343,7 @@ __all__ = [
     "plan_cache_key",
     "clear_pipeline_cache",
     "pipeline_cache_size",
+    "pipeline_cache_stats",
     "reference_arrays",
     "max_abs_error",
 ]

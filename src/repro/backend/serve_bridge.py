@@ -1,0 +1,168 @@
+"""Continuous-batching serve bridge for compiled batched pipelines.
+
+``serve.engine.ServeEngine`` serves token-decode requests through a fixed
+number of batch slots: requests pack into slots, the ragged tail is padded
+with filler requests whose results are discarded.  This module applies the
+same slot discipline to *pipeline tiles*: a :class:`PipelineServer` owns one
+pipeline compiled at full slot capacity (``batch = batch_capacity =
+batch_slots``, so every service step reuses the same cached kernels — the
+batch kwargs are part of the plan cache key), queues :class:`TileRequest`\\ s,
+and each ``step()`` packs up to ``batch_slots`` pending tiles into a single
+batched dispatch: one ``pallas_call`` grid sweep per kernel group instead of
+one call per tile.
+
+Raggedness is handled by the serve layer, not the kernel: a short final
+batch is padded to capacity with zero tiles via ``serve.engine.pad_to_slots``
+and the filler slots' outputs are discarded, which keeps the valid slots'
+emission identical to the unbatched path (see ``_StageCtx.panel_mask`` on
+why an in-kernel batch mask would break bit-exactness).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Mapping, Optional, Union
+
+import numpy as np
+
+from repro.frontend.lower import Pipeline
+from repro.serve.engine import pad_to_slots
+
+from .runner import PallasPipeline, compile_pipeline, pipeline_cache_stats
+
+
+@dataclass
+class TileRequest:
+    """One tile of work: per-tile input arrays in, per-tile outputs out."""
+
+    inputs: Dict[str, np.ndarray]
+    outputs: Optional[Dict[str, np.ndarray]] = None
+    done: bool = False
+    filler: bool = False              # capacity padding; outputs discarded
+
+
+class PipelineServer:
+    """Fixed-slot batched pipeline execution (continuous-batching lite).
+
+    Submit tiles with :meth:`submit`; :meth:`step` services one batch —
+    up to ``batch_slots`` pending requests in a single batched pipeline
+    dispatch — and :meth:`run` drains the queue.  Completed requests carry
+    ``outputs`` (one array per pipeline kernel) and ``done=True``.
+    """
+
+    def __init__(
+        self,
+        pipe: Pipeline,
+        batch_slots: int,
+        **compile_kwargs,
+    ) -> None:
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        self.pipe = pipe
+        self.batch_slots = batch_slots
+        # full-capacity plan: ragged service steps pad to capacity instead
+        # of recompiling at a smaller batch, so the warm path is one cache
+        # hit per dispatch
+        compile_kwargs.setdefault("cache", True)
+        self.pipeline: PallasPipeline = compile_pipeline(
+            pipe,
+            batch=batch_slots,
+            batch_capacity=batch_slots,
+            **compile_kwargs,
+        )
+        self.pending: Deque[TileRequest] = deque()
+        self.served = 0
+        self.dispatches = 0
+
+    # -- request lifecycle --------------------------------------------------
+
+    def _tile_shape(self, name: str) -> tuple:
+        return tuple(self.pipe.buffer_boxes[name].extents)
+
+    def _zero_request(self) -> TileRequest:
+        return TileRequest(
+            inputs={
+                n: np.zeros(self._tile_shape(n), np.float32)
+                for n in self.pipe.inputs
+            },
+            filler=True,
+        )
+
+    def submit(
+        self, request: Union[TileRequest, Mapping[str, np.ndarray]]
+    ) -> TileRequest:
+        """Queue one tile; returns the (possibly wrapped) request object."""
+        req = (
+            request
+            if isinstance(request, TileRequest)
+            else TileRequest(inputs=dict(request))
+        )
+        for n in self.pipe.inputs:
+            if n not in req.inputs:
+                raise KeyError(
+                    f"request is missing input {n!r}; the pipeline requires "
+                    f"{sorted(self.pipe.inputs)}"
+                )
+            got = tuple(np.shape(req.inputs[n]))
+            want = self._tile_shape(n)
+            if got != want:
+                raise ValueError(
+                    f"request input {n!r}: tile shape {got} != declared "
+                    f"extent {want}"
+                )
+        self.pending.append(req)
+        return req
+
+    def step(self) -> List[TileRequest]:
+        """Service one batch; returns the requests completed this step
+        (empty when the queue is empty)."""
+        k = min(self.batch_slots, len(self.pending))
+        if k == 0:
+            return []
+        reqs = [self.pending.popleft() for _ in range(k)]
+        slots = pad_to_slots(reqs, self.batch_slots, self._zero_request)
+        ins = {
+            n: np.stack(
+                [np.asarray(r.inputs[n], np.float32) for r in slots]
+            )
+            for n in self.pipe.inputs
+        }
+        bufs = self.pipeline.run(ins)
+        # one host conversion per kernel per dispatch — slicing per slot on
+        # the jax array would pay a separate device sync per tile
+        outs = {
+            ck.name: np.asarray(bufs[ck.name])
+            for ck in self.pipeline.kernels
+        }
+        for b, req in enumerate(reqs):  # filler slots are never read back
+            req.outputs = {name: a[b] for name, a in outs.items()}
+            req.done = True
+        self.served += k
+        self.dispatches += 1
+        return reqs
+
+    def run(
+        self, requests: List[Union[TileRequest, Mapping[str, np.ndarray]]]
+    ) -> List[TileRequest]:
+        """Submit ``requests`` and drain the queue; returns them completed,
+        in submission order."""
+        out = [self.submit(r) for r in requests]
+        while self.pending:
+            self.step()
+        return out
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        """Serving counters plus the process-wide pipeline-cache stats
+        (hits/misses/evictions/entries) the warm path depends on."""
+        return {
+            "served": self.served,
+            "dispatches": self.dispatches,
+            "batch_slots": self.batch_slots,
+            **pipeline_cache_stats(),
+        }
+
+
+__all__ = ["TileRequest", "PipelineServer"]

@@ -36,6 +36,14 @@ scratch, and output bytes against ``vmem_bytes()``, and of the planner's
 working-set accounting ``(bytes_per_row, fixed)`` against ``KernelGroup.ws``
 and the recorded VMEM budget.
 
+``UB5xx`` — **batch-step isolation**.  Under a batch grid (a leading grid
+dim sweeping independent tiles), the batch declaration is consistent with
+the grid and the plan notes (UB501), no carried ring or line-buffer state
+crosses a batch boundary — every carry structure must reset (re-fire its
+warm-up) at each batch step (UB502) — and the eval accounting is exactly
+once *per batch element*: each slot evaluates the full per-tile row count
+including its own warm-up, never a single globally amortized one (UB503).
+
 Every violation carries the rule id, the offending kernel/stage/view, and a
 concrete witness point (a buffer coordinate, a tap row, or the offending
 byte counts).  ``verify_plan`` returns all violations; callers that want a
@@ -86,6 +94,9 @@ RULES: Dict[str, str] = {
     "UB401": "VMEM re-summation: stream/ring/scratch bytes match vmem_bytes()",
     "UB402": "VMEM budget: the working set fits the recorded budget",
     "UB403": "working-set drift: re-derived (bytes_per_row, fixed) match ws",
+    "UB501": "batch grid: leading dim, unit block, occupancy and notes agree",
+    "UB502": "batch isolation: no ring/line-buffer state crosses a batch step",
+    "UB503": "per-batch exactly-once: each slot evaluates the full per-tile rows",
 }
 
 
@@ -437,7 +448,7 @@ def _check_masks(kg: KernelGroup, out: List[PlanViolation]) -> None:
     metadata those masks are keyed on exists and matches the grid, and that
     every streaming view declares the valid extents the masks assume."""
     if kg.streamed:
-        steps0 = kg.grid[0]
+        steps0 = kg.steps0
         pg = kg.padded_grid
         if pg is not None:
             if (pg.extent, pg.block, pg.steps) != (kg.e0, kg.bh, steps0):
@@ -457,7 +468,9 @@ def _check_masks(kg: KernelGroup, out: List[PlanViolation]) -> None:
             ))
         lg = kg.lane_grid
         if lg is not None:
-            steps1 = kg.grid[1] if len(kg.grid) > 1 else 0
+            steps1 = (
+                kg.grid[kg.bofs + 1] if len(kg.grid) > kg.bofs + 1 else 0
+            )
             if kg.bw is None or (lg.extent, lg.block, lg.steps) != (
                 kg.e1, kg.bw, steps1
             ):
@@ -659,8 +672,13 @@ def _check_write_once(kg: KernelGroup, out: List[PlanViolation]) -> None:
     """UB301: grid dim 0 tiles the output rows disjointly and covers the
     extent; every *additional* grid dim must be declared — the lane grid
     (disjoint lane blocks) or a RedGrid (accumulation) — otherwise two grid
-    steps would store the same output element twice."""
-    n_extra = len(kg.grid) - 1
+    steps would store the same output element twice.
+
+    The batch dim (when declared via ``batch_grid``; UB501 proves the
+    declaration itself) is write-disjoint by construction — every slot
+    stores its own output tile — so it is excluded from the extra-dim
+    count here."""
+    n_extra = len(kg.grid) - 1 - kg.bofs
     declared = (1 if kg.lane_grid is not None else 0) + (
         1 if kg.red_grid is not None else 0
     )
@@ -678,17 +696,19 @@ def _check_write_once(kg: KernelGroup, out: List[PlanViolation]) -> None:
             witness=(0,) * len(kg.output.nstage.pure_extents),
         ))
     if kg.streamed:
-        covered = kg.grid[0] * kg.bh
+        covered = kg.steps0 * kg.bh
         if covered < kg.e0:
             out.append(PlanViolation(
                 "UB301", kg.name,
-                f"{kg.grid[0]} x {kg.bh}-row steps cover {covered} of "
+                f"{kg.steps0} x {kg.bh}-row steps cover {covered} of "
                 f"{kg.e0} output rows: rows [{covered}, {kg.e0}) are never "
                 f"written",
                 witness=(covered,),
             ))
         if kg.lane_grid is not None:
-            steps1 = kg.grid[1] if len(kg.grid) > 1 else 0
+            steps1 = (
+                kg.grid[kg.bofs + 1] if len(kg.grid) > kg.bofs + 1 else 0
+            )
             lane_cov = steps1 * (kg.bw or 0)
             if kg.e1 is not None and lane_cov < kg.e1:
                 out.append(PlanViolation(
@@ -697,11 +717,11 @@ def _check_write_once(kg: KernelGroup, out: List[PlanViolation]) -> None:
                     witness=(0, lane_cov),
                 ))
     else:
-        if kg.grid != (1,):
+        if kg.base_grid != (1,):
             out.append(PlanViolation(
                 "UB301", kg.name,
-                f"unstreamed kernel must run a single grid step, got "
-                f"{kg.grid}",
+                f"unstreamed kernel must run a single grid step per batch "
+                f"slot, got {kg.grid}",
             ))
 
 
@@ -732,14 +752,24 @@ def _derive_shift_sets(kg: KernelGroup) -> Dict[str, Set[int]]:
 
 
 def _check_eval_accounting(kg: KernelGroup, out: List[PlanViolation]) -> None:
-    """UB302: the planned shift sets match the ones the access maps demand,
-    and the per-stage eval-row counts implied by those derived sets (and
-    the grid) match ``KernelGroup.eval_rows()`` — the metric every
-    recompute-vs-carry decision and test harness trusts."""
+    """UB302/UB503: the planned shift sets match the ones the access maps
+    demand, and the per-stage eval-row counts implied by those derived sets
+    (and the grid) match ``KernelGroup.eval_rows()`` — the metric every
+    recompute-vs-carry decision and test harness trusts.
+
+    Under a batch grid the ground truth for the batch-step count is the
+    grid itself (``kg.grid[0]``), never ``batch_grid.steps`` — the same
+    independence principle the unbatched checks follow.  A line buffer
+    with ``batch_reset=False`` warms up once globally instead of once per
+    batch slot, so its true eval count drops below the per-batch
+    accounting; both drifts are exactly-once-per-batch violations and
+    fire UB503 (UB302 stays the unbatched rule)."""
     derived = _derive_shift_sets(kg)
     reported = kg.eval_rows()
-    steps = kg.grid[0] if kg.streamed else 1
+    steps = kg.steps0 if kg.streamed else 1
     lane_steps = kg.lane_steps
+    bsteps = kg.grid[0] if kg.batched else 1
+    eval_rule = "UB503" if kg.batched else "UB302"
     for sp in kg.stages:
         want = derived.get(sp.name, set())
         if set(sp.shifts) != want:
@@ -751,17 +781,24 @@ def _check_eval_accounting(kg: KernelGroup, out: List[PlanViolation]) -> None:
             ))
             continue
         if not (kg.streamed and sp.streamed):
-            expect = sp.e0
+            expect = bsteps * sp.e0
         elif sp.line_buffer is not None:
-            expect = steps * kg.bh + (max(want) - min(want))
+            halo = max(want) - min(want)
+            if kg.batched and not sp.line_buffer.batch_reset:
+                # Warm-up runs once for the whole batched sweep — the
+                # emission this plan describes under-evaluates every slot
+                # after the first.
+                expect = bsteps * steps * kg.bh + halo
+            else:
+                expect = bsteps * (steps * kg.bh + halo)
         else:
-            expect = (
+            expect = bsteps * (
                 steps * kg.bh * len(want) * lane_steps * len(sp.lane_shifts)
             )
         got = reported.get(sp.name)
         if got != expect:
             out.append(PlanViolation(
-                "UB302", kg.name,
+                eval_rule, kg.name,
                 f"eval_rows reports {got}, derived accounting says {expect}",
                 stage=sp.name,
                 witness=(got if got is not None else -1, expect),
@@ -782,8 +819,12 @@ def _resummed_vmem_bytes(kg: KernelGroup) -> int:
     for g in kg.groups:
         advanced = not g.pinned and (
             g.blocked_axis is not None
-            or (g.red_axis is not None and not g.resident and len(kg.grid) > 1)
-            or (g.lane_axis is not None and len(kg.grid) > 1)
+            or (
+                g.red_axis is not None
+                and not g.resident
+                and len(kg.base_grid) > 1
+            )
+            or (g.lane_axis is not None and len(kg.base_grid) > 1)
         )
         blk = ELEM_BYTES * math.prod(g.block_shape(kg.bh, kg.bw))
         total += blk * (2 if advanced else 1)
@@ -877,6 +918,87 @@ def _check_budget(
 
 
 # ---------------------------------------------------------------------------
+# UB5xx — batch-step isolation
+# ---------------------------------------------------------------------------
+
+
+def _check_batch(
+    kg: KernelGroup, notes: Dict[str, object], out: List[PlanViolation]
+) -> None:
+    """UB501/UB502: the batch grid declaration is well-formed and every
+    piece of carried VMEM state resets at batch boundaries.
+
+    UB501 proves the declaration: a batched plan (``notes['batch']``) must
+    batch every kernel, the batch dim must be the leading grid dim with a
+    unit block, occupancy must satisfy ``0 < extent <= steps``, and the
+    per-kernel ``batch_grid`` must agree with the plan-level notes.  UB502
+    proves isolation: rings and line buffers are *reused* across batch
+    steps, not re-allocated, so each must declare ``batch_reset=True`` —
+    otherwise slot ``b`` reads rows rotated in by slot ``b - 1``.  (The
+    eval-count consequence of a non-resetting line buffer is UB503,
+    emitted by the accounting check.)"""
+    bg = kg.batch_grid
+    plan_batch = notes.get("batch")
+    if bg is None:
+        if plan_batch is not None:
+            out.append(PlanViolation(
+                "UB501", kg.name,
+                f"plan declares batch={plan_batch} but the kernel has no "
+                f"batch grid",
+            ))
+        return
+    if plan_batch is None:
+        out.append(PlanViolation(
+            "UB501", kg.name,
+            "kernel has a batch grid but the plan declares no batch",
+        ))
+    if not kg.grid or kg.grid[0] != bg.steps:
+        out.append(PlanViolation(
+            "UB501", kg.name,
+            f"batch grid declares {bg.steps} steps but the leading grid "
+            f"dim is {kg.grid[0] if kg.grid else None}",
+            witness=(kg.grid[0] if kg.grid else -1, bg.steps),
+        ))
+    if bg.block != 1:
+        out.append(PlanViolation(
+            "UB501", kg.name,
+            f"batch steps must advance one slot at a time, got block "
+            f"{bg.block}",
+        ))
+    if not (0 < bg.extent <= bg.steps):
+        out.append(PlanViolation(
+            "UB501", kg.name,
+            f"batch occupancy {bg.extent} outside (0, {bg.steps}]",
+            witness=(bg.extent, bg.steps),
+        ))
+    cap = notes.get("batch_capacity", plan_batch)
+    if plan_batch is not None and (bg.extent, bg.steps) != (plan_batch, cap):
+        out.append(PlanViolation(
+            "UB501", kg.name,
+            f"kernel batch grid (extent={bg.extent}, steps={bg.steps}) "
+            f"disagrees with plan notes (batch={plan_batch}, "
+            f"capacity={cap})",
+        ))
+    for r in kg.rings:
+        if not r.batch_reset:
+            out.append(PlanViolation(
+                "UB502", kg.name,
+                f"ring '{r.buffer}' carries rotated rows across batch "
+                f"steps (batch_reset=False): slot b would read slot b-1's "
+                f"halo",
+            ))
+    for sp in kg.stages:
+        lb = sp.line_buffer
+        if lb is not None and not lb.batch_reset:
+            out.append(PlanViolation(
+                "UB502", kg.name,
+                f"line buffer carries warm-up rows across batch steps "
+                f"(batch_reset=False)",
+                stage=sp.name,
+            ))
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
 
@@ -900,6 +1022,7 @@ def verify_plan(plan: PipelinePlan) -> List[PlanViolation]:
         _check_red_grid(kg, out)
         _check_write_once(kg, out)
         _check_eval_accounting(kg, out)
+        _check_batch(kg, plan.notes, out)
         _check_budget(kg, budget, out)
     return out
 

@@ -1,3 +1,3 @@
-from .engine import ServeEngine, make_serve_step
+from .engine import ServeEngine, make_serve_step, pad_to_slots
 
-__all__ = ["ServeEngine", "make_serve_step"]
+__all__ = ["ServeEngine", "make_serve_step", "pad_to_slots"]

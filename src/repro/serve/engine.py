@@ -80,6 +80,19 @@ class Request:
     done: bool = False
 
 
+def pad_to_slots(requests: List, slots: int, make_filler: Callable[[], object]) -> List:
+    """Pad a ragged request list up to the engine's fixed slot count with
+    filler requests (pad-and-discard: fillers do the slot's work on dummy
+    data and their results are thrown away).  Shared by ``ServeEngine``
+    (decode slots) and ``backend.serve_bridge.PipelineServer`` (batched
+    pipeline slots)."""
+    if len(requests) > slots:
+        raise ValueError(
+            f"{len(requests)} requests exceed the {slots} batch slots"
+        )
+    return list(requests) + [make_filler() for _ in range(slots - len(requests))]
+
+
 class ServeEngine:
     """Fixed-slot batched greedy decoding (continuous-batching lite)."""
 
@@ -93,10 +106,9 @@ class ServeEngine:
         self.pos = 0
 
     def run(self, requests: List[Request]) -> List[Request]:
-        assert len(requests) <= self.batch
-        reqs = list(requests) + [
-            Request(prompt=[0], max_new=0) for _ in range(self.batch - len(requests))
-        ]
+        reqs = pad_to_slots(
+            requests, self.batch, lambda: Request(prompt=[0], max_new=0)
+        )
         max_prompt = max(len(r.prompt) for r in reqs)
         total = max_prompt + max(r.max_new for r in reqs)
         assert total <= self.max_seq
@@ -120,4 +132,10 @@ class ServeEngine:
         return reqs
 
 
-__all__ = ["ServeEngine", "Request", "make_serve_step", "kv_cache_specs"]
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "make_serve_step",
+    "kv_cache_specs",
+    "pad_to_slots",
+]

@@ -54,12 +54,17 @@ except ImportError:                     # container without hypothesis: the
     pass                                # seeded case list is the harness
 
 
-def sweep_inputs(app, seed: int, dtype: str = "u4") -> Dict[str, np.ndarray]:
+def sweep_inputs(
+    app, seed: int, dtype: str = "u4", batch: Optional[int] = None
+) -> Dict[str, np.ndarray]:
     """Deterministic input arrays for an AppBundle, drawn from the value
-    lattice ``dtype`` names (integers stay exactly f32-representable)."""
+    lattice ``dtype`` names (integers stay exactly f32-representable).
+    ``batch`` prepends a leading dim of that many independent tiles (the
+    batched-pipeline input convention)."""
     rng = np.random.default_rng(seed)
     out: Dict[str, np.ndarray] = {}
-    for name, shape in app.input_extents.items():
+    for name, base_shape in app.input_extents.items():
+        shape = (batch,) + tuple(base_shape) if batch else tuple(base_shape)
         if dtype == "u4":
             arr = rng.integers(0, 16, shape)
         elif dtype == "u1":
@@ -136,7 +141,21 @@ def assert_matches_reference(
     from repro.backend import reference_arrays
 
     got = pp.run(inputs)
-    want = reference_arrays(app.pipeline, inputs)
+    batch = pp.plan.batch
+    if batch is None:
+        want = reference_arrays(app.pipeline, inputs)
+    else:
+        # batched plans: the reference is the per-tile interpreter run once
+        # per slot — exactly the per-tile loop the batch grid replaces
+        per_slot = [
+            reference_arrays(
+                app.pipeline, {n: a[b] for n, a in inputs.items()}
+            )
+            for b in range(batch)
+        ]
+        want = {
+            k: np.stack([p[k] for p in per_slot]) for k in per_slot[0]
+        }
     for ck in pp.kernels:
         g = np.asarray(got[ck.name], np.float64)
         w = want[ck.name]
@@ -173,9 +192,12 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
     matmul, biased toward extents with no friendly divisor (primes, odd
     sizes).  The ``lanes`` axis draws from an *independent* seeded stream
     (``rng_lane``) so adding it did not reshuffle the pre-existing axes'
-    draws — the non-lane face of the sweep is byte-identical to PR 4's."""
+    draws — the non-lane face of the sweep is byte-identical to PR 4's.
+    The ``batch`` axis follows the same discipline with its own stream
+    (``rng_batch``): the pre-batch face is byte-identical to PR 6's."""
     rng = random.Random(seed)
     rng_lane = random.Random(seed ^ 0x1A9E5)
+    rng_batch = random.Random(seed ^ 0xB47C8)
     cases: list = []
 
     def add(name, kw, **ckw):
@@ -202,6 +224,16 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
         # align_tpu x lane composition instead)
         if not ckw.get("align_tpu") and rng_lane.random() < 0.16:
             ckw.setdefault("block_w", rng_lane.choice([3, 4, 5, 7, 9]))
+        # batch axis: ~1/8 of cases sweep several independent tiles through
+        # one leading batch grid dim, half of those with spare slot
+        # capacity (a ragged final batch: zero-padded slots the runner
+        # slices off).  Every other planning decision is per-tile, so this
+        # composes freely with padded rows, lanes, and carry modes.
+        if rng_batch.random() < 0.12:
+            b = rng_batch.choice([2, 3, 4])
+            ckw.setdefault("batch", b)
+            if rng_batch.random() < 0.5:
+                ckw.setdefault("batch_capacity", b + rng_batch.choice([1, 2]))
         cases.append((name, kw, dtype, fuse, ckw))
 
     primes = [5, 7, 11, 13, 17, 19, 23, 29, 31]
@@ -298,6 +330,20 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
         ("resnet", {"img": 7, "cin": 3, "cout": 3}, "u4", True,
          {"block_w": 3, "block_h": 2}),
     ]
+    # guaranteed-batch anchors (appended verbatim, no draws): the batch
+    # grid composed with every hazard class it must not disturb — padded
+    # rows, a ragged final batch over a carried line buffer, the
+    # batch+padded+lane triple composition, and a masked-K-tail grid
+    # reduction swept per slot
+    cases += [
+        ("gaussian", {"size": 13}, "u4", True, {"block_h": 4, "batch": 3}),
+        ("unsharp", {"size": 15}, "u4", True,
+         {"line_buffer": True, "batch": 3, "batch_capacity": 4}),
+        ("harris", {"schedule": "sch3", "size": 21}, "u4", True,
+         {"block_w": 6, "block_h": 5, "batch": 2, "batch_capacity": 3}),
+        ("matmul", {"m": 19, "n": 13, "k": 70}, "u4", False,
+         {"red_grid_threshold": 64, "batch": 3}),
+    ]
     return cases
 
 
@@ -317,4 +363,8 @@ def sweep_case_id(case: SweepCase) -> str:
         bits.append("lb" if ckw["line_buffer"] else "nolb")
     if "block_w" in ckw:
         bits.append(f"bw{ckw['block_w']}")
+    if "batch" in ckw:
+        bits.append(f"b{ckw['batch']}")
+        if "batch_capacity" in ckw:
+            bits.append(f"cap{ckw['batch_capacity']}")
     return "-".join(bits)

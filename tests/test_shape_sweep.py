@@ -54,7 +54,7 @@ def test_shape_sweep_differential(idx, case):
     name, kw, dtype, fuse, ckw = case
     app = make_app(name, **kw)
     pp = compile_pipeline(app.pipeline, fuse=fuse, **ckw)
-    inputs = sweep_inputs(app, SWEEP_SEED + idx, dtype)
+    inputs = sweep_inputs(app, SWEEP_SEED + idx, dtype, batch=ckw.get("batch"))
     assert_matches_reference(
         app, pp, inputs,
         exact=is_exact_case(name, dtype),
@@ -123,7 +123,9 @@ def test_sweep_covers_lane_blocked_plans():
             if kg.lane_grid is None:
                 continue
             lane_cases += 1
-            assert len(kg.grid) >= 2 and kg.grid[1] == kg.lane_grid.steps
+            # the lane dim sits right of the (optional) leading batch dim
+            assert len(kg.grid) >= kg.bofs + 2
+            assert kg.grid[kg.bofs + 1] == kg.lane_grid.steps
             if kg.lane_grid.pad > 0:
                 ragged += 1
             if kg.fused and any(
@@ -133,6 +135,81 @@ def test_sweep_covers_lane_blocked_plans():
     assert lane_cases >= 5, lane_cases
     assert ragged >= 2, ragged
     assert fused_lane_shifts >= 1, fused_lane_shifts
+
+
+def test_sweep_covers_batched_plans():
+    """The batch axis is not vacuous: the sweep contains batched plans,
+    ragged-capacity batches (spare zero-padded slots), and the
+    batch+padded-rows, batch+lane, and batch+carry compositions — each
+    plan's every kernel leading with the capacity-sized batch grid dim.
+    Plan-only, so this check is cheap."""
+    batched = ragged = with_rows_pad = with_lane = with_carry = 0
+    for name, kw, _, fuse, ckw in SWEEP_CASES:
+        if "batch" not in ckw:
+            continue
+        plan = build_pipeline_plan(make_app(name, **kw).pipeline, fuse=fuse, **ckw)
+        batched += 1
+        for kg in plan.kernels:
+            assert kg.batch_grid is not None
+            assert kg.grid[0] == kg.batch_grid.steps
+        if any(kg.batch_grid.pad > 0 for kg in plan.kernels):
+            ragged += 1
+        if any(kg.padded_grid is not None for kg in plan.kernels):
+            with_rows_pad += 1
+        if any(kg.lane_grid is not None for kg in plan.kernels):
+            with_lane += 1
+        if plan.n_rings or plan.line_buffered:
+            with_carry += 1
+    assert batched >= 10, batched
+    assert ragged >= 3, ragged
+    assert with_rows_pad >= 2, with_rows_pad
+    assert with_lane >= 1, with_lane
+    assert with_carry >= 1, with_carry
+
+
+@pytest.mark.parametrize(
+    "name,kw,ckw",
+    [
+        # padded rows under a ragged batch
+        ("gaussian", {"size": 13}, {"block_h": 4, "batch": 3, "batch_capacity": 4}),
+        # carried line buffer re-warmed per slot, ragged capacity
+        ("unsharp", {"size": 15},
+         {"fuse": True, "block_h": 5, "line_buffer": True,
+          "batch": 3, "batch_capacity": 5}),
+        # the triple composition: batch x padded rows x masked lane tail
+        ("harris", {"schedule": "sch3", "size": 21},
+         {"fuse": True, "block_w": 6, "block_h": 5,
+          "batch": 2, "batch_capacity": 3}),
+        # grid reduction (masked K-tail) swept once per slot
+        ("matmul", {"m": 24, "n": 16, "k": 70},
+         {"red_grid_threshold": 64, "batch": 3, "batch_capacity": 4}),
+    ],
+    ids=["gaussian-padded", "unsharp-carry", "harris-lane", "matmul-redgrid"],
+)
+def test_batched_matches_per_tile_loop(name, kw, ckw):
+    """The batched acceptance oracle: a batched pipeline must produce,
+    slot for slot, the *bit-identical* buffers of the per-tile loop it
+    replaces — ragged final batches (zero-padded slots, sliced off)
+    included.  Composed against every hazard class: padded row tails,
+    carried line buffers (re-warmed at each batch boundary), masked lane
+    tails, and chunked grid reductions."""
+    app = make_app(name, **kw)
+    batch = ckw["batch"]
+    bp = compile_pipeline(app.pipeline, **ckw)
+    ptp = compile_pipeline(
+        app.pipeline,
+        **{k: v for k, v in ckw.items() if k not in ("batch", "batch_capacity")},
+    )
+    inputs = sweep_inputs(app, SWEEP_SEED, "u4", batch=batch)
+    got = bp.run(inputs)
+    for ck in bp.kernels:
+        g = np.asarray(got[ck.name])
+        assert g.shape[0] == batch       # capacity slots never escape
+        for b in range(batch):
+            ref = np.asarray(
+                ptp.run({n: a[b] for n, a in inputs.items()})[ck.name]
+            )
+            assert np.array_equal(g[b], ref), (name, ck.name, b)
 
 
 def test_flagship_prime_extents_191x253():

@@ -14,9 +14,12 @@ Two halves, both purely static (no kernel is ever executed):
   become vacuous.
 
 The rules are named ``UBxyz`` after the unified-buffer property families
-they prove (1xx bounds, 2xx masks/warm-up, 3xx exactly-once, 4xx budget);
-see ``backend/verify.RULES`` and the README rule catalog.
+they prove (1xx bounds, 2xx masks/warm-up, 3xx exactly-once, 4xx budget,
+5xx batch-step isolation); see ``backend/verify.RULES`` and the README rule
+catalog.
 """
+
+import dataclasses
 
 from conftest import generate_sweep_cases, sweep_case_id
 
@@ -151,6 +154,67 @@ def _matmul_redgrid_plan():
     )
 
 
+def _batched_gaussian_plan():
+    return build_pipeline_plan(
+        make_app("gaussian", size=13).pipeline,
+        block_h=4, batch=3, batch_capacity=4,
+    )
+
+
+def _batched_ring_plan():
+    return build_pipeline_plan(
+        make_app("gaussian", size=13).pipeline,
+        block_h=4, fuse=False, line_buffer=True, batch=3, batch_capacity=4,
+    )
+
+
+def _batched_lb_plan():
+    return build_pipeline_plan(
+        make_app("unsharp", size=15).pipeline,
+        fuse=True, block_h=5, line_buffer=True, batch=3, batch_capacity=4,
+    )
+
+
+def _unreset_ring(plan):
+    """A ring that keeps its carried halo across batch steps: slot b reads
+    rows rotated in by slot b-1 (the bug class the emitter's batch_reset
+    corruption knob actually reproduces — see codegen._carry_guards)."""
+    kg = next(kg for kg in plan.kernels if kg.rings)
+    kg.rings[0] = dataclasses.replace(kg.rings[0], batch_reset=False)
+
+
+def _unreset_line_buffer(plan):
+    """A line buffer warmed once globally instead of once per slot: carried
+    rows cross the batch boundary (UB502) *and* the warm-up no longer
+    re-evaluates per slot, so the per-batch exactly-once accounting is off
+    by the halo on every slot after the first (UB503)."""
+    kg = next(
+        kg for kg in plan.kernels
+        if any(sp.line_buffer is not None for sp in kg.stages)
+    )
+    i = next(i for i, sp in enumerate(kg.stages) if sp.line_buffer is not None)
+    sp = kg.stages[i]
+    sp.line_buffer = dataclasses.replace(sp.line_buffer, batch_reset=False)
+
+
+def _drift_batch_steps(plan):
+    """Batch occupancy metadata drifts from the grid: the declared slot
+    count no longer matches the leading grid dim (UB501), and eval_rows —
+    which trusts the declaration — over-counts per-batch work (UB503)."""
+    from repro.backend import PaddedGrid
+
+    for kg in plan.kernels:
+        kg.batch_grid = PaddedGrid(extent=3, block=1, steps=5)
+
+
+def _drop_batch_grid(plan):
+    """The plan claims a batch but no kernel declares the batch grid: the
+    leading capacity dim is suddenly structural, so the mask/write-once
+    checks misread the grid and cascade behind UB501."""
+    for kg in plan.kernels:
+        kg.batch_grid = None
+
+
 # (id, plan builder, corruption, rules that MUST fire, exact rule set or
 # None when downstream cascade rules are expected and documented)
 MUTATIONS = [
@@ -178,6 +242,20 @@ MUTATIONS = [
      {"UB203"}, None),
     ("misstate-ws", _gaussian_plan, _misstate_ws,
      {"UB403"}, {"UB403"}),
+    # rings deliver rows but evaluate nothing, so carrying one across a
+    # batch boundary is purely an isolation bug: exactly UB502
+    ("carry-ring-across-batch", _batched_ring_plan, _unreset_ring,
+     {"UB502"}, {"UB502"}),
+    # a non-resetting line buffer both leaks state (UB502) and skips the
+    # per-slot warm-up re-evaluation the accounting promises (UB503)
+    ("carry-linebuf-across-batch", _batched_lb_plan, _unreset_line_buffer,
+     {"UB502", "UB503"}, {"UB502", "UB503"}),
+    ("drift-batch-steps", _batched_gaussian_plan, _drift_batch_steps,
+     {"UB501", "UB503"}, {"UB501", "UB503"}),
+    # mask (UB201) and write-once (UB301) cascade once the leading dim is
+    # misread as structural
+    ("undeclare-batch-grid", _batched_gaussian_plan, _drop_batch_grid,
+     {"UB501"}, None),
 ]
 
 
