@@ -16,6 +16,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     if "--bench-smoke" in sys.argv[1:]:
         sys.exit(bench_smoke_check())
+    if "--tune-smoke" in sys.argv[1:]:
+        from benchmarks.tune_bench import tune_smoke_check
+
+        sys.exit(tune_smoke_check())
 
     from benchmarks.paper_tables import ALL_TABLES
 
@@ -29,22 +33,30 @@ def main() -> None:
 
 
 def write_backend_bench(path: str | None = None) -> str:
-    """Benchmark the generated backend kernels plus the serve bridge and
-    persist BENCH_backend.json (``generated_kernels`` + ``serve`` keys)."""
+    """Benchmark the generated backend kernels, the serve bridge, and the
+    schedule autotuner, and persist BENCH_backend.json
+    (``generated_kernels`` + ``serve`` + ``tune`` keys).  The tune pass
+    also refreshes the repo schedule db (``schedule_db.json``) — the
+    winners ``compile_pipeline(tune="auto")`` serves."""
     import json
 
     from benchmarks.kernel_bench import backend_rows
     from benchmarks.serve_bench import serve_rows
+    from benchmarks.tune_bench import tune_rows
 
     if path is None:
         path = os.path.join(os.path.dirname(__file__), "..", "BENCH_backend.json")
     rows = backend_rows()
     srows = serve_rows()
+    trows = tune_rows()
     with open(path, "w") as f:
-        json.dump({"generated_kernels": rows, "serve": srows}, f, indent=2)
+        json.dump(
+            {"generated_kernels": rows, "serve": srows, "tune": trows},
+            f, indent=2,
+        )
     print(
         f"# wrote {os.path.normpath(path)} ({len(rows)} generated-kernel "
-        f"entries, {len(srows)} serve entries)"
+        f"entries, {len(srows)} serve entries, {len(trows)} tune entries)"
     )
     return path
 

@@ -92,7 +92,9 @@ def serve_rows(smoke: bool = False) -> list:
 
         # -- batched bridge: cold = fresh cache, server build + first full
         # dispatch (plan + emit + trace); warm = steady-state dispatches --
-        clear_pipeline_cache()
+        # (reset_stats: the per-case cache counters recorded in the row
+        # below must start from zero, not accumulate across cases)
+        clear_pipeline_cache(reset_stats=True)
         t0 = time.perf_counter()
         srv = PipelineServer(app.pipeline, batch_slots=slots, **ckw)
         for t in tiles[:slots]:

@@ -1,17 +1,37 @@
-"""Schedule exploration (paper §VI-C, Table V): trade throughput for area by
-changing only Halide-style scheduling directives.
+"""Schedule autotuner CLI (and the paper §VI-C Table V comparison).
+
+Default mode runs the verifier-gated autotuner (``backend/autotune``) over
+a set of apps: enumerate candidate schedules — joint (bh, bw) pairs,
+fusion cut, line-buffer mode, reduction chunk — prune with the scheduler
+cycle model, certify every survivor with ``verify_plan`` before it is
+emitted or measured, time the certified survivors through the plan-keyed
+compile cache, and persist each winner in the JSON schedule database that
+``compile_pipeline(tune="auto")`` consults.
 
     PYTHONPATH=src python examples/schedule_explorer.py
+    PYTHONPATH=src python examples/schedule_explorer.py \
+        --apps harris,unsharp,matmul --db schedule_db.json
+    PYTHONPATH=src python examples/schedule_explorer.py --no-measure
+    PYTHONPATH=src python examples/schedule_explorer.py --table-v
+
+``--table-v`` prints the original paper Table V exploration (throughput /
+PE / MEM trade-offs on harris driven purely by scheduling directives).
 """
 
+import argparse
+import json
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.apps import make_app
-from repro.core.extraction import extract_buffers
-from repro.core.mapping import map_design
-from repro.core.scheduling import schedule_pipeline
+# the autotunable app set: (name, make_app kwargs, case label)
+TUNE_APPS = {
+    "harris": ({"schedule": "sch3", "size": 20}, "20x20"),
+    "unsharp": ({"size": 18}, "18x18"),
+    "matmul": ({"m": 16, "n": 16, "k": 2048}, "16x16x2048"),
+    "gaussian": ({"size": 18}, "18x18"),
+    "camera": ({"size": 16}, "16x16"),
+}
 
 DESCRIPTIONS = {
     "sch1": "recompute all intermediates (everything inlined)",
@@ -23,7 +43,13 @@ DESCRIPTIONS = {
 }
 
 
-def main() -> None:
+def table_v() -> None:
+    """The paper Table V comparison this script originally printed."""
+    from repro.apps import make_app
+    from repro.core.extraction import extract_buffers
+    from repro.core.mapping import map_design
+    from repro.core.scheduling import schedule_pipeline
+
     print(f"{'schedule':8s} {'pixels/cyc':>10s} {'PEs':>6s} {'MEMs':>5s} "
           f"{'cycles':>7s}  description")
     for sch in ["sch1", "sch2", "sch3", "sch4", "sch5", "sch6"]:
@@ -39,5 +65,81 @@ def main() -> None:
           "scheduling directives)")
 
 
+def tune(args) -> int:
+    from repro.apps import make_app
+    from repro.backend.autotune import default_db_path, search
+
+    names = args.apps.split(",")
+    unknown = sorted(set(names) - set(TUNE_APPS))
+    if unknown:
+        raise SystemExit(
+            f"unknown app(s) {unknown}; choose from {sorted(TUNE_APPS)}"
+        )
+    db = None if args.no_db else (args.db or default_db_path())
+    print(
+        f"{'app':10s} {'case':>12s} {'cands':>5s} {'meas':>4s} {'rej':>3s} "
+        f"{'heur_us':>9s} {'tuned_us':>9s} {'speedup':>7s}  winning schedule"
+    )
+    ok = True
+    for name in names:
+        kw, case = TUNE_APPS[name]
+        app = make_app(name, **kw)
+        r = search(
+            app.pipeline, label=name, db=db,
+            max_candidates=args.max_candidates, measure_top=args.top,
+            measure=not args.no_measure, reps=args.reps, seed=args.seed,
+            log=(lambda m: print(f"# {m}", file=sys.stderr))
+            if args.verbose else None,
+        )
+        sched = json.dumps(r.schedule) if r.schedule else "{} (heuristic)"
+        if args.no_measure:
+            print(f"{name:10s} {case:>12s} {len(r.candidates):>5d} "
+                  f"{'-':>4s} {len(r.rejected):>3d} {'-':>9s} {'-':>9s} "
+                  f"{'-':>7s}  {sched} "
+                  f"(model: {r.model_cycles and round(r.model_cycles)} vs "
+                  f"{r.heuristic_model_cycles and round(r.heuristic_model_cycles)} cyc)")
+            continue
+        if r.warm_us > r.heuristic_warm_us:
+            ok = False                  # structurally impossible; fail loudly
+        print(f"{name:10s} {case:>12s} {len(r.candidates):>5d} "
+              f"{len(r.measured):>4d} {len(r.rejected):>3d} "
+              f"{r.heuristic_warm_us:>9.1f} {r.warm_us:>9.1f} "
+              f"{r.speedup:>6.2f}x  {sched}")
+    if db is not None:
+        print(f"# schedule db: {db}", file=sys.stderr)
+    if not ok:
+        print("schedule_explorer: a stored winner measured slower than the "
+              "heuristic plan (should be structurally impossible — the "
+              "heuristic is always a measured candidate)", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--table-v", action="store_true",
+                    help="print the paper Table V scheduling comparison")
+    ap.add_argument("--apps", default="harris,unsharp,matmul",
+                    help=f"comma-separated subset of {sorted(TUNE_APPS)}")
+    ap.add_argument("--db", default=None,
+                    help="schedule db path (default: repo schedule_db.json)")
+    ap.add_argument("--no-db", action="store_true",
+                    help="search without persisting winners")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="model-only search (deterministic; nothing executed)")
+    ap.add_argument("--max-candidates", type=int, default=32)
+    ap.add_argument("--top", type=int, default=8,
+                    help="certified candidates to measure per app")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verbose", action="store_true",
+                    help="log pruned/rejected candidates to stderr")
+    args = ap.parse_args(argv)
+    if args.table_v:
+        table_v()
+        return 0
+    return tune(args)
+
+
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

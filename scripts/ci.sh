@@ -7,6 +7,7 @@
 #   bash scripts/ci.sh --verify     # static plan-verifier gate standalone
 #   bash scripts/ci.sh --bench-smoke # regenerate 2 BENCH rows, check schema
 #   bash scripts/ci.sh --serve       # serve-bridge suite + serve bench schema
+#   bash scripts/ci.sh --tune        # autotuner suite + bounded smoke search
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -57,6 +58,17 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     # regenerate the two fast benchmark rows and diff their key sets
     # against BENCH_backend.json — catches stale-schema drift in seconds
     python -m benchmarks.run --bench-smoke
+    exit 0
+fi
+
+if [[ "${1:-}" == "--tune" ]]; then
+    # autotuner stage: the schedule-search suite (determinism, db
+    # round-trip, verifier gating on seeded corruptions), then a bounded
+    # smoke search — 2 apps, <= 16 candidates, into a scratch db — that
+    # schema-checks the emitted schedule db and diffs the fresh rows' key
+    # sets against the "tune" rows persisted in BENCH_backend.json
+    python -m pytest -q -m tune
+    python -m benchmarks.run --tune-smoke
     exit 0
 fi
 

@@ -10,6 +10,8 @@ this package for the Stage -> plan -> grid/BlockSpec correspondence.
 """
 
 from .access import AxisAccess, LoadAccess, UnsupportedAccessError, decompose_stage
+from .autotune import ScheduleDB, TuneResult, lookup_schedule
+from .autotune import search as autotune_search
 from .codegen import (
     CompiledKernel,
     CompiledStage,
@@ -31,6 +33,7 @@ from .plan import (
     scheduler_cost,
 )
 from .runner import (
+    TUNABLE_KEYS,
     PallasPipeline,
     clear_pipeline_cache,
     compile_pipeline,
@@ -39,6 +42,7 @@ from .runner import (
     pipeline_cache_stats,
     plan_cache_key,
     reference_arrays,
+    schedule_db_key,
 )
 from .serve_bridge import PipelineServer, TileRequest
 from .verify import (
@@ -72,6 +76,12 @@ __all__ = [
     "PallasPipeline",
     "compile_pipeline",
     "plan_cache_key",
+    "schedule_db_key",
+    "TUNABLE_KEYS",
+    "ScheduleDB",
+    "TuneResult",
+    "autotune_search",
+    "lookup_schedule",
     "clear_pipeline_cache",
     "pipeline_cache_size",
     "pipeline_cache_stats",

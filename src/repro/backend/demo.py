@@ -81,7 +81,9 @@ def run_demo(
     )
     from repro.backend.golden import check_plan_verified
 
-    clear_pipeline_cache()
+    # reset_stats: the footer main() prints reports only this demo run's
+    # cache traffic, not counters inherited from the calling process
+    clear_pipeline_cache(reset_stats=True)
     wanted = set(app_names) if app_names else None
     if wanted is not None:
         known = {name for name, _ in DEMO_APPS}

@@ -900,6 +900,7 @@ def scheduler_cost(
     carry_stmts: int = 0,
     warmup_stmts: int = 0,
     rotate_cycles: float = 0.0,
+    lane_steps: int = 1,
 ) -> Callable[[int], float]:
     """Price a candidate block height with the §V-B cycle model.
 
@@ -934,9 +935,17 @@ def scheduler_cost(
     ``stmts_per_row``/streams vs carry-mode with these terms — and the
     cheaper modeled schedule decides the chain's mode, tie-broken toward
     less HBM traffic.
+
+    ``lane_steps`` is the lane-grid step count (``ceil(e1 / bw)``) of a
+    2-D lane-blocked plan: every row panel is swept once per lane block,
+    so the steady-state term scales by it while the one-time pipeline
+    fill does not.  This is what makes modeled cycles comparable *across*
+    lane widths — a narrow block's cheaper per-step panel no longer hides
+    the extra grid steps it costs — i.e. joint (bh, bw) pricing instead
+    of the greedy widest-fit lane selection.
     """
     def cost(bh: int) -> float:
-        steps = _cdiv(e0, bh)
+        steps = _cdiv(e0, bh) * lane_steps
         compute = raster_cycles((bh, max(stmts_per_row, 1)), latency)
         dma = (bytes_per_row * bh) / HBM_BYTES_PER_CYCLE
         if carry_stmts:
@@ -989,6 +998,7 @@ def _red_grid_candidate(
     ns: NormalizedStage,
     accesses: Sequence[LoadAccess],
     threshold: int,
+    chunk: Optional[int] = None,
 ) -> Optional[Tuple[RedGrid, Dict[int, Optional[int]]]]:
     """Decide whether the stage's leading reduction dim can enter the grid.
 
@@ -1003,14 +1013,22 @@ def _red_grid_candidate(
     a full unroll or an awkward divisor.  Every load axis touching the dim
     must be indexed by it alone (``coeff 1, const 0, no pure dim``) so
     chunked BlockSpec delivery is exact; returns the plan plus each load's
-    reduction-blocked axis."""
+    reduction-blocked axis.
+
+    ``chunk`` overrides the default chunk size (an autotuner knob — the
+    chunk trades per-step VMEM residency against grid-step overhead); it
+    is clamped to the extent, and a value of 1 declines the grid
+    reduction entirely (every chunk is one term — pure overhead)."""
     if not ns.red_dims:
         return None
     r = ns.red_dims[0]
     extent = ns.red_extents[0]
     if extent < threshold:
         return None
-    chunk = min(MAX_RED_CHUNK, (extent + 1) // 2)
+    if chunk is None:
+        chunk = min(MAX_RED_CHUNK, (extent + 1) // 2)
+    else:
+        chunk = max(1, min(chunk, extent))
     if chunk <= 1:
         return None
     axis_of: Dict[int, Optional[int]] = {}
@@ -1233,6 +1251,8 @@ def _build_kernel_group(
     red_grid_threshold: int = RED_GRID_THRESHOLD,
     line_buffer: object = "auto",
     red_resident: bool = True,
+    red_chunk: Optional[int] = None,
+    lane_price: str = "joint",
 ) -> KernelGroup:
     """Build the delivery plan for one kernel (one or more fused stages).
 
@@ -1256,7 +1276,17 @@ def _build_kernel_group(
 
     Raises :class:`FusionInfeasible` when a multi-stage group violates a
     structural constraint or cannot fit VMEM at any block height; a
-    single-stage group always plans (matching the pre-refactor backend)."""
+    single-stage group always plans (matching the pre-refactor backend).
+
+    ``red_chunk`` overrides the grid-reduction chunk size (see
+    :func:`_red_grid_candidate`); ``lane_price`` selects the budget-driven
+    lane-width policy — ``"joint"`` (default) prices every fitting
+    (bh, bw) pair with the scheduler model, ``"greedy"`` restores the
+    PR 5 widest-first first-fit."""
+    if lane_price not in ("joint", "greedy"):
+        raise ValueError(
+            f"lane_price must be 'joint' or 'greedy': {lane_price!r}"
+        )
     multi = len(members) > 1
     out_ns, out_acc, out_streamed = members[-1]
     names = {ns.name for ns, _, _ in members}
@@ -1273,7 +1303,9 @@ def _build_kernel_group(
     red_grid: Optional[RedGrid] = None
     red_axis_of: Dict[int, Optional[int]] = {}
     if grid_reduction and not multi and out_streamed:
-        cand = _red_grid_candidate(out_ns, out_acc, red_grid_threshold)
+        cand = _red_grid_candidate(
+            out_ns, out_acc, red_grid_threshold, chunk=red_chunk
+        )
         if cand is not None:
             red_grid, red_axis_of = cand
 
@@ -1533,7 +1565,71 @@ def _build_kernel_group(
                 scratch_rows += len(sp.shifts) * len(sp.lane_shifts) * inner
         bytes_per_row += scratch_rows * ELEM_BYTES
 
+        # the scheduler cost closure is built for *every* streamed kernel
+        # (not just model-chosen block heights): explicit-block_h plans and
+        # every lane-width candidate get their ``model_cycles`` recorded,
+        # which is what the joint (bh, bw) selection below and the
+        # autotuner's pruning stage rank candidates by.  ``bh_priced``
+        # (set in the notes) records whether the block height itself was
+        # chosen by the model — the recompute-vs-carry arbitration only
+        # trusts cycle comparisons between model-chosen heights, exactly
+        # as before.
         cost = None
+        if kernel_streamed and cost_model == "scheduler":
+            stmts_per_row = 0
+            carry_stmts = 0
+            warmup_stmts = 0
+            rotate = 0.0
+            for ns, _, _ in members:
+                sp = plans[ns.name]
+                sh = list(ns.pure_extents[1:])
+                if lane and sh:
+                    sh[-1] = bw
+                inner = math.prod(sh) if sh else 1
+                red = math.prod(ns.red_extents) if ns.red_dims else 1
+                if red_grid is not None:
+                    red = (red // ns.red_extents[0]) * red_grid.chunk
+                if sp.line_buffer is not None:
+                    stmts_per_row += inner * red
+                    carry_stmts += sp.line_buffer.halo * inner
+                    warmup_stmts += sp.line_buffer.halo * inner * red
+                else:
+                    stmts_per_row += (
+                        len(sp.shifts) * len(sp.lane_shifts) * inner * red
+                    )
+            for r in rings:
+                inner = math.prod(
+                    r.span[j] for j in range(r.ndim) if j != r.axis
+                )
+                elems = r.halo * inner
+                if r.stride0 == 1:
+                    # contiguous rotation: a lane-wide VMEM move that
+                    # overlaps the raster on the memory side
+                    carry_stmts += elems
+                else:
+                    # strided rotation cannot coalesce into wide vector
+                    # moves: serial element shuffles on top of the
+                    # raster, plus the per-step branch machinery
+                    rotate += float(elems) + RING_STEP_OVERHEAD_CYCLES
+            latency = max(_stage_latency(ns) for ns, _, _ in members)
+            # grid dims beyond the row dim multiply the steady-state step
+            # count: lane blocks sweep every row panel once per lane step,
+            # and a grid reduction revisits each row panel once per chunk
+            # step (stmts_per_row above already counts only the in-chunk
+            # terms).  Pricing them makes model_cycles comparable across
+            # (bw, red_chunk) candidates — narrower blocks / smaller
+            # chunks pay for their extra grid steps.
+            steps_mult = 1
+            if lane:
+                steps_mult = _cdiv(e1_out, bw)
+            elif red_grid is not None:
+                steps_mult = red_grid.steps
+            cost = scheduler_cost(
+                e0_out, stmts_per_row, latency, bytes_per_row, fixed_bytes,
+                carry_stmts=carry_stmts, warmup_stmts=warmup_stmts,
+                rotate_cycles=rotate,
+                lane_steps=steps_mult,
+            )
         if not kernel_streamed:
             bh = e0_out
         elif block_h is not None:
@@ -1544,48 +1640,6 @@ def _build_kernel_group(
             # extent degenerate to one padded step, so clamp to the extent)
             bh = min(block_h, e0_out)
         else:
-            if cost_model == "scheduler":
-                stmts_per_row = 0
-                carry_stmts = 0
-                warmup_stmts = 0
-                rotate = 0.0
-                for ns, _, _ in members:
-                    sp = plans[ns.name]
-                    sh = list(ns.pure_extents[1:])
-                    if lane and sh:
-                        sh[-1] = bw
-                    inner = math.prod(sh) if sh else 1
-                    red = math.prod(ns.red_extents) if ns.red_dims else 1
-                    if red_grid is not None:
-                        red = (red // ns.red_extents[0]) * red_grid.chunk
-                    if sp.line_buffer is not None:
-                        stmts_per_row += inner * red
-                        carry_stmts += sp.line_buffer.halo * inner
-                        warmup_stmts += sp.line_buffer.halo * inner * red
-                    else:
-                        stmts_per_row += (
-                            len(sp.shifts) * len(sp.lane_shifts) * inner * red
-                        )
-                for r in rings:
-                    inner = math.prod(
-                        r.span[j] for j in range(r.ndim) if j != r.axis
-                    )
-                    elems = r.halo * inner
-                    if r.stride0 == 1:
-                        # contiguous rotation: a lane-wide VMEM move that
-                        # overlaps the raster on the memory side
-                        carry_stmts += elems
-                    else:
-                        # strided rotation cannot coalesce into wide vector
-                        # moves: serial element shuffles on top of the
-                        # raster, plus the per-step branch machinery
-                        rotate += float(elems) + RING_STEP_OVERHEAD_CYCLES
-                latency = max(_stage_latency(ns) for ns, _, _ in members)
-                cost = scheduler_cost(
-                    e0_out, stmts_per_row, latency, bytes_per_row, fixed_bytes,
-                    carry_stmts=carry_stmts, warmup_stmts=warmup_stmts,
-                    rotate_cycles=rotate,
-                )
             bh = plan_affine_stage(
                 e0_out, bytes_per_row, fixed_bytes,
                 vmem_budget=vmem_budget, cost=cost, align_tpu=align_tpu,
@@ -1617,6 +1671,7 @@ def _build_kernel_group(
         }
         if cost is not None:
             notes["model_cycles"] = cost(bh)
+            notes["bh_priced"] = block_h is None
         return KernelGroup(
             stages=[plans[ns.name] for ns, _, _ in members],
             groups=groups,
@@ -1678,7 +1733,14 @@ def _build_kernel_group(
             return kg_lb
         if not kg_lb.line_buffered and not kg_lb.rings:
             return kg_lb
-        c_lb = kg_lb.notes.get("model_cycles")
+        # carry-vs-recompute arbitration only trusts cycle comparisons
+        # between *model-chosen* block heights (``bh_priced``); an explicit
+        # block_h still records model_cycles (for the autotuner) but keeps
+        # the PR 4 carry-unpriced preference below
+        c_lb = (
+            kg_lb.notes.get("model_cycles")
+            if kg_lb.notes.get("bh_priced") else None
+        )
         if c_lb is None:
             # no scheduler pricing (explicit block_h / other cost model):
             # carry is strictly less traffic and at most equal compute, so
@@ -1689,7 +1751,10 @@ def _build_kernel_group(
             kg_rc = attempt((), False)
         except FusionInfeasible:
             return kg_lb
-        c_rc = kg_rc.notes.get("model_cycles")
+        c_rc = (
+            kg_rc.notes.get("model_cycles")
+            if kg_rc.notes.get("bh_priced") else None
+        )
         if c_rc is not None:
             # recompute must be cheaper by more than one step's fixed
             # overhead (sub-overhead differences are model noise) to justify
@@ -1743,16 +1808,37 @@ def _build_kernel_group(
     if kg_flat is not None and not (lane_possible and overflows(kg_flat)):
         return kg_flat
     # even a one-row full-width panel exceeds the budget (or fusion only
-    # fits lane-blocked): tile the lane dim, widest fitting block first
-    # (128-multiples lead the candidate list, so align_tpu engagement
-    # lands on a lane-tileable width whenever one fits the budget)
-    for bw_cand in lane_width_candidates(e1_out):
+    # fits lane-blocked): tile the lane dim.  ``lane_price="greedy"`` keeps
+    # the PR 5 behavior — widest fitting block wins, first fit returned.
+    # ``"joint"`` (default) builds *every* fitting (bh, bw) pair —
+    # ``attempt_lane`` re-runs block-height selection per width, and
+    # ``model_cycles`` now scales with the lane-step count — and keeps the
+    # modeled-cheapest, tie-broken toward less HBM traffic then wider
+    # blocks.  128-lane multiples (the wide-fetch FW of paper Eq. 2) are
+    # preferred as a *pool* whenever any fits, so pricing never trades a
+    # hardware-tileable width for a sub-cycle modeling difference — the
+    # same budget-beats-alignment rule as plan_affine_stage.
+    fitting: List[KernelGroup] = []
+    for bw_cand in lane_width_candidates(e1_out, order=lane_price):
         try:
             kg2 = attempt_lane(bw_cand)
         except FusionInfeasible:
             continue
-        if not overflows(kg2):
+        if overflows(kg2):
+            continue
+        if lane_price == "greedy":
             return kg2
+        fitting.append(kg2)
+    if fitting:
+        aligned = [kg for kg in fitting if kg.bw % LANE == 0]
+        pool = aligned or fitting
+        best = min(pool, key=lambda kg: (
+            kg.notes.get("model_cycles", float("inf")),
+            kg.hbm_bytes(),
+            -kg.bw,
+        ))
+        best.notes["lane_price"] = "joint"
+        return best
     if kg_flat is not None:
         return kg_flat
     raise FusionInfeasible(
@@ -1781,6 +1867,8 @@ def build_pipeline_plan(
     red_resident: bool = True,
     batch: Optional[int] = None,
     batch_capacity: Optional[int] = None,
+    red_chunk: Optional[int] = None,
+    lane_price: str = "joint",
 ) -> PipelinePlan:
     """``batch=N`` plans a leading grid dim sweeping N independent tiles
     through one ``pallas_call`` per kernel group: every input buffer (and
@@ -1791,7 +1879,13 @@ def build_pipeline_plan(
     ``batch_capacity`` (default ``batch``) sizes the grid in *slots*: a
     plan with ``batch < batch_capacity`` is a ragged final batch whose
     padded slots are masked to exact zeros, so one capacity-sized compile
-    serves any occupancy up to it."""
+    serves any occupancy up to it.
+
+    ``red_chunk`` and ``lane_price`` are schedule knobs surfaced for the
+    autotuner (``backend/autotune``): the grid-reduction chunk size and
+    the budget-driven lane-width policy (``"joint"`` scheduler-priced
+    (bh, bw) selection, ``"greedy"`` the historical widest-first fit) —
+    see :func:`_build_kernel_group`."""
     if batch_capacity is not None and batch is None:
         raise ValueError("batch_capacity requires batch")
     if batch is not None:
@@ -1834,6 +1928,7 @@ def build_pipeline_plan(
         align_tpu=align_tpu, grid_reduction=grid_reduction,
         red_grid_threshold=red_grid_threshold,
         line_buffer=line_buffer, red_resident=red_resident,
+        red_chunk=red_chunk, lane_price=lane_price,
     )
 
     def group_infos(root: str) -> List[Tuple]:
@@ -1874,6 +1969,7 @@ def build_pipeline_plan(
         "cost_model": cost_model, "vmem_budget": vmem_budget,
         "align_tpu": align_tpu, "line_buffer": line_buffer,
         "red_resident": red_resident, "block_w": block_w,
+        "red_chunk": red_chunk, "lane_price": lane_price,
     }
     if batch is not None:
         # the batch dim is a post-processing step over finished per-tile

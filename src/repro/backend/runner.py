@@ -137,24 +137,59 @@ _PIPELINE_CACHE: "OrderedDict[str, PallasPipeline]" = OrderedDict()
 _PIPELINE_CACHE_MAX = 128
 # cache observability: cumulative counters over every ``cache=True``
 # compile (uncached compiles are not cache traffic and are not counted).
-# ``clear_pipeline_cache`` resets them together with the entries, so a
-# bench/serve phase that clears the cache starts its stats from zero.
+# ``clear_pipeline_cache(reset_stats=True)`` resets them together with the
+# entries; by default clearing evicts entries but *keeps* the counters, so
+# a harness that clears between candidates retains its observability.
 _CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
+# the planner's own defaults, mirrored here so cache keys can be
+# normalized without running the planner.  An entry whose value equals the
+# default is dropped before hashing: ``compile_pipeline(app)`` and
+# ``compile_pipeline(app, block_w=None)`` (an explicit default) are the
+# same plan and must share one cache entry — hashing the kwargs dict
+# verbatim silently missed on exactly that drift.  Normalization also
+# keeps every historical key stable when the planner *gains* a keyword:
+# a new knob at its default vanishes from the hash input.
+_PLAN_KWARG_DEFAULTS: Dict[str, object] = dict(
+    block_h=None,
+    block_w=None,
+    lane_block="auto",
+    fuse=True,
+    grid_reduction=True,
+    red_grid_threshold=RED_GRID_THRESHOLD,
+    vmem_budget=VMEM_BYTES,
+    cost_model="scheduler",
+    align_tpu=False,
+    line_buffer="auto",
+    red_resident=True,
+    batch=None,
+    batch_capacity=None,
+    red_chunk=None,
+    lane_price="joint",
+)
 
-def plan_cache_key(pipe: Pipeline, mode: str, plan_kwargs: Mapping) -> str:
-    """Content hash identifying a compiled pipeline: the *inputs* of
-    planning — every normalized stage (zero-based access maps, value
-    expressions, extents), the buffer boxes, the stream element dtype — plus
-    every plan-affecting keyword and the resolved execution mode.  Two
-    pipelines with identical lowered content and parameters share one cache
-    entry; changing any extent, expression, plan knob, or the mode produces
-    a different key.  Frozen-dataclass ``repr``s make the serialization
-    deterministic; planning itself is *not* run to compute the key, which
-    is what lets a cache hit skip re-planning entirely."""
-    h = hashlib.sha256()
-    h.update(mode.encode())
-    h.update(repr(sorted(plan_kwargs.items(), key=lambda kv: kv[0])).encode())
+# the knobs a stored schedule (backend/autotune) may override: the search
+# axes of the autotuner.  Everything else — budgets, batching, alignment —
+# is part of the *problem*, not the schedule, and keys the schedule db.
+TUNABLE_KEYS = frozenset(
+    {"block_h", "block_w", "line_buffer", "red_chunk", "fuse", "lane_price"}
+)
+
+
+def _normalize_plan_kwargs(plan_kwargs: Mapping) -> Dict[str, object]:
+    """Drop default-valued entries (see ``_PLAN_KWARG_DEFAULTS``)."""
+    return {
+        k: v
+        for k, v in plan_kwargs.items()
+        if not (k in _PLAN_KWARG_DEFAULTS and v == _PLAN_KWARG_DEFAULTS[k])
+    }
+
+
+def _hash_pipeline_content(h, pipe: Pipeline) -> None:
+    """Feed the lowered pipeline's content — every normalized stage
+    (zero-based access maps, value expressions, extents), the buffer
+    boxes, the stream element dtype — into ``h``.  Frozen-dataclass
+    ``repr``s make the serialization deterministic."""
     h.update(repr(pipe.output).encode())
     h.update(repr(sorted(pipe.inputs)).encode())
     for name, box in sorted(pipe.buffer_boxes.items()):
@@ -166,12 +201,56 @@ def plan_cache_key(pipe: Pipeline, mode: str, plan_kwargs: Mapping) -> str:
             ns.on_host,
         )).encode())
     h.update(b"elem:f32")
+
+
+def plan_cache_key(pipe: Pipeline, mode: str, plan_kwargs: Mapping) -> str:
+    """Content hash identifying a compiled pipeline: the *inputs* of
+    planning — the lowered pipeline content (see
+    ``_hash_pipeline_content``) — plus every plan-affecting keyword and
+    the resolved execution mode.  Keywords are normalized against the
+    planner defaults first (default-valued entries are dropped), so an
+    explicitly passed default and an omitted keyword hash identically.
+    Two pipelines with identical lowered content and parameters share one
+    cache entry; changing any extent, expression, non-default plan knob,
+    or the mode produces a different key.  Planning itself is *not* run
+    to compute the key, which is what lets a cache hit skip re-planning
+    entirely."""
+    h = hashlib.sha256()
+    h.update(mode.encode())
+    norm = _normalize_plan_kwargs(plan_kwargs)
+    h.update(repr(sorted(norm.items(), key=lambda kv: kv[0])).encode())
+    _hash_pipeline_content(h, pipe)
     return h.hexdigest()
 
 
-def clear_pipeline_cache() -> None:
+def schedule_db_key(pipe: Pipeline, plan_kwargs: Mapping = ()) -> str:
+    """Key a pipeline into the autotuner's schedule database: the same
+    content hash as :func:`plan_cache_key` minus the *tunable* keywords
+    (``TUNABLE_KEYS`` — the schedule itself) and minus the execution
+    mode.  Two compiles that pose the same planning problem — identical
+    lowered content, budget, batching — look up the same stored schedule
+    regardless of which schedule knobs or mode they currently run with."""
+    fixed = {
+        k: v for k, v in dict(plan_kwargs).items() if k not in TUNABLE_KEYS
+    }
+    h = hashlib.sha256()
+    h.update(b"schedule-db:")
+    h.update(repr(sorted(
+        _normalize_plan_kwargs(fixed).items(), key=lambda kv: kv[0]
+    )).encode())
+    _hash_pipeline_content(h, pipe)
+    return h.hexdigest()
+
+
+def clear_pipeline_cache(reset_stats: bool = False) -> None:
+    """Evict every cached pipeline.  The hit/miss/eviction counters are
+    *kept* by default — a harness that clears between measurement
+    candidates (cold-compile timing, the autotuner) retains its
+    observability; pass ``reset_stats=True`` to zero them too (the old
+    behavior, used by phase-scoped reporters like the serve bench)."""
     _PIPELINE_CACHE.clear()
-    _CACHE_STATS.update(hits=0, misses=0, evictions=0)
+    if reset_stats:
+        _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
 
 def pipeline_cache_size() -> int:
@@ -207,7 +286,10 @@ def compile_pipeline(
     red_resident: bool = True,
     batch: Optional[int] = None,
     batch_capacity: Optional[int] = None,
+    red_chunk: Optional[int] = None,
+    lane_price: str = "joint",
     verify: object = "auto",
+    tune: object = False,
 ) -> PallasPipeline:
     """``line_buffer`` picks the recompute-vs-carry mode for fused
     intermediates and shifted input deliveries: ``False`` restores the
@@ -239,7 +321,18 @@ def compile_pipeline(
     only (cache hits were certified when first built), ``True`` also
     re-verifies on cache hits, ``False`` skips verification.  The knob does
     not affect the plan itself, so it is deliberately *not* part of the
-    plan cache key."""
+    plan cache key.
+
+    ``tune`` consults the autotuner's schedule database
+    (``backend/autotune``) before planning: ``"auto"`` (or ``True``) looks
+    up the default on-disk db, a path string/`ScheduleDB` uses that db,
+    ``False`` (default) skips the lookup.  A stored winning schedule
+    overrides only the tunable knobs the caller left at their defaults —
+    an explicit ``block_h=...`` always beats the db — and the overridden
+    kwargs *do* enter the plan cache key, so tuned and heuristic compiles
+    of one pipeline never collide on a cache entry.  A miss (no stored
+    schedule for this pipeline) falls back to the heuristic planner
+    silently."""
     if interpret is not None:
         mode = "interpret" if interpret else "compiled"
     mode = resolve_mode(mode)
@@ -257,9 +350,22 @@ def compile_pipeline(
         red_resident=red_resident,
         batch=batch,
         batch_capacity=batch_capacity,
+        red_chunk=red_chunk,
+        lane_price=lane_price,
     )
     if verify not in (True, False, "auto"):
         raise ValueError(f"verify must be True, False, or 'auto': {verify!r}")
+    if tune is not False and tune is not None:
+        from .autotune import lookup_schedule
+
+        stored = lookup_schedule(pipe, plan_kwargs, db=tune)
+        if stored:
+            for k, v in stored.items():
+                if (
+                    k in TUNABLE_KEYS
+                    and plan_kwargs[k] == _PLAN_KWARG_DEFAULTS[k]
+                ):
+                    plan_kwargs[k] = v
     key: Optional[str] = None
     if cache:
         key = plan_cache_key(pipe, mode, plan_kwargs)
@@ -341,6 +447,8 @@ __all__ = [
     "PallasPipeline",
     "compile_pipeline",
     "plan_cache_key",
+    "schedule_db_key",
+    "TUNABLE_KEYS",
     "clear_pipeline_cache",
     "pipeline_cache_size",
     "pipeline_cache_stats",

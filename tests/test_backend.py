@@ -698,6 +698,95 @@ def test_lane_width_candidates():
     assert lane_width_candidates(1) == [1]
 
 
+def test_lane_width_candidates_joint_order():
+    """order="joint" (the joint (bh, bw) pricer's pool) is a descending
+    superset of the greedy list that adds the low-padding ceil-division
+    widths a narrow extent wants; order="greedy" stays the exact PR 5
+    list, pinning the historical first-fit engagement decisions."""
+    from repro.core.ubplan import lane_width_candidates
+
+    greedy = lane_width_candidates(300)
+    joint = lane_width_candidates(300, order="joint")
+    assert lane_width_candidates(300, order="greedy") == greedy
+    assert set(greedy) <= set(joint)
+    assert sorted(set(joint), reverse=True) == joint    # still descending
+    # ceil-division splits: ceil(300/2)=150, /3=100, /4=75 — none of which
+    # the 128-multiple / power-of-two pools can express
+    assert {150, 100, 75} <= set(joint)
+    assert all(w < 300 for w in joint)
+    # sub-128 widths exist for narrow extents in both orders
+    assert {50, 34, 64} <= set(lane_width_candidates(100, order="joint"))
+    assert lane_width_candidates(1, order="joint") == [1]
+    with pytest.raises(ValueError, match="order"):
+        lane_width_candidates(300, order="widest")
+
+
+def test_joint_lane_pricing_beats_or_matches_greedy():
+    """Budget-driven lane engagement prices every fitting (bh, bw) pair
+    with the scheduler model (model_cycles scales with the lane-step
+    count) and keeps the modeled-cheapest — never worse than the greedy
+    widest-first fit, and still budget-clean and bit-exact.  The greedy
+    policy stays available behind lane_price="greedy"."""
+    app = make_app("unsharp", size=18)
+    budget = 1024
+    greedy = build_pipeline_plan(
+        app.pipeline, vmem_budget=budget, lane_price="greedy"
+    )
+    joint = build_pipeline_plan(app.pipeline, vmem_budget=budget)
+    kj, kg_ = joint.kernels[0], greedy.kernels[0]
+    assert kj.lane_grid is not None and kg_.lane_grid is not None
+    assert kj.vmem_bytes <= budget and kg_.vmem_bytes <= budget
+    assert kj.notes["lane_price"] == "joint"
+    assert "lane_price" not in kg_.notes
+    cj = kj.notes["model_cycles"]
+    cg = kg_.notes["model_cycles"]
+    assert cj <= cg, (kj.bw, cj, kg_.bw, cg)
+    pp = compile_pipeline(app.pipeline, vmem_budget=budget)
+    errs = max_abs_error(pp, _inputs(app))
+    assert max(errs.values()) <= TOL, errs
+
+
+def test_explicit_block_h_records_model_cycles():
+    """Explicit block heights still record model_cycles (the autotuner's
+    uniform pruning signal) but mark the height as not model-chosen, so
+    the carry-vs-recompute arbitration keeps its carry-unpriced
+    preference."""
+    app = make_app("gaussian", size=18)
+    plan = build_pipeline_plan(app.pipeline, block_h=4)
+    kg = plan.kernels[0]
+    assert kg.notes["model_cycles"] > 0
+    assert kg.notes["bh_priced"] is False
+    auto = build_pipeline_plan(app.pipeline)
+    assert auto.kernels[0].notes["bh_priced"] is True
+
+
+def test_red_chunk_override():
+    """red_chunk overrides the grid-reduction chunk size: the grid's
+    reduction steps re-divide accordingly, the plan verifies clean, and
+    the accumulation stays bit-exact (leading-dim chunking preserves the
+    reference's lexicographic order)."""
+    from repro.backend.verify import verify_plan
+
+    app = make_app("matmul", m=16, n=16, k=2048)
+    plan = build_pipeline_plan(app.pipeline, red_chunk=64)
+    kg = plan.kernels[0]
+    assert kg.red_grid is not None and kg.red_grid.chunk == 64
+    assert kg.red_grid.steps == 32 and kg.grid[-1] == 32
+    assert verify_plan(plan) == []
+    assert plan.notes["red_chunk"] == 64
+    # a chunk of 1 declines the grid reduction (pure overhead)
+    flat = build_pipeline_plan(app.pipeline, red_chunk=1)
+    assert flat.kernels[0].red_grid is None
+    pp = compile_pipeline(app.pipeline, red_chunk=64)
+    inputs = _inputs(app)
+    got = np.asarray(pp(inputs), np.float64)
+    a = inputs["A"].astype(np.float64)
+    b = inputs["B"].astype(np.float64)
+    default = compile_pipeline(app.pipeline)
+    assert np.array_equal(got, np.asarray(default(inputs), np.float64))
+    assert float(np.max(np.abs(got - a @ b))) <= 1e-3
+
+
 def test_lane_blocked_grid_bit_exact():
     """Explicit block_w tiles the trailing dim: grid (ceil(e0/bh),
     ceil(e1/bw)), lane-tail masks on non-divisor widths, bit-exact on

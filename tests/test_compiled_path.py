@@ -29,6 +29,7 @@ from repro.backend import (
     clear_pipeline_cache,
     compile_pipeline,
     pipeline_cache_size,
+    pipeline_cache_stats,
     plan_cache_key,
     resolve_mode,
 )
@@ -180,6 +181,59 @@ def test_plan_cache_key_is_deterministic_and_content_keyed():
     assert k1 != plan_cache_key(a3.pipeline, "interpret", kwargs)
     assert k1 != plan_cache_key(a1.pipeline, "compiled", kwargs)
     assert k1 != plan_cache_key(a1.pipeline, "interpret", dict(kwargs, block_h=4))
+
+
+def test_plan_cache_key_normalizes_default_kwargs():
+    """The key-drift bugfix: kwargs are normalized against the planner
+    defaults before hashing, so an explicitly passed default and an
+    omitted keyword produce one key — compile_pipeline(app) and
+    compile_pipeline(app, block_w=None) share a single cache entry
+    instead of silently missing.  Non-default values still miss."""
+    app = make_app("gaussian", size=18)
+    k_bare = plan_cache_key(app.pipeline, "interpret", {})
+    assert k_bare == plan_cache_key(
+        app.pipeline, "interpret", dict(block_w=None)
+    )
+    # the full default kwargs dict compile_pipeline builds hashes the same
+    from repro.backend.runner import _PLAN_KWARG_DEFAULTS
+
+    assert k_bare == plan_cache_key(
+        app.pipeline, "interpret", dict(_PLAN_KWARG_DEFAULTS)
+    )
+    assert k_bare != plan_cache_key(
+        app.pipeline, "interpret", dict(block_w=4)
+    )
+
+    clear_pipeline_cache(reset_stats=True)
+    try:
+        pp1 = compile_pipeline(app.pipeline, cache=True)
+        pp2 = compile_pipeline(app.pipeline, cache=True, block_w=None)
+        assert pp2 is pp1 and pipeline_cache_size() == 1
+        stats = pipeline_cache_stats()
+        assert stats["misses"] == 1 and stats["hits"] == 1
+    finally:
+        clear_pipeline_cache(reset_stats=True)
+
+
+def test_clear_pipeline_cache_preserves_stats_by_default():
+    """clear_pipeline_cache() evicts entries but keeps the hit/miss
+    counters (a measuring harness that clears between candidates retains
+    its observability); reset_stats=True restores the old zeroing."""
+    clear_pipeline_cache(reset_stats=True)
+    try:
+        app = make_app("gaussian", size=18)
+        compile_pipeline(app.pipeline, cache=True)
+        compile_pipeline(app.pipeline, cache=True)
+        clear_pipeline_cache()
+        stats = pipeline_cache_stats()
+        assert stats["entries"] == 0
+        assert stats["misses"] == 1 and stats["hits"] == 1
+        clear_pipeline_cache(reset_stats=True)
+        assert pipeline_cache_stats() == {
+            "hits": 0, "misses": 0, "evictions": 0, "entries": 0,
+        }
+    finally:
+        clear_pipeline_cache(reset_stats=True)
 
 
 def test_cached_pipeline_warm_invocation_is_10x_faster():

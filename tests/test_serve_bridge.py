@@ -115,7 +115,7 @@ def test_server_reports_cache_stats():
     """The bridge's stats() merges its own serving counters with the
     process-wide pipeline-cache counters — one miss for the server's own
     full-capacity compile, hits for later same-capacity servers."""
-    clear_pipeline_cache()
+    clear_pipeline_cache(reset_stats=True)
     app = make_app("gaussian", size=13)
     srv = PipelineServer(app.pipeline, batch_slots=3, block_h=4)
     srv.run(_tiles(app, 4))
@@ -133,7 +133,7 @@ def test_cache_key_includes_batch_kwargs():
     """The bugfix this PR carries: batch/batch_capacity are part of the
     plan cache key, so per-tile and batched compiles (or two capacities)
     never collide in the cache."""
-    clear_pipeline_cache()
+    clear_pipeline_cache(reset_stats=True)
     app = make_app("gaussian", size=13)
     a = compile_pipeline(app.pipeline, block_h=4, cache=True)
     b = compile_pipeline(app.pipeline, block_h=4, cache=True, batch=3)
@@ -146,7 +146,7 @@ def test_cache_key_includes_batch_kwargs():
     again = compile_pipeline(app.pipeline, block_h=4, cache=True, batch=3)
     assert again is b
     assert pipeline_cache_stats()["hits"] == 1
-    clear_pipeline_cache()
+    clear_pipeline_cache(reset_stats=True)
     stats = pipeline_cache_stats()
     assert stats == {"hits": 0, "misses": 0, "evictions": 0, "entries": 0}
 
