@@ -26,10 +26,11 @@ def backend_rows(smoke: bool = False) -> list:
     steady-state the serve path sees).  Returned as dicts so
     ``benchmarks/run.py`` can serialize them to BENCH_backend.json.
 
-    ``smoke=True`` produces just the first two rows (gaussian + matmul) —
-    the CI schema check (``scripts/ci.sh --bench-smoke``) regenerates them
-    and diffs their key sets against the persisted file to catch stale
-    schema drift without paying for the full benchmark."""
+    ``smoke=True`` produces just the fast rows (gaussian + matmul timed,
+    plus the plan-only lane-carry row) — the CI schema check
+    (``scripts/ci.sh --bench-smoke``) regenerates them and diffs their key
+    sets against the persisted file to catch stale schema drift without
+    paying for the full benchmark."""
     from repro.apps.paper_apps import make_app
     from repro.backend import (
         build_pipeline_plan,
@@ -110,6 +111,34 @@ def backend_rows(smoke: bool = False) -> list:
         "max_err_ref": err_ref, "max_err_vs_baseline": vs_hand,
         "grid": list(cs.grid), "vmem_kib": cs.plan.vmem_bytes // 1024,
         "hbm_kib": pp.plan.hbm_bytes() // 1024, "hbm_kib_baseline": None,
+    })
+
+    # lane×carry composition: a wide gaussian lane-blocked at bw=128
+    # carries its column rings across lane steps, so each input row is
+    # fetched once per row sweep instead of once per tap per lane block —
+    # the recompute twin at the same blocking re-reads the lane halo for
+    # every lane step.  Plan-only columns (eval_rows is the FLOP proxy,
+    # hbm_kib the traffic); cheap enough to sit in the smoke set so
+    # --bench-smoke schema-checks the row
+    app = make_app("gaussian", size=33, width=255)
+    carry = build_pipeline_plan(app.pipeline, block_w=128)   # auto: carries
+    rec = build_pipeline_plan(app.pipeline, block_w=128, line_buffer=False)
+    kg_c = carry.kernels[0]
+    rows.append({
+        "kernel": "gaussian_lane_carry", "case": "33x255",
+        "baseline": "lane-recompute",
+        "us_generated": None, "us_baseline": None,
+        "max_err_ref": None, "max_err_vs_baseline": None,
+        "grid": list(kg_c.grid), "bw": kg_c.bw,
+        "lane_carry": kg_c.notes.get("lane_carry"),
+        "lane_rings": sum(
+            1 for kg in carry.kernels for r in kg.rings if r.lane
+        ),
+        "vmem_kib": kg_c.vmem_bytes // 1024,
+        "hbm_kib": carry.hbm_bytes() // 1024,
+        "hbm_kib_baseline": rec.hbm_bytes() // 1024,
+        "eval_rows": carry.total_eval_rows(),
+        "eval_rows_baseline": rec.total_eval_rows(),
     })
 
     if smoke:

@@ -55,8 +55,9 @@ BACKEND_BASELINE_S="${BACKEND_BASELINE_S:-450}"
 BACKEND_BUDGET_MULT="${BACKEND_BUDGET_MULT:-3}"
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
-    # regenerate the two fast benchmark rows and diff their key sets
-    # against BENCH_backend.json — catches stale-schema drift in seconds
+    # regenerate the fast benchmark rows (gaussian + matmul timed, plus
+    # the plan-only lane-carry row) and diff their key sets against
+    # BENCH_backend.json — catches stale-schema drift in seconds
     python -m benchmarks.run --bench-smoke
     exit 0
 fi
@@ -91,7 +92,12 @@ if [[ "${1:-}" == "--backend" ]]; then
     # reference interpreter, including padded grids / masked tails on
     # non-divisor extents and 2-D lane-blocked grids on non-divisor
     # widths, with every carrying plan also diffed bit-exactly against its
-    # recompute-fusion twin.  The sweep is seeded (tests/conftest.
+    # recompute-fusion twin.  The linebuf and sweep stages include the
+    # lane-carry anchors: column rings / lane line buffers engaging under
+    # auto arbitration, beating recompute on eval-rows and HBM traffic,
+    # and staying bit-exact against the reference and the recompute twin
+    # (a wide gaussian at bw=128 fetches each input row once, not once
+    # per tap per lane block).  The sweep is seeded (tests/conftest.
     # SWEEP_SEED) and any hypothesis layer runs derandomized under the
     # registered "sweep" profile, so CI replays the identical case list
     # every run.  Finally the fusion smoke path: compile paper apps through

@@ -118,10 +118,17 @@ class ScheduleDB:
         return p
 
     def lookup(self, key: str) -> Optional[Schedule]:
-        entry = self.entries.get(key)
+        entry = self.lookup_entry(key)
         if entry is None:
             return None
         return dict(entry["schedule"])
+
+    def lookup_entry(self, key: str) -> Optional[Dict]:
+        """Full stored row (schedule + measurements + ``mode``), or None."""
+        entry = self.entries.get(key)
+        if entry is None:
+            return None
+        return dict(entry)
 
     def store(self, key: str, entry: Dict) -> None:
         bad = set(entry["schedule"]) - set(TUNABLE_KEYS)
@@ -164,6 +171,15 @@ def lookup_schedule(
     this pipeline + non-tunable kwargs, or ``None`` on a db miss (the
     caller falls back to the heuristic planner)."""
     return _resolve_db(db).lookup(schedule_db_key(pipe, plan_kwargs))
+
+
+def lookup_schedule_entry(
+    pipe: Pipeline, plan_kwargs: Mapping, db: object = "auto"
+) -> Optional[Dict]:
+    """Like :func:`lookup_schedule` but returns the full stored row — the
+    runner reads ``entry["mode"]`` to warn when an interpret-measured
+    winner is served to a compiled-mode compile."""
+    return _resolve_db(db).lookup_entry(schedule_db_key(pipe, plan_kwargs))
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +253,14 @@ def enumerate_candidates(
     scheds += [
         {"block_h": bh, "block_w": bw}
         for bh in bh_pool[-2:] for bw in bw_pool[:2]
+    ]
+    # lane × carry is a real axis now that the planner composes column
+    # rings with lane grids: a lane-blocked candidate with carry forced
+    # on/off plans differently (and _plan_fingerprint sees the rings), so
+    # enumerate the pairs instead of leaving the axis flattened
+    scheds += [
+        {"block_w": bw, "line_buffer": lb}
+        for bw in bw_pool[:2] for lb in (True, False)
     ]
     scheds += [
         {"block_h": bh, "red_chunk": c}
@@ -512,5 +536,6 @@ __all__ = [
     "default_db_path",
     "enumerate_candidates",
     "lookup_schedule",
+    "lookup_schedule_entry",
     "search",
 ]

@@ -106,7 +106,11 @@ class _StageCtx:
     ``rows`` is the leading (blocked-dim) extent of the evaluation: the
     full panel height by default, or the halo row count for a line-buffer
     warm-up evaluation (``with_rows``), which evaluates only the first
-    ``rows`` rows of a shift's panel."""
+    ``rows`` rows of a shift's panel.  ``cols`` is the trailing (lane-dim)
+    extent under lane blocking: the full block width by default, or the
+    lane-halo column count for a *lane* line-buffer warm-up
+    (``with_cols``), which evaluates only the first ``cols`` columns of a
+    lane shift's panel."""
 
     def __init__(self, kg: KernelGroup, sp: StagePlan):
         self.kg = kg
@@ -122,6 +126,7 @@ class _StageCtx:
         # lane blocking: the trailing pure dim is tiled over grid dim 1
         self.lane = kg.lane_grid is not None and self.streamed
         self.bw = kg.bw
+        self.cols = kg.bw if self.lane else None
         self.lane_dim = sp.nstage.pure_dims[-1] if self.lane else None
         # grid positions, assigned once at the top of the kernel body: in
         # interpret mode ``pl.program_id`` cannot be bound inside a
@@ -141,11 +146,21 @@ class _StageCtx:
         out.block_shape = (rows,) + tuple(self.block_shape[1:])
         return out
 
+    def with_cols(self, cols: int) -> "_StageCtx":
+        """A copy evaluating only the first ``cols`` columns of the panel
+        (the lane-halo warm-up of a lane line buffer)."""
+        import copy
+
+        out = copy.copy(self)
+        out.cols = cols
+        out.block_shape = tuple(self.block_shape[:-1]) + (cols,)
+        return out
+
     def extent(self, dim: str) -> int:
         if dim == self.d0 and self.streamed:
             return self.rows
         if self.lane and dim == self.lane_dim:
-            return self.bw
+            return self.cols
         return self.nstage.extent(dim)
 
     def panel_mask(self):
@@ -213,17 +228,31 @@ def _tap(
         pname = sp.scratch_producer[load_idx]
         slot = la.axes[0].offset_at(rho) + shift
         plb = ctx.kg.stage_plan(pname).line_buffer
-        if plb is not None:
+        lane_sl: object = slice(None)
+        if plb is not None and plb.lane:
+            # lane-line-buffered producer: this row shift's panels live in
+            # one column ring; the lane-shift panel starts ``lslot - lo``
+            # columns in (the column analog of the row-ring tap below)
+            lslot = la.axes[-1].offset_at(rho) + lshift
+            block = scratch[(pname, (slot, None))][...]
+            lead: object = (
+                slice(None) if ctx.rows == ctx.bh else slice(0, ctx.rows)
+            )
+            lane_sl = slice(lslot - plb.lo, lslot - plb.lo + ctx.cols)
+        elif plb is not None:
             # line-buffered producer: the per-shift panel lives at rows
             # [slot - lo, slot - lo + bh) of the persistent ring
             block = scratch[(pname, None)][...]
-            lead: object = slice(slot - plb.lo, slot - plb.lo + ctx.rows)
+            lead = slice(slot - plb.lo, slot - plb.lo + ctx.rows)
         elif ctx.lane:
             # lane-blocked producer: the (row, lane)-shift panel holds the
-            # tap's bw columns exactly (lane offset baked into the slot)
+            # tap's bw columns exactly (lane offset baked into the slot);
+            # a partial-width (warm-up) consumer takes the leading columns
             lslot = la.axes[-1].offset_at(rho) + lshift
             block = scratch[(pname, (slot, lslot))][...]
             lead = slice(None) if ctx.rows == ctx.bh else slice(0, ctx.rows)
+            if ctx.cols != ctx.bw:
+                lane_sl = slice(0, ctx.cols)
         else:
             block = scratch[(pname, slot)][...]
             lead = slice(None) if ctx.rows == ctx.bh else slice(0, ctx.rows)
@@ -233,7 +262,7 @@ def _tap(
                 idx.append(lead)                    # the blocked dim
                 tags.append(ctx.d0)
             elif ctx.lane and j == last:
-                idx.append(slice(None))             # the lane-blocked dim
+                idx.append(lane_sl)                 # the lane-blocked dim
                 tags.append(ax.pure_dim)
             elif ax.pure_dim is not None:
                 ep = ctx.extent(ax.pure_dim)
@@ -252,7 +281,28 @@ def _tap(
         else:
             key = (shift, roff)
         ring_hit = sp.ring_binding[load_idx].get(key) if sp.ring_binding else None
-        if ring_hit is not None:
+        if ring_hit is not None and ctx.kg.rings[ring_hit[0]].lane:
+            # column-ring-delivered input: this tap's window starts t0
+            # lattice *columns* into the ring (rotated per lane step); the
+            # row axis holds exactly this row step's bh delivered rows
+            r_idx, t0 = ring_hit
+            ring = ctx.kg.rings[r_idx]
+            block = scratch[(_RING, r_idx)][...]
+            for j, ax in enumerate(la.axes):
+                if j == ring.axis:
+                    idx.append(slice(t0, t0 + ctx.cols))
+                    tags.append(ax.pure_dim)
+                elif j == ring.row_axis:
+                    idx.append(slice(0, ctx.rows))
+                    tags.append(ctx.d0)
+                elif ax.pure_dim is not None:
+                    ep = ctx.extent(ax.pure_dim)
+                    start = ax.offset_at(rho) - ring.base[j]
+                    idx.append(slice(start, start + ax.stride * (ep - 1) + 1, ax.stride))
+                    tags.append(ax.pure_dim)
+                else:
+                    idx.append(ax.offset_at(rho) - ring.base[j])
+        elif ring_hit is not None:
             # ring-delivered input: this tap's window starts t0 lattice rows
             # into the ring, which the emitter keeps aligned with the grid
             r_idx, t0 = ring_hit
@@ -278,8 +328,11 @@ def _tap(
                     tags.append(ctx.d0)
                 elif ctx.lane and jL is not None and j == jL:
                     # lane-blocked axis: the delivered block is the tap's
-                    # bw columns (lane offset baked into the view start)
-                    idx.append(slice(None))
+                    # bw columns (lane offset baked into the view start); a
+                    # partial-width warm-up takes its leading columns
+                    idx.append(
+                        slice(None) if ctx.cols == ctx.bw else slice(0, ctx.cols)
+                    )
                     tags.append(ax.pure_dim)
                 elif j == g.red_axis and g.resident:
                     # whole operand resident in VMEM: index the global
@@ -554,10 +607,31 @@ class CompiledKernel:
         ring_hit = self._ring_of(load_idx, rho)
         if ring_hit is not None:
             # ring-delivered tap: ring lattice row c maps to buffer element
-            # lo + stride0 * c, and this tap starts t0 rows into the ring
+            # lo + stride0 * c, and this tap starts t0 rows into the ring.
+            # For a column ring the lattice runs along the lane axis —
+            # lane step j's window starts j*bw lattice units in — and the
+            # shared row binding delivers rows in grid lock-step.
             r_idx, t0 = ring_hit
             ring = self.kg.rings[r_idx]
             elem = []
+            if ring.lane:
+                dL = ns.pure_dims[-1]
+                for j, ax in enumerate(la.axes):
+                    if j == ring.axis:
+                        jlane = point[dL] // self.kg.bw
+                        elem.append(ring.lo + ring.stride0 * (
+                            jlane * self.kg.bw + t0 + point[dL] % self.kg.bw
+                        ))
+                    elif j == ring.row_axis:
+                        elem.append(
+                            ring.row_k0 + ring.row_stride * point[d0]
+                        )
+                    else:
+                        e = ax.offset_at(rho)
+                        if ax.pure_dim is not None:
+                            e += ax.stride * point[ax.pure_dim]
+                        elem.append(e)
+                return tuple(elem)
             for j, ax in enumerate(la.axes):
                 if j == ring.axis:
                     elem.append(ring.lo + ring.stride0 * (t0 + point[d0]))
@@ -608,6 +682,10 @@ class CompiledKernel:
         sp = self.kg.output
         if not sp.ring_binding:
             return None
+        if self.kg.lane_grid is not None:
+            return sp.ring_binding[load_idx].get(
+                self._bind_key(load_idx, rho)
+            )
         la = sp.accesses[load_idx]
         j0 = sp.blocked_axis_of[load_idx]
         key = (0, la.axes[j0].offset_at(rho)) if j0 is not None else (0, None)
@@ -635,6 +713,23 @@ class CompiledKernel:
         ring_hit = self._ring_of(load_idx, rho_l)
         if ring_hit is not None:
             ring = self.kg.rings[ring_hit[0]]
+            if ring.lane:
+                if axis_j == ring.axis:
+                    lo = ring.lo + ring.stride0 * lane_step * self.kg.bw
+                    hi = ring.lo + ring.stride0 * (
+                        lane_step * self.kg.bw + self.kg.bw + ring.halo - 1
+                    )
+                    return lo, hi, ring.stride0
+                if axis_j == ring.row_axis:
+                    lo = ring.row_k0 + ring.row_stride * grid_step * self.bh
+                    return (
+                        lo, lo + ring.row_stride * (self.bh - 1),
+                        ring.row_stride,
+                    )
+                return (
+                    ring.base[axis_j],
+                    ring.base[axis_j] + ring.span[axis_j] - 1, 1,
+                )
             if axis_j == ring.axis:
                 lo = ring.lo + ring.stride0 * grid_step * self.bh
                 hi = ring.lo + ring.stride0 * (
@@ -742,10 +837,53 @@ def emit_kernel(
                 jnp.logical_and(i0 == 0, stepb == 0),
             )
 
+        def _lane_carry_guards(reset: bool):
+            """(rotate, warm-up) conditions for a *column* ring.  The lane
+            dim varies fastest, so ``jprog == 0`` recurs at the first lane
+            step of every row step — and hence of every batch slot: the
+            per-row-sweep warm-up subsumes the batch reset.  ``reset=False``
+            (seeded corruption only) emits the genuinely wrong global
+            variant — one warm-up on the very first grid step, rotation
+            everywhere else — which carries the previous row sweep's (and
+            previous tile's) columns forward; rejected statically by rules
+            UB205/UB502."""
+            if reset:
+                return jprog > 0, jprog == 0
+            first = jnp.logical_and(i0 == 0, jprog == 0)
+            if bg is not None:
+                first = jnp.logical_and(first, stepb == 0)
+            return jnp.logical_not(first), first
+
+        def _lane_slice(ndim: int, axis: int, lo: int, hi: int):
+            return tuple(
+                slice(lo, hi) if j == axis else slice(None)
+                for j in range(ndim)
+            )
+
         # input delivery rings: rotate the carried halo, land the new block
         for r_idx, ring in enumerate(kg.rings):
             ref = scratch[(_RING, r_idx)]
             halo = ring.halo
+            if ring.lane:
+                # column ring: rotate/warm on the *lane* axis once per lane
+                # step, land the steady bw-wide block unconditionally (lane
+                # grids exclude reduction grids, so no chunk guard applies)
+                rot_c, warm_c = _lane_carry_guards(ring.batch_reset)
+                bw = kg.bw
+                head = _lane_slice(ring.ndim, ring.axis, 0, halo)
+                tail = _lane_slice(ring.ndim, ring.axis, bw, bw + halo)
+                body = _lane_slice(ring.ndim, ring.axis, halo, halo + bw)
+
+                @pl.when(rot_c)
+                def _lcarry(ref=ref, head=head, tail=tail):
+                    ref[head] = ref[tail]
+
+                @pl.when(warm_c)
+                def _lwarmup(ref=ref, head=head, pi=ring.prefix):
+                    ref[head] = refs[pi][...]
+
+                ref[body] = refs[ring.steady][...]
+                continue
             rot_c, warm_c = _carry_guards(ring.batch_reset)
 
             @pl.when(_guard(rot_c))
@@ -769,7 +907,38 @@ def emit_kernel(
         # one panel per demanded shift
         for sp, key in scratch_entries:
             ctx = ctxs[sp.name]
-            if isinstance(key, tuple):
+            if isinstance(key, tuple) and key[1] is None:
+                # lane line buffer: one column ring per demanded row shift,
+                # rotated per lane step; lane step 0 of every row step
+                # warm-fills the halo columns (a partial-*width* panel at
+                # the lane shift ``lo``), every lane step computes the
+                # bw-wide leading-edge panel at lane shift ``hi``
+                lb = sp.line_buffer
+                halo = lb.halo
+                ref = scratch[(sp.name, key)]
+                nd = len(ctx.block_shape)
+                rot_c, warm_c = _lane_carry_guards(lb.batch_reset)
+                bw = kg.bw
+                head = _lane_slice(nd, nd - 1, 0, halo)
+                tail = _lane_slice(nd, nd - 1, bw, bw + halo)
+                body = _lane_slice(nd, nd - 1, halo, halo + bw)
+
+                @pl.when(rot_c)
+                def _lrotate(ref=ref, head=head, tail=tail):
+                    ref[head] = ref[tail]
+
+                pctx = ctx.with_cols(halo)
+
+                @pl.when(warm_c)
+                def _lwarm(
+                    ref=ref, pctx=pctx, s=key[0], lo=lb.lo, head=head
+                ):
+                    ref[head] = _stage_panel(
+                        pctx, refs, scratch, s, lo, when="lane0"
+                    )
+
+                ref[body] = _stage_panel(ctx, refs, scratch, key[0], lb.hi)
+            elif isinstance(key, tuple):
                 # lane-blocked recompute panel at (row shift, lane shift)
                 scratch[(sp.name, key)][...] = _stage_panel(
                     ctx, refs, scratch, key[0], key[1]
@@ -876,7 +1045,8 @@ def emit_kernel(
             pltpu.VMEM(sp.scratch_shape(kg.bh, key), jnp.float32)
             for sp, key in scratch_entries
         ] + [
-            pltpu.VMEM(r.ring_shape(kg.bh), jnp.float32) for r in kg.rings
+            pltpu.VMEM(r.ring_shape(kg.bh, kg.bw), jnp.float32)
+            for r in kg.rings
         ]
     e0 = kg.e0
     e1 = kg.e1

@@ -134,19 +134,30 @@ class LineBuffer:
     previous tile belong to a different image.  ``False`` is never planned —
     it exists so seeded corruption tests can materialize the
     carried-across-a-batch-boundary bug and prove the verifier rejects it
-    (rule UB502)."""
+    (rule UB502).
+
+    ``lane=True`` is the column variant for lane-blocked kernels: ``lo``
+    and ``hi`` are *lane* shifts, and the carry runs along the lane axis
+    *inside* each row sweep — one ring of ``bw + halo`` columns per
+    demanded row shift, rotated per lane step and re-warmed at lane step 0
+    of every row step (row carry cannot survive a lane grid: between two
+    visits of one row panel every other lane step clobbers the ring)."""
 
     lo: int                           # min consumer-demanded row shift
     hi: int                           # max consumer-demanded row shift
     batch_reset: bool = True          # re-warm at every batch boundary
+    lane: bool = False                # carry along the lane axis instead
 
     @property
     def halo(self) -> int:
-        """Rows carried across grid steps."""
+        """Rows (columns when ``lane``) carried across grid steps."""
         return self.hi - self.lo
 
     def ring_rows(self, bh: int) -> int:
         return bh + self.halo
+
+    def ring_cols(self, bw: int) -> int:
+        return bw + self.halo
 
 
 @dataclass
@@ -157,7 +168,16 @@ class RingStream:
     (``hi``) plus a tiny pinned warm-up view of the ``halo`` rows below it,
     with a VMEM ring carrying the halo between grid steps.  Each input row
     is then *delivered* once instead of once per tap — the paper's
-    line-buffered unified buffer, lifted from pixels to rows."""
+    line-buffered unified buffer, lifted from pixels to rows.
+
+    ``lane=True`` is the *column* variant for lane-blocked 2-D grids:
+    ``axis`` is then the producer's lane axis, ``lo``/``hi``/``stride0``
+    describe the member views' lane starts, and the ring — shape
+    ``(bh, ..., bw + halo)`` — rotates per *lane* step inside the row
+    sweep, re-warming from a lane-pinned prefix view at lane step 0 of
+    every row step.  The shared row-axis binding of the class (every
+    member view has the same blocked axis, start, and stride — it is part
+    of the class key) lives in ``row_axis``/``row_k0``/``row_stride``."""
 
     buffer: str
     axis: int                         # producer axis carried by the ring
@@ -173,20 +193,31 @@ class RingStream:
     batch_reset: bool = True          # re-warm at every batch boundary
                                       # (False only via seeded corruption;
                                       # rejected by verify rule UB502)
+    lane: bool = False                # column ring: carry along the lane axis
+    row_axis: Optional[int] = None    # lane ring: the class's row-blocked axis
+    row_k0: int = 0                   # lane ring: shared row view start
+    row_stride: int = 1               # lane ring: shared row view stride
 
     @property
     def halo(self) -> int:
-        """Carried rows, in lattice units (one unit = ``stride0`` elements)."""
+        """Carried rows (columns when ``lane``), in lattice units (one unit
+        = ``stride0`` elements)."""
         return (self.hi - self.lo) // self.stride0
 
-    def ring_shape(self, bh: int) -> Tuple[int, ...]:
+    def ring_shape(self, bh: int, bw: Optional[int] = None) -> Tuple[int, ...]:
+        if self.lane:
+            return tuple(
+                bh if j == self.row_axis
+                else (bw + self.halo if j == self.axis else self.span[j])
+                for j in range(self.ndim)
+            )
         return tuple(
             bh + self.halo if j == self.axis else self.span[j]
             for j in range(self.ndim)
         )
 
-    def ring_bytes(self, bh: int) -> int:
-        return ELEM_BYTES * math.prod(self.ring_shape(bh))
+    def ring_bytes(self, bh: int, bw: Optional[int] = None) -> int:
+        return ELEM_BYTES * math.prod(self.ring_shape(bh, bw))
 
 
 @dataclass(frozen=True)
@@ -246,6 +277,10 @@ class ViewGroup:
     l0: int = 0                       # lane-axis view start (column shift)
     lane_stride: int = 1              # lane-axis stride baked into the view
     valid1: Optional[int] = None      # valid lane-axis elements of the view
+    lane_pinned: bool = False         # warm-up view of a *lane* RingStream: a
+                                      # fixed ``cols0``-column block delivered
+                                      # once per row step (lane index pinned 0)
+    cols0: int = 0                    # lane-axis block columns when lane_pinned
 
     def view_slices(self, e0: int, e1: Optional[int] = None) -> Tuple[slice, ...]:
         out = []
@@ -256,8 +291,9 @@ class ViewGroup:
                     slice(self.k0, self.k0 + self.stride0 * (rows - 1) + 1, self.stride0)
                 )
             elif j == self.lane_axis:
+                cols = self.cols0 if self.lane_pinned else e1
                 out.append(
-                    slice(self.l0, self.l0 + self.lane_stride * (e1 - 1) + 1,
+                    slice(self.l0, self.l0 + self.lane_stride * (cols - 1) + 1,
                           self.lane_stride)
                 )
             else:
@@ -270,7 +306,7 @@ class ViewGroup:
             if j == self.blocked_axis:
                 out.append(self.rows0 if self.pinned else bh)
             elif j == self.lane_axis:
-                out.append(bw)
+                out.append(self.cols0 if self.lane_pinned else bw)
             elif j == self.red_axis:
                 out.append(self.span[j] if self.resident else self.red_chunk)
             else:
@@ -280,10 +316,13 @@ class ViewGroup:
     def index_map(self, n_grid: int, dim1: str = "red") -> Callable:
         """BlockSpec index map.  Grid dim 0 advances ``blocked_axis``; when
         the kernel has a second grid dim it is either the reduction chunk
-        (``dim1="red"``) or the lane block (``dim1="lane"``)."""
+        (``dim1="red"``) or the lane block (``dim1="lane"``).  A
+        ``lane_pinned`` warm-up view pins its lane index to block 0: the
+        block index changes only with the row step, so Pallas re-fetches it
+        once per row step — exactly the per-row-sweep warm-up cadence."""
         blocked = None if self.pinned else self.blocked_axis
         red = None if self.resident else self.red_axis
-        lane = self.lane_axis
+        lane = None if self.lane_pinned else self.lane_axis
         nd = self.ndim
         if n_grid == 1:
             if blocked is None:
@@ -381,27 +420,55 @@ class StagePlan:
         return ELEM_BYTES * math.prod(self.panel_shape(bh))
 
     def ring_shape(self, bh: int) -> Tuple[int, ...]:
-        """VMEM shape of this stage's line-buffer ring."""
-        assert self.line_buffer is not None
+        """VMEM shape of this stage's (row) line-buffer ring."""
+        assert self.line_buffer is not None and not self.line_buffer.lane
         return (self.line_buffer.ring_rows(bh),) + tuple(
             self.nstage.pure_extents[1:]
         )
 
+    def lane_ring_shape(self, bh: int) -> Tuple[int, ...]:
+        """VMEM shape of one *lane* (column) line-buffer ring: ``bh`` panel
+        rows by ``bw + halo`` columns — one such ring exists per demanded
+        row shift, rotated per lane step."""
+        lb = self.line_buffer
+        assert lb is not None and lb.lane and self.bw is not None
+        inner = list(self.nstage.pure_extents[1:])
+        inner[-1] = lb.ring_cols(self.bw)
+        return (bh, *inner)
+
     def scratch_shape(self, bh: int, key) -> Tuple[int, ...]:
-        """Shape of one scratch entry: the ring (``key is None``) or a
+        """Shape of one scratch entry: a row-line-buffer ring (``key is
+        None``), a lane-line-buffer ring (``(row shift, None)``), or a
         per-shift panel (a row shift, or a (row, lane) shift pair under
         lane blocking)."""
-        return self.ring_shape(bh) if key is None else self.panel_shape(bh)
+        if key is None:
+            return self.ring_shape(bh)
+        if isinstance(key, tuple) and key[1] is None:
+            return self.lane_ring_shape(bh)
+        return self.panel_shape(bh)
 
     # -- verifier-facing metadata ------------------------------------------
 
     def bind_shifts(self) -> Tuple[int, ...]:
         """Row shifts at which this stage's panels are actually materialized
         per grid step: the full demanded shift set in recompute mode, but
-        only ``(lo, hi)`` under a line buffer (warm-up seeds ``lo..hi`` once;
-        every steady step evaluates the single leading-edge panel ``hi``)."""
+        only ``(lo, hi)`` under a row line buffer (warm-up seeds ``lo..hi``
+        once; every steady step evaluates the single leading-edge panel
+        ``hi``).  A *lane* line buffer carries columns, not rows: every
+        demanded row shift keeps its own lane ring, so the row binding set
+        stays the full demanded one."""
         lb = self.line_buffer
-        return self.shifts if lb is None else (lb.lo, lb.hi)
+        return self.shifts if lb is None or lb.lane else (lb.lo, lb.hi)
+
+    def bind_lane_shifts(self) -> Tuple[int, ...]:
+        """Lane shifts at which panels are materialized per lane step: the
+        full demanded set in recompute mode, ``(lo, hi)`` under a lane line
+        buffer (the halo-wide warm-up panel at ``lo`` and the steady
+        leading-edge panel at ``hi``)."""
+        lb = self.line_buffer
+        if lb is not None and lb.lane:
+            return (lb.lo, lb.hi)
+        return self.lane_shifts
 
     def red_extent_map(self, red_grid: Optional["RedGrid"]) -> Dict[str, int]:
         """In-kernel reduction extents, as the emitter iterates them: a dim
@@ -562,7 +629,8 @@ class KernelGroup:
                     rows = g.rows0 if g.pinned else self.e0
                     need.append(g.k0 + g.stride0 * (rows - 1) + 1)
                 elif j == g.lane_axis:
-                    need.append(g.l0 + g.lane_stride * (self.e1 - 1) + 1)
+                    cols = g.cols0 if g.lane_pinned else self.e1
+                    need.append(g.l0 + g.lane_stride * (cols - 1) + 1)
                 else:
                     need.append(g.base[j] + g.span[j])
             prev = out.get(g.buffer)
@@ -615,10 +683,14 @@ class KernelGroup:
         """(stage, key) pairs, in emission order, of every VMEM-resident
         intermediate the kernel materializes: ``key`` is a row shift for a
         recompute-mode panel, a ``(row shift, lane shift)`` pair under lane
-        blocking, or ``None`` for a line-buffer ring."""
+        blocking, ``None`` for a row line-buffer ring, or ``(row shift,
+        None)`` for a lane line-buffer ring (one per demanded row shift)."""
         out: List[Tuple[StagePlan, object]] = []
         for sp in self.stages[:-1]:
-            if sp.line_buffer is not None:
+            lb = sp.line_buffer
+            if lb is not None and lb.lane:
+                out.extend((sp, (s, None)) for s in sp.shifts)
+            elif lb is not None:
                 out.append((sp, None))
             elif self.lane_grid is not None:
                 out.extend(
@@ -633,7 +705,7 @@ class KernelGroup:
         return sum(
             ELEM_BYTES * math.prod(sp.scratch_shape(self.bh, key))
             for sp, key in self.scratch_entries()
-        ) + sum(r.ring_bytes(self.bh) for r in self.rings)
+        ) + sum(r.ring_bytes(self.bh, self.bw) for r in self.rings)
 
     def eval_rows(self) -> Dict[str, int]:
         """Rows of each stage evaluated per kernel invocation — the
@@ -657,6 +729,13 @@ class KernelGroup:
         for sp in self.stages:
             if not (self.streamed and sp.streamed):
                 out[sp.name] = bsteps * sp.e0
+            elif sp.line_buffer is not None and sp.line_buffer.lane:
+                # per (row step, row shift): one full-width panel per lane
+                # step plus one halo-wide warm-up panel (partial widths
+                # count as rows, keeping the metric comparable)
+                out[sp.name] = bsteps * (
+                    steps * self.bh * len(sp.shifts) * (lane_steps + 1)
+                )
             elif sp.line_buffer is not None:
                 out[sp.name] = bsteps * (steps * self.bh + sp.line_buffer.halo)
             else:
@@ -688,7 +767,7 @@ class KernelGroup:
                     ax + bofs for ax, cond in (
                         (0, g.blocked_axis is not None),
                         (1, g.red_axis is not None and not g.resident),
-                        (1, g.lane_axis is not None),
+                        (1, g.lane_axis is not None and not g.lane_pinned),
                     )
                     if cond and ax < len(self.base_grid)
                 )
@@ -701,9 +780,11 @@ class KernelGroup:
                 double_buffered=bool(axes),
             ))
         for r in self.rings:
+            tag = "lane:" if r.lane else ""
             streams.append(StreamPlan(
-                f"ring:{r.buffer}@{r.lo}..{r.hi}", r.ring_shape(self.bh), (),
-                r.ring_bytes(self.bh), double_buffered=False,
+                f"ring:{tag}{r.buffer}@{r.lo}..{r.hi}",
+                r.ring_shape(self.bh, self.bw), (),
+                r.ring_bytes(self.bh, self.bw), double_buffered=False,
             ))
         for sp, key in self.scratch_entries():
             tag = "ring" if key is None else str(key)
@@ -776,11 +857,13 @@ class KernelGroup:
             if g.pinned:
                 deliveries = 1
             elif self.lane_grid is not None:
-                if g.lane_axis is not None:
+                if g.lane_axis is not None and not g.lane_pinned:
                     # the inner lane index cycles every outer row step, so
                     # the block index changes on every grid step
                     deliveries = steps0 * dim1_steps
                 elif g.blocked_axis is not None:
+                    # lane-less row streams and lane-pinned warm-up views:
+                    # the block index changes only with the row step
                     deliveries = steps0
                 else:
                     deliveries = 1
@@ -901,6 +984,8 @@ def scheduler_cost(
     warmup_stmts: int = 0,
     rotate_cycles: float = 0.0,
     lane_steps: int = 1,
+    carry_stmts_per_row: int = 0,
+    lane_warmup_stmts: int = 0,
 ) -> Callable[[int], float]:
     """Price a candidate block height with the §V-B cycle model.
 
@@ -943,18 +1028,34 @@ def scheduler_cost(
     lane widths — a narrow block's cheaper per-step panel no longer hides
     the extra grid steps it costs — i.e. joint (bh, bw) pricing instead
     of the greedy widest-fit lane selection.
+
+    ``carry_stmts_per_row`` and ``lane_warmup_stmts`` price *lane* carry
+    (column rings and lane line buffers of a 2-D grid): rotating a column
+    ring copies ``carry_stmts_per_row`` elements per panel row every grid
+    step — a VMEM move like ``carry_stmts``, but scaling with the block
+    height because every carried column spans the whole row panel — and
+    the lane warm-up re-fires once per *row step* (not once per kernel),
+    evaluating ``lane_warmup_stmts`` statements per panel row each time.
     """
     def cost(bh: int) -> float:
         steps = _cdiv(e0, bh) * lane_steps
         compute = raster_cycles((bh, max(stmts_per_row, 1)), latency)
         dma = (bytes_per_row * bh) / HBM_BYTES_PER_CYCLE
-        if carry_stmts:
-            dma += carry_stmts * ELEM_BYTES / VMEM_BYTES_PER_CYCLE
+        if carry_stmts or carry_stmts_per_row:
+            dma += (
+                (carry_stmts + carry_stmts_per_row * bh)
+                * ELEM_BYTES / VMEM_BYTES_PER_CYCLE
+            )
         per_step = max(compute, dma) + rotate_cycles + STEP_OVERHEAD_CYCLES
         fill = min(compute, dma) + fixed_bytes / HBM_BYTES_PER_CYCLE
         if warmup_stmts:
             fill += raster_cycles((warmup_stmts,), latency)
-        return steps * per_step + fill
+        total = steps * per_step + fill
+        if lane_warmup_stmts:
+            total += _cdiv(e0, bh) * raster_cycles(
+                (bh, lane_warmup_stmts), latency
+            )
+        return total
 
     return cost
 
@@ -1237,6 +1338,107 @@ def _ring_rewrite(
     return new_groups, rings, gmap, ring_map
 
 
+def _lane_ring_rewrite(
+    groups: List[ViewGroup], e0_out: int, e1_out: int, banned: Set[Tuple]
+) -> Tuple[List[ViewGroup], List[RingStream], Dict[int, int], Dict[int, Tuple[int, int]]]:
+    """Column analog of :func:`_ring_rewrite` for lane-blocked kernels:
+    collapse *lane*-shifted view classes into per-lane-step ring streams.
+
+    Views of one buffer that share their entire row binding (blocked axis,
+    start, stride — all part of the class key) and differ only in their
+    lane-axis start (same lane axis, stride, and start residue) deliver
+    column windows shifted by whole lane-lattice units.  Each class becomes
+    one streaming view at the leading lane start ``hi`` plus a *lane-pinned*
+    warm-up view of the ``halo`` columns below it (fetched once per row
+    step — its lane block index is pinned to 0), with a
+    ``(bh, ..., bw + halo)`` VMEM ring rotated by the emitter once per lane
+    step.  Each input row is then delivered once per row sweep instead of
+    once per lane tap."""
+    classes: Dict[Tuple, List[int]] = {}
+    for gi, g in enumerate(groups):
+        if (
+            g.lane_axis is None or g.blocked_axis is None
+            or g.red_axis is not None or g.pinned or g.lane_pinned
+        ):
+            continue
+        key = (
+            "lane", g.buffer, g.lane_axis, g.lane_stride,
+            g.l0 % g.lane_stride, g.blocked_axis, g.k0, g.stride0,
+        )
+        if key in banned:
+            continue
+        classes.setdefault(key, []).append(gi)
+    specs = sorted(
+        (kv for kv in classes.items() if len(kv[1]) >= 2),
+        key=lambda kv: min(kv[1]),
+    )
+    if not specs:
+        return groups, [], {gi: gi for gi in range(len(groups))}, {}
+    member = {gi for _, idxs in specs for gi in idxs}
+    new_groups: List[ViewGroup] = []
+    gmap: Dict[int, int] = {}
+    for gi, g in enumerate(groups):
+        if gi not in member:
+            gmap[gi] = len(new_groups)
+            new_groups.append(g)
+    rings: List[RingStream] = []
+    ring_map: Dict[int, Tuple[int, int]] = {}
+    for key, idxs in specs:
+        ms = [groups[i] for i in idxs]
+        axL, lstride, nd = ms[0].lane_axis, ms[0].lane_stride, ms[0].ndim
+        ax0, k0, rstride = ms[0].blocked_axis, ms[0].k0, ms[0].stride0
+        lo = min(g.l0 for g in ms)
+        hi = max(g.l0 for g in ms)
+        halo = (hi - lo) // lstride
+        base: List[int] = []
+        span: List[int] = []
+        for j in range(nd):
+            if j == axL:
+                base.append(lo)
+                span.append(0)
+            elif j == ax0:
+                base.append(k0)
+                span.append(0)
+            else:
+                b = min(g.base[j] for g in ms)
+                t = max(g.base[j] + g.span[j] for g in ms)
+                base.append(b)
+                span.append(t - b)
+        steady_base = list(base)
+        steady_base[axL] = hi
+        steady_base[ax0] = k0
+        steady_span = list(span)
+        steady_span[axL] = e1_out
+        steady_span[ax0] = e0_out
+        si = len(new_groups)
+        new_groups.append(ViewGroup(
+            ms[0].buffer, nd, ax0, k0, rstride, None, 1,
+            base=steady_base, span=steady_span, valid0=e0_out,
+            lane_axis=axL, l0=hi, lane_stride=lstride, valid1=e1_out,
+        ))
+        prefix_base = list(base)
+        prefix_base[axL] = lo
+        prefix_base[ax0] = k0
+        prefix_span = list(span)
+        prefix_span[axL] = halo
+        prefix_span[ax0] = e0_out
+        pi = len(new_groups)
+        new_groups.append(ViewGroup(
+            ms[0].buffer, nd, ax0, k0, rstride, None, 1,
+            base=prefix_base, span=prefix_span, valid0=e0_out,
+            lane_axis=axL, l0=lo, lane_stride=lstride, valid1=None,
+            lane_pinned=True, cols0=halo,
+        ))
+        r = len(rings)
+        rings.append(RingStream(
+            ms[0].buffer, axL, lstride, lo, hi, si, pi, nd, base, span,
+            key=key, lane=True, row_axis=ax0, row_k0=k0, row_stride=rstride,
+        ))
+        for gi in idxs:
+            ring_map[gi] = (r, (groups[gi].l0 - lo) // lstride)
+    return new_groups, rings, gmap, ring_map
+
+
 def _build_kernel_group(
     members: List[Tuple[NormalizedStage, List[LoadAccess], bool]],
     buffer_shapes: Mapping[str, Tuple[int, ...]],
@@ -1338,6 +1540,9 @@ def _build_kernel_group(
     def assemble(
         lb_names: Set[str], use_rings: bool, banned: Set[Tuple],
         bw: Optional[int] = None,
+        lane_lb_names: Set[str] = frozenset(),
+        use_lane_rings: bool = False,
+        lane_banned: Set[Tuple] = frozenset(),
     ) -> KernelGroup:
         lane = bw is not None
         plans = {
@@ -1354,6 +1559,10 @@ def _build_kernel_group(
         for n in lb_names:
             s = shifts_of[n]
             plans[n].line_buffer = LineBuffer(s[0], s[-1])
+        for n in lane_lb_names:
+            assert lane and lane_shifts_of is not None and n not in lb_names
+            s = lane_shifts_of[n]
+            plans[n].line_buffer = LineBuffer(s[0], s[-1], lane=True)
 
         # -- view groups for boundary loads ----------------------------------
         groups: List[ViewGroup] = []
@@ -1381,10 +1590,11 @@ def _build_kernel_group(
                 red_ext[red_grid.dim] = red_grid.chunk
             # a line-buffered stage evaluates panels only at the steady-state
             # shift (hi) and the warm-up shift (lo), so only those bindings
-            # — and hence only those view starts — exist
-            lb = sp.line_buffer
-            bind_shifts = sp.shifts if lb is None else (lb.lo, lb.hi)
-            bind_lanes = sp.lane_shifts if lane else (0,)
+            # — and hence only those view starts — exist; a *lane* line
+            # buffer trims the lane binding set the same way while the row
+            # set stays the full demanded one (one ring per row shift)
+            bind_shifts = sp.bind_shifts()
+            bind_lanes = sp.bind_lane_shifts() if lane else (0,)
             lane_dim = ns.pure_dims[-1] if lane else None
             for k, la in enumerate(acc):
                 if la.buffer in names:
@@ -1490,6 +1700,23 @@ def _build_kernel_group(
                             else:
                                 kept[bk] = gmap[gi]
                         sp.view_binding[li] = kept
+        if use_lane_rings and lane and kernel_streamed:
+            groups, lrings, lgmap, lring_map = _lane_ring_rewrite(
+                groups, e0_out, e1_out, set(lane_banned)
+            )
+            if lring_map:
+                nr0 = len(rings)
+                for sp in plans.values():
+                    for li, binding in enumerate(sp.view_binding):
+                        kept2: Dict[BindKey, int] = {}
+                        for bk, gi in binding.items():
+                            if gi in lring_map:
+                                r, t0 = lring_map[gi]
+                                sp.ring_binding[li][bk] = (nr0 + r, t0)
+                            else:
+                                kept2[bk] = lgmap[gi]
+                        sp.view_binding[li] = kept2
+            rings = rings + lrings
 
         # -- grid reductions: keep small invariant operands whole in VMEM ----
         # (chunk re-delivery once per row panel is pure refetch traffic)
@@ -1511,7 +1738,8 @@ def _build_kernel_group(
                     rows = g.rows0 if g.pinned else e0_out
                     top = g.k0 + g.stride0 * (rows - 1)
                 elif j == g.lane_axis:
-                    top = g.l0 + g.lane_stride * (e1_out - 1)
+                    cols = g.cols0 if g.lane_pinned else e1_out
+                    top = g.l0 + g.lane_stride * (cols - 1)
                 else:
                     top = g.base[j] + g.span[j] - 1
                 if g.base[j] < 0 or top >= shape[j]:
@@ -1529,7 +1757,7 @@ def _build_kernel_group(
         fixed_bytes = 0
         for g in groups:
             sz = ELEM_BYTES * math.prod(
-                bw if j == g.lane_axis else (
+                (g.cols0 if g.lane_pinned else bw) if j == g.lane_axis else (
                     (g.span[j] if g.resident else g.red_chunk)
                     if j == g.red_axis else g.span[j]
                 )
@@ -1546,6 +1774,15 @@ def _build_kernel_group(
             else:
                 fixed_bytes += sz
         for r in rings:
+            if r.lane:
+                # column ring (bh, ..., bw + halo): the whole ring scales
+                # with the block height; there is no bh-independent part
+                inner = math.prod(
+                    r.span[j] for j in range(r.ndim)
+                    if j != r.axis and j != r.row_axis
+                )
+                bytes_per_row += (bw + r.halo) * inner * ELEM_BYTES
+                continue
             inner = math.prod(
                 r.span[j] for j in range(r.ndim) if j != r.axis
             )
@@ -1558,7 +1795,12 @@ def _build_kernel_group(
             if lane and sh:
                 sh[-1] = bw
             inner = math.prod(sh) if sh else 1
-            if sp.line_buffer is not None:
+            if sp.line_buffer is not None and sp.line_buffer.lane:
+                # one (bh, ..., bw + halo) column ring per demanded row shift
+                shl = list(ns.pure_extents[1:])
+                shl[-1] = bw + sp.line_buffer.halo
+                scratch_rows += len(sp.shifts) * math.prod(shl)
+            elif sp.line_buffer is not None:
                 scratch_rows += inner
                 fixed_bytes += sp.line_buffer.halo * inner * ELEM_BYTES
             else:
@@ -1579,6 +1821,8 @@ def _build_kernel_group(
             stmts_per_row = 0
             carry_stmts = 0
             warmup_stmts = 0
+            carry_stmts_per_row = 0
+            lane_warmup_stmts = 0
             rotate = 0.0
             for ns, _, _ in members:
                 sp = plans[ns.name]
@@ -1589,7 +1833,19 @@ def _build_kernel_group(
                 red = math.prod(ns.red_extents) if ns.red_dims else 1
                 if red_grid is not None:
                     red = (red // ns.red_extents[0]) * red_grid.chunk
-                if sp.line_buffer is not None:
+                if sp.line_buffer is not None and sp.line_buffer.lane:
+                    # per lane step: one bw-wide panel per demanded row
+                    # shift, plus a per-lane-step ring rotation (scaling
+                    # with bh) and a per-row-step halo-wide warm-up
+                    inner_mid = math.prod(ns.pure_extents[1:-1])
+                    stmts_per_row += len(sp.shifts) * inner * red
+                    carry_stmts_per_row += (
+                        len(sp.shifts) * sp.line_buffer.halo * inner_mid
+                    )
+                    lane_warmup_stmts += (
+                        len(sp.shifts) * sp.line_buffer.halo * inner_mid * red
+                    )
+                elif sp.line_buffer is not None:
                     stmts_per_row += inner * red
                     carry_stmts += sp.line_buffer.halo * inner
                     warmup_stmts += sp.line_buffer.halo * inner * red
@@ -1598,6 +1854,15 @@ def _build_kernel_group(
                         len(sp.shifts) * len(sp.lane_shifts) * inner * red
                     )
             for r in rings:
+                if r.lane:
+                    # column-ring rotation copies bh * halo * inner elements
+                    # per lane step — scales with the block height
+                    inner = math.prod(
+                        r.span[j] for j in range(r.ndim)
+                        if j != r.axis and j != r.row_axis
+                    )
+                    carry_stmts_per_row += r.halo * inner
+                    continue
                 inner = math.prod(
                     r.span[j] for j in range(r.ndim) if j != r.axis
                 )
@@ -1629,6 +1894,8 @@ def _build_kernel_group(
                 carry_stmts=carry_stmts, warmup_stmts=warmup_stmts,
                 rotate_cycles=rotate,
                 lane_steps=steps_mult,
+                carry_stmts_per_row=carry_stmts_per_row,
+                lane_warmup_stmts=lane_warmup_stmts,
             )
         if not kernel_streamed:
             bh = e0_out
@@ -1770,12 +2037,111 @@ def _build_kernel_group(
         return kg_lb
 
     # -- lane blocking: explicit block_w, or VMEM-driven auto engagement -----
-    # lane-blocked kernels run in recompute mode: rings and line buffers
-    # only span grid dim 0 and do not compose with a lane grid (yet)
+    # lane-blocked kernels carry *columns*: row rings and row line buffers
+    # cannot survive a lane grid (between two visits of one row panel every
+    # other lane step clobbers the ring), so the carry machinery pivots to
+    # the lane axis — per-row-shift column rings for fused intermediates
+    # and per-lane-step column ring streams for shifted input deliveries,
+    # priced against lane recompute exactly as the row modes are
+    lane_lb_capable: Tuple[str, ...] = ()
+    if multi and want_rings and kernel_streamed and lane_shifts_of is not None:
+        lane_lb_capable = tuple(
+            ns.name for ns, _, _ in members[:-1]
+            if len(lane_shifts_of[ns.name]) >= 2
+        )
+
+    def attempt_lane_carry(bw: int) -> KernelGroup:
+        # column-carry feasibility (halo <= bw) is known up front — the
+        # lane block width is fixed per attempt — but ring classes are not
+        # enumerated until assembly, so iterate the same shed loop rows use
+        llb = {
+            n for n in lane_lb_capable
+            if lane_shifts_of[n][-1] - lane_shifts_of[n][0] <= bw
+        }
+        shed: Set[str] = set(lane_lb_capable) - llb
+        lane_banned: Set[Tuple] = set()
+        for _ in range(len(members) + 8):
+            kg = assemble(
+                set(), False, set(), bw=bw,
+                lane_lb_names=llb, use_lane_rings=True,
+                lane_banned=lane_banned,
+            )
+            bad_lb = {
+                sp.name for sp in kg.stages[:-1]
+                if sp.line_buffer is not None and sp.line_buffer.lane
+                and sp.line_buffer.halo > bw
+            }
+            bad_rings = {r.key for r in kg.rings if r.lane and r.halo > bw}
+            if not bad_lb and not bad_rings:
+                if shed or lane_banned:
+                    kg.notes["lane_carry_shed"] = {
+                        "stages": sorted(shed),
+                        "ring_classes": len(lane_banned),
+                    }
+                return kg
+            llb -= bad_lb
+            shed |= bad_lb
+            lane_banned |= bad_rings
+        return assemble(set(), False, set(), bw=bw)
+
     def attempt_lane(bw: int) -> KernelGroup:
-        kg = assemble(set(), False, set(), bw=bw)
-        kg.notes["lane"] = "forced" if block_w is not None else "auto-vmem"
-        return kg
+        def tag(kg: KernelGroup, reason: str) -> KernelGroup:
+            kg.notes["lane"] = "forced" if block_w is not None else "auto-vmem"
+            kg.notes["lane_carry"] = reason
+            return kg
+
+        if not want_rings:
+            return tag(assemble(set(), False, set(), bw=bw), "carry-disabled")
+        if _cdiv(e1_out, bw) < 2:
+            # one lane step has no step to carry columns *across*: a ring
+            # would tie recompute on every metric, so don't plan one
+            return tag(
+                assemble(set(), False, set(), bw=bw), "single-lane-step"
+            )
+        try:
+            kg_lb = attempt_lane_carry(bw)
+        except FusionInfeasible:
+            return tag(
+                assemble(set(), False, set(), bw=bw), "carry-infeasible"
+            )
+        carried = bool(kg_lb.rings) or any(
+            sp.line_buffer is not None for sp in kg_lb.stages
+        )
+        if not carried:
+            reason = (
+                "halo-exceeds-bw" if "lane_carry_shed" in kg_lb.notes
+                else "nothing-to-carry"
+            )
+            return tag(kg_lb, reason)
+        if line_buffer is True:
+            return tag(kg_lb, "carried")
+        # same arbitration contract as plan_no_lane: only trust cycle
+        # comparisons between model-chosen block heights; prefer carry
+        # (strictly less traffic) when unpriced
+        c_lb = (
+            kg_lb.notes.get("model_cycles")
+            if kg_lb.notes.get("bh_priced") else None
+        )
+        if c_lb is None:
+            kg_lb.notes["linebuf_mode"] = "carry-unpriced"
+            return tag(kg_lb, "carried")
+        try:
+            kg_rc = assemble(set(), False, set(), bw=bw)
+        except FusionInfeasible:
+            return tag(kg_lb, "carried")
+        c_rc = (
+            kg_rc.notes.get("model_cycles")
+            if kg_rc.notes.get("bh_priced") else None
+        )
+        if c_rc is not None:
+            meaningfully_cheaper = c_rc < c_lb - STEP_OVERHEAD_CYCLES
+            cheaper_and_no_worse = (
+                c_rc < c_lb and kg_rc.hbm_bytes() <= kg_lb.hbm_bytes()
+            )
+            if meaningfully_cheaper or cheaper_and_no_worse:
+                kg_rc.notes["linebuf_mode"] = "recompute-cheaper"
+                return tag(kg_rc, "recompute-cheaper")
+        return tag(kg_lb, "carried")
 
     if block_w is not None:
         if lane_possible:

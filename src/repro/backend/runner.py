@@ -27,6 +27,7 @@ differential tests can compare bit-for-bit element-wise.
 from __future__ import annotations
 
 import hashlib
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional
@@ -41,6 +42,50 @@ from repro.frontend.lower import Pipeline, execute_pipeline, normalize_pipeline
 from .codegen import CompiledKernel, emit_kernel, resolve_mode
 from .plan import PipelinePlan, RED_GRID_THRESHOLD, build_pipeline_plan
 from .verify import assert_plan_verified
+
+
+class LaneCarryDegradeWarning(UserWarning):
+    """``line_buffer=True`` was requested but a lane-blocked kernel had to
+    degrade (fully or partially) to recompute mode; the message names the
+    planner's reason (``halo-exceeds-bw``, ``carry-infeasible``, ...)."""
+
+
+class TunedModeMismatchWarning(UserWarning):
+    """A stored schedule measured in one execution mode is being served to
+    a compile in another (interpret rankings may not transfer to TPU)."""
+
+
+def _warn_lane_carry_degrades(plan: PipelinePlan) -> None:
+    """Satellite of the lane×carry fix: an explicit ``line_buffer=True``
+    that the planner cannot honor on a lane-blocked kernel must not pass
+    silently.  The planner records its reason in
+    ``KernelGroup.notes["lane_carry"]`` (and partial sheds in
+    ``notes["lane_carry_shed"]``); surface each one as a named warning."""
+    for kg in plan.kernels:
+        if kg.lane_grid is None:
+            continue
+        reason = kg.notes.get("lane_carry")
+        shed = kg.notes.get("lane_carry_shed")
+        out = kg.stages[-1].name
+        if reason not in (None, "carried"):
+            warnings.warn(
+                f"kernel {out!r}: line_buffer=True requested but the "
+                f"lane-blocked plan degraded to recompute mode "
+                f"(reason: {reason})",
+                LaneCarryDegradeWarning,
+                stacklevel=3,
+            )
+        elif shed:
+            stages = ", ".join(shed.get("stages", ())) or "<none>"
+            warnings.warn(
+                f"kernel {out!r}: line_buffer=True requested but the "
+                f"lane-blocked plan shed part of the carry "
+                f"(stages: {stages}; ring classes dropped: "
+                f"{shed.get('ring_classes', 0)}) — halo exceeds the lane "
+                f"block width for the shed members",
+                LaneCarryDegradeWarning,
+                stacklevel=3,
+            )
 
 
 @dataclass
@@ -332,7 +377,15 @@ def compile_pipeline(
     kwargs *do* enter the plan cache key, so tuned and heuristic compiles
     of one pipeline never collide on a cache entry.  A miss (no stored
     schedule for this pipeline) falls back to the heuristic planner
-    silently."""
+    silently; a hit whose stored row was *measured* in a different
+    execution mode than this compile emits a one-line
+    :class:`TunedModeMismatchWarning` (interpret rankings may not
+    transfer to TPU).
+
+    An explicit ``line_buffer=True`` the planner cannot honor on a
+    lane-blocked kernel (halo wider than the lane block, carry
+    bookkeeping over budget, ...) emits a :class:`LaneCarryDegradeWarning`
+    naming the planner's reason instead of degrading silently."""
     if interpret is not None:
         mode = "interpret" if interpret else "compiled"
     mode = resolve_mode(mode)
@@ -356,11 +409,21 @@ def compile_pipeline(
     if verify not in (True, False, "auto"):
         raise ValueError(f"verify must be True, False, or 'auto': {verify!r}")
     if tune is not False and tune is not None:
-        from .autotune import lookup_schedule
+        from .autotune import lookup_schedule_entry
 
-        stored = lookup_schedule(pipe, plan_kwargs, db=tune)
-        if stored:
-            for k, v in stored.items():
+        entry = lookup_schedule_entry(pipe, plan_kwargs, db=tune)
+        if entry:
+            stored_mode = entry.get("mode")
+            if stored_mode is not None and stored_mode != mode:
+                warnings.warn(
+                    f"serving a schedule measured in {stored_mode!r} mode "
+                    f"to a {mode!r}-mode compile; {stored_mode}-mode "
+                    f"rankings may not transfer — re-tune with "
+                    f"mode={mode!r}",
+                    TunedModeMismatchWarning,
+                    stacklevel=2,
+                )
+            for k, v in entry.get("schedule", {}).items():
                 if (
                     k in TUNABLE_KEYS
                     and plan_kwargs[k] == _PLAN_KWARG_DEFAULTS[k]
@@ -378,6 +441,8 @@ def compile_pipeline(
             return hit
         _CACHE_STATS["misses"] += 1
     plan = build_pipeline_plan(pipe, **plan_kwargs)
+    if plan_kwargs.get("line_buffer") is True:
+        _warn_lane_carry_degrades(plan)
     if verify is not False:
         assert_plan_verified(plan)
     kernels = [emit_kernel(kg, mode=mode) for kg in plan.kernels]
@@ -444,7 +509,9 @@ def max_abs_error(
 
 
 __all__ = [
+    "LaneCarryDegradeWarning",
     "PallasPipeline",
+    "TunedModeMismatchWarning",
     "compile_pipeline",
     "plan_cache_key",
     "schedule_db_key",

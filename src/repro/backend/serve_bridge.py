@@ -16,13 +16,22 @@ batch is padded to capacity with zero tiles via ``serve.engine.pad_to_slots``
 and the filler slots' outputs are discarded, which keeps the valid slots'
 emission identical to the unbatched path (see ``_StageCtx.panel_mask`` on
 why an in-kernel batch mask would break bit-exactness).
+
+One server can juggle *several* tile shapes: :meth:`PipelineServer.register`
+adds another pipeline (same serving contract, different extents) to a
+per-shape dispatch table, :meth:`~PipelineServer.submit` routes each request
+to its registered shape (anything unregistered is rejected with the tile
+shapes it *could* have matched), and :meth:`~PipelineServer.step` dispatches
+the longest same-shape run at the head of the FIFO queue — drain order is
+preserved across shapes, and the batch-keyed plan cache amortizes the extra
+compiles exactly as it does across servers.
 """
 
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Mapping, Optional, Union
+from typing import Deque, Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
@@ -49,6 +58,13 @@ class PipelineServer:
     up to ``batch_slots`` pending requests in a single batched pipeline
     dispatch — and :meth:`run` drains the queue.  Completed requests carry
     ``outputs`` (one array per pipeline kernel) and ``done=True``.
+
+    :meth:`register` adds further pipelines (other tile shapes) to the
+    server's per-shape dispatch table; ``submit`` routes each request by
+    its input tile shapes and rejects anything unregistered.  ``step``
+    always dispatches the longest consecutive same-shape run at the head
+    of the queue, so completion order stays submission order even under
+    mixed-shape traffic.
     """
 
     def __init__(
@@ -61,30 +77,52 @@ class PipelineServer:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         self.pipe = pipe
         self.batch_slots = batch_slots
-        # full-capacity plan: ragged service steps pad to capacity instead
-        # of recompiling at a smaller batch, so the warm path is one cache
-        # hit per dispatch
-        compile_kwargs.setdefault("cache", True)
-        self.pipeline: PallasPipeline = compile_pipeline(
-            pipe,
-            batch=batch_slots,
-            batch_capacity=batch_slots,
-            **compile_kwargs,
-        )
-        self.pending: Deque[TileRequest] = deque()
+        # per-shape dispatch table: shape signature -> (pipeline source,
+        # compiled full-capacity batched pipeline)
+        self._table: Dict[Tuple, Tuple[Pipeline, PallasPipeline]] = {}
+        self.pipeline: PallasPipeline = self.register(pipe, **compile_kwargs)
+        self.pending: Deque[Tuple[Tuple, TileRequest]] = deque()
         self.served = 0
         self.dispatches = 0
 
     # -- request lifecycle --------------------------------------------------
 
-    def _tile_shape(self, name: str) -> tuple:
-        return tuple(self.pipe.buffer_boxes[name].extents)
+    @staticmethod
+    def _tile_shape(pipe: Pipeline, name: str) -> tuple:
+        return tuple(pipe.buffer_boxes[name].extents)
 
-    def _zero_request(self) -> TileRequest:
+    @classmethod
+    def _shape_key(cls, pipe: Pipeline) -> Tuple:
+        """A pipeline's serving signature: its sorted (input, shape) pairs."""
+        return tuple(sorted(
+            (n, cls._tile_shape(pipe, n)) for n in pipe.inputs
+        ))
+
+    def register(self, pipe: Pipeline, **compile_kwargs) -> PallasPipeline:
+        """Add ``pipe`` (another tile shape of the serving contract) to the
+        dispatch table, compiled at full slot capacity.  Returns the
+        compiled pipeline; the batch-keyed plan cache (on by default) makes
+        re-registering a shape — here or on another server — a cache hit
+        instead of a recompile."""
+        # full-capacity plan: ragged service steps pad to capacity instead
+        # of recompiling at a smaller batch, so the warm path is one cache
+        # hit per dispatch
+        compile_kwargs.setdefault("cache", True)
+        pp = compile_pipeline(
+            pipe,
+            batch=self.batch_slots,
+            batch_capacity=self.batch_slots,
+            **compile_kwargs,
+        )
+        self._table[self._shape_key(pipe)] = (pipe, pp)
+        return pp
+
+    @staticmethod
+    def _zero_request(pipe: Pipeline) -> TileRequest:
         return TileRequest(
             inputs={
-                n: np.zeros(self._tile_shape(n), np.float32)
-                for n in self.pipe.inputs
+                n: np.zeros(PipelineServer._tile_shape(pipe, n), np.float32)
+                for n in pipe.inputs
             },
             filler=True,
         )
@@ -92,7 +130,9 @@ class PipelineServer:
     def submit(
         self, request: Union[TileRequest, Mapping[str, np.ndarray]]
     ) -> TileRequest:
-        """Queue one tile; returns the (possibly wrapped) request object."""
+        """Queue one tile; returns the (possibly wrapped) request object.
+        The request is routed by its input tile shapes: a shape matching no
+        :meth:`register`\\ ed pipeline is rejected up front."""
         req = (
             request
             if isinstance(request, TileRequest)
@@ -104,41 +144,63 @@ class PipelineServer:
                     f"request is missing input {n!r}; the pipeline requires "
                     f"{sorted(self.pipe.inputs)}"
                 )
-            got = tuple(np.shape(req.inputs[n]))
-            want = self._tile_shape(n)
-            if got != want:
-                raise ValueError(
-                    f"request input {n!r}: tile shape {got} != declared "
-                    f"extent {want}"
-                )
-        self.pending.append(req)
-        return req
+        for key, (pipe, _pp) in self._table.items():
+            want = dict(key)
+            if all(
+                n in req.inputs
+                and tuple(np.shape(req.inputs[n])) == want[n]
+                for n in pipe.inputs
+            ):
+                self.pending.append((key, req))
+                return req
+        got = {
+            n: tuple(np.shape(req.inputs[n]))
+            for n in sorted(self.pipe.inputs)
+            if n in req.inputs
+        }
+        raise ValueError(
+            f"request input tile shape {got} matches no registered "
+            f"pipeline; registered shapes: "
+            f"{[dict(k) for k in self._table]}"
+        )
 
     def step(self) -> List[TileRequest]:
         """Service one batch; returns the requests completed this step
-        (empty when the queue is empty)."""
-        k = min(self.batch_slots, len(self.pending))
-        if k == 0:
+        (empty when the queue is empty).  One dispatch serves one shape:
+        the longest consecutive same-shape run at the head of the queue
+        (up to ``batch_slots``), so mixed-shape traffic completes in
+        submission order."""
+        if not self.pending:
             return []
-        reqs = [self.pending.popleft() for _ in range(k)]
-        slots = pad_to_slots(reqs, self.batch_slots, self._zero_request)
+        key = self.pending[0][0]
+        reqs: List[TileRequest] = []
+        while (
+            self.pending
+            and len(reqs) < self.batch_slots
+            and self.pending[0][0] == key
+        ):
+            reqs.append(self.pending.popleft()[1])
+        pipe, pipeline = self._table[key]
+        slots = pad_to_slots(
+            reqs, self.batch_slots, lambda: self._zero_request(pipe)
+        )
         ins = {
             n: np.stack(
                 [np.asarray(r.inputs[n], np.float32) for r in slots]
             )
-            for n in self.pipe.inputs
+            for n in pipe.inputs
         }
-        bufs = self.pipeline.run(ins)
+        bufs = pipeline.run(ins)
         # one host conversion per kernel per dispatch — slicing per slot on
         # the jax array would pay a separate device sync per tile
         outs = {
             ck.name: np.asarray(bufs[ck.name])
-            for ck in self.pipeline.kernels
+            for ck in pipeline.kernels
         }
         for b, req in enumerate(reqs):  # filler slots are never read back
             req.outputs = {name: a[b] for name, a in outs.items()}
             req.done = True
-        self.served += k
+        self.served += len(reqs)
         self.dispatches += 1
         return reqs
 
@@ -161,6 +223,7 @@ class PipelineServer:
             "served": self.served,
             "dispatches": self.dispatches,
             "batch_slots": self.batch_slots,
+            "shapes": len(self._table),
             **pipeline_cache_stats(),
         }
 

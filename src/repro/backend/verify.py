@@ -24,7 +24,18 @@ carries the masking metadata (``PaddedGrid``/``lane_grid``/``RedGrid``) the
 emitter keys its iota masks on, with mutually consistent fields; ring
 warm-up views cover exactly the carried halo before any steady-state read,
 and line-buffer halos fit the block (no torn rotates, no uninitialized
-carried rows).
+carried rows).  UB205 is the lane (column) variant of that carry model:
+under a lane-blocked 2-D grid the only sound carry structures are *column*
+rings — ``(bh, ..., bw + halo)`` state rotated once per lane step and
+re-warmed from a lane-pinned prefix at lane step 0 of every row step — and
+the rule proves the warm-up covers exactly the carried columns, the steady
+view streams from the leading lane start, the rotate source never overlaps
+unrefreshed columns (``halo <= bw``), and the ``(row, lane)`` sweep
+accounts every column exactly once (batch-composed through ``bofs``: the
+lane warm-up guard fires at ``jprog == 0``, which recurs at every row step
+of every batch slot).  Row-carry structures composed with a lane grid are
+rejected by the same rule — between two visits of a row panel every lane
+step clobbers a row ring.
 
 ``UB3xx`` — **write disjointness / exactly-once**.  No two grid steps write
 the same output element except through a declared ``RedGrid`` accumulation;
@@ -89,6 +100,8 @@ RULES: Dict[str, str] = {
     "UB202": "ring warm-up: the pinned prefix covers the halo before any read",
     "UB203": "line-buffer carry: halo fits the block; shifts span lo..hi",
     "UB204": "reduction tails: RedGrid covers the true extent, ceil-stepped",
+    "UB205": "lane carry: column rings warm, rotate, and cover the (row, "
+             "lane) sweep exactly once; no row carry under a lane grid",
     "UB301": "exactly-once: extra grid dims are declared; rows cover the extent",
     "UB302": "eval accounting: derived shift sets and eval rows match the plan",
     "UB401": "VMEM re-summation: stream/ring/scratch bytes match vmem_bytes()",
@@ -214,11 +227,14 @@ def _check_view_bounds(
                 ivs.append((0, rows - 1))
                 exprs.append(AffineExpr.var(d) * g.stride0 + AffineExpr.constant(g.k0))
             elif j == g.lane_axis:
-                e1 = kg.e1 if kg.e1 is not None else 1
-                if e1 <= 0:
-                    bad = f"degenerate lane axis {j}: {e1} lanes"
+                cols = (
+                    g.cols0 if g.lane_pinned
+                    else (kg.e1 if kg.e1 is not None else 1)
+                )
+                if cols <= 0:
+                    bad = f"degenerate lane axis {j}: {cols} columns"
                     break
-                ivs.append((0, e1 - 1))
+                ivs.append((0, cols - 1))
                 exprs.append(
                     AffineExpr.var(d) * g.lane_stride + AffineExpr.constant(g.l0)
                 )
@@ -279,6 +295,18 @@ def _check_block_taps(kg: KernelGroup, out: List[PlanViolation]) -> None:
                             f"group has k0={g.k0}",
                             stage=sp.name, view=label, witness=(g.k0,),
                         ))
+                if (
+                    g.lane_axis is not None and not g.lane_pinned
+                    and len(bk) >= 4 and bk[3] is not None
+                ):
+                    want_l0 = bk[3] + g.lane_stride * bk[2]
+                    if g.l0 != want_l0:
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"binding {bk} implies lane start {want_l0}, "
+                            f"group has l0={g.l0}",
+                            stage=sp.name, view=label, witness=(g.l0,),
+                        ))
                 for j, ax in enumerate(la.axes):
                     if j == g.blocked_axis or j == g.lane_axis:
                         continue                 # block-relative; tile by bh/bw
@@ -324,27 +352,60 @@ def _check_block_taps(kg: KernelGroup, out: List[PlanViolation]) -> None:
                     ))
                     continue
                 r = kg.rings[ri]
-                label = f"ring:{r.buffer}[{ri}]"
+                label = f"ring:{'lane:' if r.lane else ''}{r.buffer}[{ri}]"
                 shift, off = bk[0], bk[1]
-                start = off + r.stride0 * shift - r.lo
-                if start % r.stride0 != 0 or start // r.stride0 != t0:
-                    out.append(PlanViolation(
-                        "UB102", kg.name,
-                        f"ring tap {bk} starts at row {t0}, but its view "
-                        f"start implies row {start}/{r.stride0}",
-                        stage=sp.name, view=label, witness=(t0,),
-                    ))
-                if not (0 <= t0 <= r.halo):
-                    out.append(PlanViolation(
-                        "UB102", kg.name,
-                        f"ring tap row {t0} outside the carried halo "
-                        f"[0, {r.halo}] — the tap window [{t0}, {t0}+bh) "
-                        f"escapes the {r.halo}+bh-row ring",
-                        stage=sp.name, view=label, witness=(t0,),
-                    ))
+                if r.lane:
+                    # column ring: the tap column t0 is implied by the
+                    # binding's *lane* start, and the shared row binding of
+                    # the delivery class must match the one the tap uses —
+                    # drift in either reads the wrong carried column
+                    lshift, loff = bk[2], bk[3]
+                    lstart = loff + r.stride0 * lshift - r.lo
+                    if lstart % r.stride0 != 0 or lstart // r.stride0 != t0:
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"lane ring tap {bk} starts at column {t0}, but "
+                            f"its lane start implies column "
+                            f"{lstart}/{r.stride0}",
+                            stage=sp.name, view=label, witness=(t0,),
+                        ))
+                    if not (0 <= t0 <= r.halo):
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"lane ring tap column {t0} outside the carried "
+                            f"halo [0, {r.halo}] — the tap window "
+                            f"[{t0}, {t0}+bw) escapes the {r.halo}+bw-column "
+                            f"ring",
+                            stage=sp.name, view=label, witness=(t0,),
+                        ))
+                    if off is not None and off + r.row_stride * shift != r.row_k0:
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"lane ring tap {bk} implies row start "
+                            f"{off + r.row_stride * shift}, but the delivery "
+                            f"class is bound at row_k0={r.row_k0}",
+                            stage=sp.name, view=label, witness=(r.row_k0,),
+                        ))
+                else:
+                    start = off + r.stride0 * shift - r.lo
+                    if start % r.stride0 != 0 or start // r.stride0 != t0:
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"ring tap {bk} starts at row {t0}, but its view "
+                            f"start implies row {start}/{r.stride0}",
+                            stage=sp.name, view=label, witness=(t0,),
+                        ))
+                    if not (0 <= t0 <= r.halo):
+                        out.append(PlanViolation(
+                            "UB102", kg.name,
+                            f"ring tap row {t0} outside the carried halo "
+                            f"[0, {r.halo}] — the tap window [{t0}, {t0}+bh) "
+                            f"escapes the {r.halo}+bh-row ring",
+                            stage=sp.name, view=label, witness=(t0,),
+                        ))
                 for j, ax in enumerate(la.axes):
-                    if j == r.axis:
-                        continue
+                    if j == r.axis or (r.lane and j == r.row_axis):
+                        continue                 # tiled by bw / bh
                     lo, hi = _tap_interval(ax, red_ext, ext_of)
                     w = _interval_witness(lo - r.base[j], hi - r.base[j], r.span[j])
                     if w is not None:
@@ -397,6 +458,30 @@ def _check_scratch_taps(kg: KernelGroup, out: List[PlanViolation]) -> None:
             for s in sp.bind_shifts():
                 for o in row_offs:
                     slot = o + s
+                    if plb is not None and plb.lane:
+                        # producer carried in per-row-shift *column* rings:
+                        # the row slot must name a planned ring, and every
+                        # lane tap must land inside the carried lane window
+                        if slot not in psp.shifts:
+                            out.append(PlanViolation(
+                                "UB103", kg.name,
+                                f"taps {pname!r} at row shift {slot}, but "
+                                f"its column rings exist only at row shifts "
+                                f"{sorted(psp.shifts)}",
+                                stage=sp.name, witness=(slot,),
+                            ))
+                        for t in sp.bind_lane_shifts() if lane else (0,):
+                            for lo_ in lane_offs:
+                                lslot = lo_ + t
+                                if not (plb.lo <= lslot <= plb.hi):
+                                    out.append(PlanViolation(
+                                        "UB103", kg.name,
+                                        f"taps {pname!r} at lane shift "
+                                        f"{lslot}, but its column ring "
+                                        f"carries [{plb.lo}, {plb.hi}]",
+                                        stage=sp.name, witness=(slot, lslot),
+                                    ))
+                        continue
                     if plb is not None:
                         if not (plb.lo <= slot <= plb.hi):
                             out.append(PlanViolation(
@@ -406,7 +491,7 @@ def _check_scratch_taps(kg: KernelGroup, out: List[PlanViolation]) -> None:
                                 stage=sp.name, witness=(slot,),
                             ))
                         continue
-                    for t in sp.lane_shifts if lane else (0,):
+                    for t in sp.bind_lane_shifts() if lane else (0,):
                         for lo_ in lane_offs:
                             lslot = lo_ + t
                             if (slot, lslot) not in panels:
@@ -501,7 +586,9 @@ def _check_masks(kg: KernelGroup, out: List[PlanViolation]) -> None:
                 view=_view_label(kg, gi),
                 witness=() if g.valid0 is None else (g.valid0,),
             ))
-        if g.lane_axis is not None and g.valid1 != kg.e1:
+        if g.lane_axis is not None and not g.lane_pinned and g.valid1 != kg.e1:
+            # lane-pinned warm-up views are exempt: they deliver a fixed
+            # halo-column window whose coverage UB205 proves directly
             out.append(PlanViolation(
                 "UB201", kg.name,
                 f"lane view valid1={g.valid1} != lane extent {kg.e1}",
@@ -515,8 +602,11 @@ def _check_rings(kg: KernelGroup, out: List[PlanViolation]) -> None:
     the carried halo starting at the trailing view start ``lo``, the steady
     view streams from the leading start ``hi``, and the halo fits the block
     (a rotate whose source overlaps its destination would tear the carried
-    rows) — so every carried row is initialized before any tap reads it."""
+    rows) — so every carried row is initialized before any tap reads it.
+    Lane (column) rings are proved by UB205 (:func:`_check_lane_carry`)."""
     for ri, r in enumerate(kg.rings):
+        if r.lane:
+            continue
         label = f"ring:{r.buffer}[{ri}]"
         if r.hi <= r.lo or r.stride0 < 1 or (r.hi - r.lo) % r.stride0 != 0:
             out.append(PlanViolation(
@@ -573,20 +663,23 @@ def _check_rings(kg: KernelGroup, out: List[PlanViolation]) -> None:
 
 
 def _check_line_buffers(kg: KernelGroup, out: List[PlanViolation]) -> None:
-    """UB203: a line-buffered stage's ring spans exactly the demanded shift
-    window (``lo = min(shifts)``, ``hi = max(shifts)``), its halo fits the
-    block (steady steps compute ``bh`` rows; a larger halo would carry rows
-    no step ever wrote), and carry never composes with a lane grid (the
-    emitter has no lane-aware rotate — planner and verifier both refuse)."""
+    """UB203: a row-line-buffered stage's ring spans exactly the demanded
+    shift window (``lo = min(shifts)``, ``hi = max(shifts)``) and its halo
+    fits the block (steady steps compute ``bh`` rows; a larger halo would
+    carry rows no step ever wrote).  Row carry cannot compose with a lane
+    grid — between two visits of one row panel every lane step clobbers the
+    ring — so that pairing is a UB205 violation; *lane* line buffers (the
+    sound column variant) are proved by :func:`_check_lane_carry`."""
     for sp in kg.stages:
         lb = sp.line_buffer
-        if lb is None:
+        if lb is None or lb.lane:
             continue
         if kg.lane_grid is not None:
             out.append(PlanViolation(
-                "UB203", kg.name,
-                "line buffer composed with a lane grid is unsupported "
-                "(no lane-aware rotate exists)",
+                "UB205", kg.name,
+                "row line buffer composed with a lane grid: every lane "
+                "step would rotate rows the next lane step still needs — "
+                "only a lane (column) line buffer carries under a 2-D grid",
                 stage=sp.name,
             ))
         if sp is kg.stages[-1]:
@@ -614,6 +707,187 @@ def _check_line_buffers(kg: KernelGroup, out: List[PlanViolation]) -> None:
                 "UB203", kg.name,
                 "line buffer on an unstreamed stage has no grid to carry "
                 "across",
+                stage=sp.name,
+            ))
+
+
+def _check_lane_carry(kg: KernelGroup, out: List[PlanViolation]) -> None:
+    """UB205: the per-lane rotation model for carry under a lane-blocked
+    2-D grid.  Each lane (column) ring holds ``(bh, ..., bw + halo)``
+    columns; the emitter rotates it once per lane step (``jprog > 0``) and
+    re-warms it at lane step 0 of *every* row step — a guard that recurs at
+    every row step of every batch slot, which is what makes the carry
+    batch-composed through ``bofs`` for free.  This rule proves, per ring:
+
+    * the lane window is well-formed and its halo fits the lane block
+      (``halo <= bw`` — the rotate's source ``[bw, bw + halo)`` must not
+      overlap columns it has not yet refreshed);
+    * the warm-up (lane-pinned prefix) view delivers exactly the ``halo``
+      carried columns from the trailing lane start ``lo``, sharing the
+      class's row binding, so every carried column is initialized before
+      any tap reads it;
+    * the steady view streams ``bw`` fresh columns per lane step from the
+      leading lane start ``hi`` with the same row binding — with the
+      warm-up that tiles the lane extent exactly once per ``(row, lane)``
+      sweep (lane-step coverage itself is UB301);
+    * the warm-up re-fires per row sweep (``batch_reset``), unbatched case
+      here, batched under UB502 — a global-first warm-up would serve row
+      step ``i`` columns rotated out of row step ``i - 1``.
+
+    Lane *line buffers* (fused-stage column rings, one per demanded row
+    shift) get the analogous checks, and any lane carry structure on a
+    kernel with no lane grid is rejected outright."""
+    lane_ok = kg.lane_grid is not None and kg.bw is not None
+    for ri, r in enumerate(kg.rings):
+        if not r.lane:
+            if lane_ok:
+                out.append(PlanViolation(
+                    "UB205", kg.name,
+                    f"row ring '{r.buffer}' on a lane-blocked kernel: every "
+                    f"lane step would rotate rows the next lane step still "
+                    f"needs",
+                ))
+            continue
+        label = f"ring:lane:{r.buffer}[{ri}]"
+        if not lane_ok:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                "lane ring on a kernel with no lane grid has no lane steps "
+                "to rotate across",
+                view=label,
+            ))
+            continue
+        if (
+            r.hi <= r.lo or r.stride0 < 1
+            or (r.hi - r.lo) % r.stride0 != 0
+            or r.row_axis is None or r.row_axis == r.axis
+        ):
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                f"degenerate lane ring window lo={r.lo} hi={r.hi} "
+                f"stride={r.stride0} row_axis={r.row_axis} axis={r.axis}",
+                view=label, witness=(r.lo, r.hi),
+            ))
+            continue
+        if r.halo > kg.bw:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                f"carried lane halo {r.halo} exceeds lane block width "
+                f"{kg.bw}: the rotate's source overlaps columns it has not "
+                f"yet refreshed",
+                view=label, witness=(r.halo,),
+            ))
+        pfx = (
+            kg.groups[r.prefix] if 0 <= r.prefix < len(kg.groups) else None
+        )
+        ok_prefix = (
+            pfx is not None
+            and pfx.lane_pinned and not pfx.pinned
+            and pfx.cols0 == r.halo
+            and pfx.lane_axis == r.axis
+            and pfx.l0 == r.lo
+            and pfx.lane_stride == r.stride0
+            and pfx.blocked_axis == r.row_axis
+            and pfx.k0 == r.row_k0
+            and pfx.stride0 == r.row_stride
+        )
+        if not ok_prefix:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                f"lane warm-up view must lane-pin exactly {r.halo} columns "
+                f"from {r.lo} (stride {r.stride0}) on axis {r.axis} with "
+                f"row binding (axis {r.row_axis}, k0={r.row_k0}, stride "
+                f"{r.row_stride}); got "
+                + (
+                    f"cols0={pfx.cols0} l0={pfx.l0} "
+                    f"lane_stride={pfx.lane_stride} "
+                    f"lane_pinned={pfx.lane_pinned} k0={pfx.k0}"
+                    if pfx is not None else f"missing group {r.prefix}"
+                ),
+                view=label, witness=(r.halo,),
+            ))
+        sty = (
+            kg.groups[r.steady] if 0 <= r.steady < len(kg.groups) else None
+        )
+        ok_steady = (
+            sty is not None
+            and not sty.pinned and not sty.lane_pinned
+            and sty.lane_axis == r.axis
+            and sty.l0 == r.hi
+            and sty.lane_stride == r.stride0
+            and sty.blocked_axis == r.row_axis
+            and sty.k0 == r.row_k0
+            and sty.stride0 == r.row_stride
+        )
+        if not ok_steady:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                f"lane steady view must stream from the leading lane start "
+                f"{r.hi} (stride {r.stride0}) on axis {r.axis} with row "
+                f"binding (axis {r.row_axis}, k0={r.row_k0}, stride "
+                f"{r.row_stride}); got "
+                + (
+                    f"l0={sty.l0} lane_stride={sty.lane_stride} "
+                    f"lane_pinned={sty.lane_pinned} k0={sty.k0}"
+                    if sty is not None else f"missing group {r.steady}"
+                ),
+                view=label, witness=(r.hi,),
+            ))
+        if not r.batch_reset and not kg.batched:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                f"lane ring '{r.buffer}' warms up only at the global first "
+                f"row step (batch_reset=False): row step i would read "
+                f"columns rotated out of row step i-1",
+                view=label,
+            ))
+    for sp in kg.stages:
+        lb = sp.line_buffer
+        if lb is None or not lb.lane:
+            continue
+        if not lane_ok:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                "lane line buffer on a kernel with no lane grid has no "
+                "lane steps to rotate across",
+                stage=sp.name,
+            ))
+            continue
+        if sp is kg.stages[-1]:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                "output stage cannot be lane-line-buffered",
+                stage=sp.name,
+            ))
+            continue
+        ls = sp.lane_shifts
+        if not ls or lb.lo != min(ls) or lb.hi != max(ls):
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                f"column-ring window [{lb.lo}, {lb.hi}] != demanded lane "
+                f"shift span [{min(ls) if ls else 0}, {max(ls) if ls else 0}]",
+                stage=sp.name, witness=(lb.lo, lb.hi),
+            ))
+        if lb.halo > kg.bw:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                f"carried lane halo {lb.halo} exceeds lane block width "
+                f"{kg.bw}",
+                stage=sp.name, witness=(lb.halo,),
+            ))
+        if not kg.streamed or not sp.streamed:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                "lane line buffer on an unstreamed stage has no grid to "
+                "carry across",
+                stage=sp.name,
+            ))
+        if not lb.batch_reset and not kg.batched:
+            out.append(PlanViolation(
+                "UB205", kg.name,
+                "lane line buffer warms up only at the global first row "
+                "step (batch_reset=False): row step i would read columns "
+                "rotated out of row step i-1",
                 stage=sp.name,
             ))
 
@@ -782,6 +1056,12 @@ def _check_eval_accounting(kg: KernelGroup, out: List[PlanViolation]) -> None:
             continue
         if not (kg.streamed and sp.streamed):
             expect = bsteps * sp.e0
+        elif sp.line_buffer is not None and sp.line_buffer.lane:
+            # per (row step, row shift): one bw-wide panel per lane step
+            # plus one halo-wide warm-up panel per row step — the
+            # ``lane_steps + 1`` shape is the exactly-once accounting of
+            # the (row, lane) sweep, re-run in full per batch slot
+            expect = bsteps * steps * kg.bh * len(want) * (lane_steps + 1)
         elif sp.line_buffer is not None:
             halo = max(want) - min(want)
             if kg.batched and not sp.line_buffer.batch_reset:
@@ -829,7 +1109,7 @@ def _resummed_vmem_bytes(kg: KernelGroup) -> int:
         blk = ELEM_BYTES * math.prod(g.block_shape(kg.bh, kg.bw))
         total += blk * (2 if advanced else 1)
     for r in kg.rings:
-        total += r.ring_bytes(kg.bh)
+        total += r.ring_bytes(kg.bh, kg.bw)
     for sp, key in kg.scratch_entries():
         total += ELEM_BYTES * math.prod(sp.scratch_shape(kg.bh, key))
     total += 2 * kg.output.panel_bytes(kg.bh)
@@ -850,7 +1130,8 @@ def _resummed_ws(kg: KernelGroup) -> Tuple[int, int]:
     fixed = 0
     for g in kg.groups:
         sz = ELEM_BYTES * math.prod(
-            (kg.bw or 1) if j == g.lane_axis else (
+            (g.cols0 if g.lane_pinned else (kg.bw or 1))
+            if j == g.lane_axis else (
                 (g.span[j] if g.resident else g.red_chunk)
                 if j == g.red_axis else g.span[j]
             )
@@ -865,6 +1146,15 @@ def _resummed_ws(kg: KernelGroup) -> Tuple[int, int]:
         else:
             fixed += sz
     for r in kg.rings:
+        if r.lane:
+            # column ring (bh, ..., bw + halo): the whole ring scales with
+            # the block height; there is no bh-independent part
+            inner = math.prod(
+                r.span[j] for j in range(r.ndim)
+                if j != r.axis and j != r.row_axis
+            )
+            bpr += ((kg.bw or 0) + r.halo) * inner * ELEM_BYTES
+            continue
         inner = math.prod(r.span[j] for j in range(r.ndim) if j != r.axis)
         bpr += inner * ELEM_BYTES
         fixed += r.halo * inner * ELEM_BYTES
@@ -874,7 +1164,13 @@ def _resummed_ws(kg: KernelGroup) -> Tuple[int, int]:
         if lane and sh:
             sh[-1] = kg.bw
         inner = math.prod(sh) if sh else 1
-        if sp.line_buffer is not None:
+        if sp.line_buffer is not None and sp.line_buffer.lane:
+            # one (bh, ..., bw + halo) column ring per demanded row shift
+            shl = list(sp.nstage.pure_extents[1:])
+            if shl:
+                shl[-1] = (kg.bw or 0) + sp.line_buffer.halo
+            scratch_rows += len(sp.shifts) * (math.prod(shl) if shl else 1)
+        elif sp.line_buffer is not None:
             scratch_rows += inner
             fixed += sp.line_buffer.halo * inner * ELEM_BYTES
         else:
@@ -1019,6 +1315,7 @@ def verify_plan(plan: PipelinePlan) -> List[PlanViolation]:
         _check_masks(kg, out)
         _check_rings(kg, out)
         _check_line_buffers(kg, out)
+        _check_lane_carry(kg, out)
         _check_red_grid(kg, out)
         _check_write_once(kg, out)
         _check_eval_accounting(kg, out)

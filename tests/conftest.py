@@ -194,10 +194,15 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
     (``rng_lane``) so adding it did not reshuffle the pre-existing axes'
     draws — the non-lane face of the sweep is byte-identical to PR 4's.
     The ``batch`` axis follows the same discipline with its own stream
-    (``rng_batch``): the pre-batch face is byte-identical to PR 6's."""
+    (``rng_batch``): the pre-batch face is byte-identical to PR 6's.
+    The ``lane_carry`` axis (its own stream, ``rng_lane_carry``) forces
+    the carry mode on roughly half the lane-blocked cases so column rings
+    and lane line buffers rotate under 2-D grids throughout the sweep —
+    again without reshuffling any earlier stream's draws."""
     rng = random.Random(seed)
     rng_lane = random.Random(seed ^ 0x1A9E5)
     rng_batch = random.Random(seed ^ 0xB47C8)
+    rng_lane_carry = random.Random(seed ^ 0x7CA11)
     cases: list = []
 
     def add(name, kw, **ckw):
@@ -224,6 +229,15 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
         # align_tpu x lane composition instead)
         if not ckw.get("align_tpu") and rng_lane.random() < 0.16:
             ckw.setdefault("block_w", rng_lane.choice([3, 4, 5, 7, 9]))
+        # lane-carry axis: ~half of the lane-blocked cases force the carry
+        # mode, so column rings / lane line buffers rotate per lane step
+        # inside the 2-D sweep (cases whose halo exceeds the drawn width
+        # shed back to recompute, which is itself a legal planned mode and
+        # stays differentially checked).  setdefault keeps any
+        # linebuf-axis draw; the independent stream keeps every earlier
+        # axis's draws byte-identical
+        if "block_w" in ckw and rng_lane_carry.random() < 0.5:
+            ckw.setdefault("line_buffer", True)
         # batch axis: ~1/8 of cases sweep several independent tiles through
         # one leading batch grid dim, half of those with spare slot
         # capacity (a ragged final batch: zero-padded slots the runner
@@ -343,6 +357,26 @@ def generate_sweep_cases(seed: int = SWEEP_SEED) -> list:
          {"block_w": 6, "block_h": 5, "batch": 2, "batch_capacity": 3}),
         ("matmul", {"m": 19, "n": 13, "k": 70}, "u4", False,
          {"red_grid_threshold": 64, "batch": 3}),
+    ]
+    # guaranteed lane-carry anchors (appended verbatim, no draws): column
+    # rings and lane line buffers actually rotating under 2-D grids — the
+    # wide gaussian at the hardware lane width fetches each input row once
+    # instead of once per tap per lane block, harris composes input column
+    # rings with fused lane line buffers, camera's stride-2 demosaic
+    # exercises the parity warm-up, and the batched anchor re-warms the
+    # column rings at every batch boundary
+    cases += [
+        ("gaussian", {"size": 33, "width": 255}, "u4", True,
+         {"block_w": 128, "line_buffer": True}),
+        ("harris", {"schedule": "sch3", "size": 20}, "u4", True,
+         {"block_w": 8, "line_buffer": True}),
+        ("unsharp", {"size": 17}, "i8", True,
+         {"block_w": 5, "line_buffer": True}),
+        ("camera", {"size": 12}, "u4", True,
+         {"block_w": 6, "line_buffer": True}),
+        ("gaussian", {"size": 24, "width": 40}, "u4", True,
+         {"block_w": 8, "block_h": 5, "line_buffer": True,
+          "batch": 2, "batch_capacity": 3}),
     ]
     return cases
 

@@ -18,6 +18,7 @@ from repro.backend.autotune import (
     ScheduleDB,
     enumerate_candidates,
     lookup_schedule,
+    lookup_schedule_entry,
     search,
 )
 from repro.backend.runner import TUNABLE_KEYS, schedule_db_key
@@ -49,6 +50,34 @@ def test_enumerate_candidates_spans_every_axis():
     # the cap truncates but always keeps the heuristic at index 0
     short = enumerate_candidates(uns.pipeline, max_candidates=5)
     assert len(short) == 5 and short[0] == {}
+
+
+def test_enumerate_unflattens_lane_carry_axis():
+    """The lane×carry fix un-flattened the search space: for every lane
+    width in the (block_w, line_buffer) pairs, both carry modes coexist as
+    candidates — the planner no longer collapses them to one plan, and the
+    fingerprint dedup keeps them distinct (a carried lane plan holds rings
+    the recompute twin lacks)."""
+    from repro.backend.autotune import _plan_fingerprint
+    from repro.backend.plan import build_pipeline_plan
+
+    app = make_app("harris", schedule="sch3", size=20)
+    cands = enumerate_candidates(app.pipeline)
+    pairs = {
+        (s["block_w"], s["line_buffer"])
+        for s in cands if set(s) == {"block_w", "line_buffer"}
+    }
+    assert pairs, cands
+    for bw in {bw for bw, _ in pairs}:
+        assert (bw, True) in pairs and (bw, False) in pairs
+    bw = sorted(pairs)[0][0]
+    fp_lb = _plan_fingerprint(
+        build_pipeline_plan(app.pipeline, block_w=bw, line_buffer=True)
+    )
+    fp_rc = _plan_fingerprint(
+        build_pipeline_plan(app.pipeline, block_w=bw, line_buffer=False)
+    )
+    assert fp_lb != fp_rc
 
 
 def test_search_is_deterministic_without_measurement():
@@ -93,6 +122,7 @@ def test_schedule_db_roundtrip_into_compile_pipeline(tmp_path):
     entry = doc["entries"][r.key]
     assert entry["schedule"] == r.schedule
     assert set(entry["schedule"]) <= set(TUNABLE_KEYS)
+    assert entry["mode"] == "interpret"       # rows record how they measured
 
     reloaded = ScheduleDB.load(dbp)
     assert reloaded.lookup(r.key) == r.schedule
@@ -139,6 +169,36 @@ def test_stored_schedule_applies_and_caller_overrides_win(tmp_path):
     # non-tunable keys are rejected at store time
     with pytest.raises(ValueError, match="non-tunable"):
         db.store(key, {"schedule": {"vmem_budget": 64}})
+
+
+def test_interpret_measured_winner_warns_into_compiled_mode(tmp_path):
+    """Stored rows record the execution mode they measured under; serving
+    an interpret-measured winner to a ``mode="compiled"`` compile emits
+    the one-line mismatch warning (interpret rankings may not transfer to
+    TPU), while a same-mode serve stays silent."""
+    import warnings
+
+    from repro.backend.runner import TunedModeMismatchWarning
+
+    app = make_app("gaussian", size=18)
+    key = schedule_db_key(app.pipeline, {})
+    db = ScheduleDB(path=str(tmp_path / "db.json"))
+    db.store(key, {
+        "app": "gaussian", "schedule": {"block_h": 2}, "mode": "interpret",
+    })
+    assert lookup_schedule_entry(app.pipeline, {}, db=db)["mode"] == "interpret"
+
+    # same mode: silent (errors would surface as test failures)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", TunedModeMismatchWarning)
+        pp = compile_pipeline(app.pipeline, tune=db)
+    assert pp.kernels[0].bh == 2               # the schedule still applies
+
+    # mode="compiled": the warning fires at serve time, before emission
+    # (which then refuses off-TPU — the pre-existing compiled-mode gate)
+    with pytest.warns(TunedModeMismatchWarning, match="'interpret'.*'compiled'"):
+        with pytest.raises(RuntimeError, match="TPU"):
+            compile_pipeline(app.pipeline, mode="compiled", tune=db)
 
 
 def test_tuned_numerics_match_heuristic(tmp_path):

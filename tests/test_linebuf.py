@@ -339,6 +339,83 @@ def test_golden_linebuf_contract(key):
 
 
 # ---------------------------------------------------------------------------
+# Lane (column) carry: rings and line buffers under 2-D lane grids
+# ---------------------------------------------------------------------------
+
+
+def test_lane_carry_engages_and_beats_recompute():
+    """The lane×carry composition fix: harris at block_w=8 plans input
+    column rings *plus* fused lane line buffers under the 2-D grid (the
+    modes PR 5 silently flattened to recompute), ring columns laid out as
+    (ring_rows, bw + lane_halo), eval rows and HBM estimates strictly
+    below the lane-recompute twin, outputs ulp-tight between the modes."""
+    app = make_app("harris", schedule="sch3", size=20)
+    carry = build_pipeline_plan(app.pipeline, block_w=8, line_buffer=True)
+    rc = build_pipeline_plan(app.pipeline, block_w=8, line_buffer=False)
+    kg = next(k for k in carry.kernels if k.lane_grid is not None)
+    assert kg.notes.get("lane_carry") == "carried"
+    lane_rings = [r for r in kg.rings if r.lane]
+    lane_lbs = [
+        sp for sp in kg.stages
+        if sp.line_buffer is not None and sp.line_buffer.lane
+    ]
+    assert lane_rings and lane_lbs
+    for r in lane_rings:
+        shape = r.ring_shape(kg.bh, kg.bw)
+        assert shape[r.axis] == kg.bw + r.halo
+    assert carry.total_eval_rows() < rc.total_eval_rows()
+    assert carry.hbm_bytes() < rc.hbm_bytes()
+    inputs = _inputs(app)
+    a = np.asarray(
+        compile_pipeline(app.pipeline, block_w=8, line_buffer=True)(inputs)
+    )
+    b = np.asarray(
+        compile_pipeline(app.pipeline, block_w=8, line_buffer=False)(inputs)
+    )
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_lane_carry_bit_exact_vs_reference():
+    """Dyadic-exact gaussian at the hardware lane width under the default
+    "auto" arbitration: carry engages on its own, each input row is
+    fetched once per row panel instead of once per tap per lane block,
+    and the output is bit-equal to the f64 reference."""
+    app = make_app("gaussian", size=33, width=255)
+    pp = compile_pipeline(app.pipeline, block_w=128)
+    kg = pp.kernels[0].kg
+    assert kg.notes.get("lane_carry") == "carried"
+    assert any(r.lane for r in kg.rings)
+    inputs = _inputs(app)
+    got = np.asarray(pp(inputs), np.float64)
+    want = reference_arrays(app.pipeline, inputs)[app.pipeline.output]
+    assert np.array_equal(got, want)
+
+
+def test_lane_carry_degrade_warns_with_named_reason():
+    """``line_buffer=True`` on a lane-blocked kernel that cannot carry no
+    longer degrades silently: ``compile_pipeline`` warns with the
+    planner's named reason (full degrade and partial shed), while a
+    cleanly carried plan stays silent — and the degraded plan is still
+    numerically correct."""
+    import warnings
+
+    from repro.backend.runner import LaneCarryDegradeWarning
+
+    app = make_app("gaussian", size=24, width=40)
+    with pytest.warns(LaneCarryDegradeWarning, match="halo-exceeds-bw"):
+        pp = compile_pipeline(app.pipeline, block_w=1, line_buffer=True)
+    assert not any(r.lane for kg in pp.plan.kernels for r in kg.rings)
+    assert max(max_abs_error(pp, _inputs(app)).values()) <= TOL
+    h = make_app("harris", schedule="sch3", size=20)
+    with pytest.warns(LaneCarryDegradeWarning, match="shed part of the carry"):
+        compile_pipeline(h.pipeline, block_w=2, line_buffer=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", LaneCarryDegradeWarning)
+        pp8 = compile_pipeline(h.pipeline, block_w=8, line_buffer=True)
+    assert any(r.lane for kg in pp8.plan.kernels for r in kg.rings)
+
+
+# ---------------------------------------------------------------------------
 # Grid reductions: resident invariant operands (refetch bugfix)
 # ---------------------------------------------------------------------------
 

@@ -96,6 +96,46 @@ def test_submit_validates_inputs():
         PipelineServer(app.pipeline, batch_slots=0)
 
 
+def test_mixed_shape_dispatch_preserves_drain_order():
+    """One server, two registered tile shapes: submit() routes each request
+    by its input shapes, step() dispatches the longest same-shape run at
+    the head of the queue, and the drain completes every request in
+    submission order — bit-exact against each shape's own per-tile
+    pipeline."""
+    small = make_app("gaussian", size=13)
+    large = make_app("gaussian", size=21)
+    srv = PipelineServer(small.pipeline, batch_slots=3, block_h=4)
+    srv.register(large.pipeline, block_h=4)
+    assert srv.stats()["shapes"] == 2
+
+    # interleaved traffic: S S L L S  (runs: [S,S], [L,L], [S])
+    tiles = _tiles(small, 2) + _tiles(large, 2, seed=SWEEP_SEED + 50) \
+        + _tiles(small, 1, seed=SWEEP_SEED + 90)
+    submitted = [srv.submit(t) for t in tiles]
+
+    order = []
+    while srv.pending:
+        for req in srv.step():
+            order.append(req)
+    assert order == submitted          # completion order == submission order
+    assert srv.dispatches == 3         # [S,S], [L,L], [S] — no shape mixing
+    assert srv.served == 5
+
+    ref_small = compile_pipeline(small.pipeline, block_h=4)
+    ref_large = compile_pipeline(large.pipeline, block_h=4)
+    out = small.pipeline.output
+    for req, tile, ref in zip(
+        submitted, tiles,
+        [ref_small, ref_small, ref_large, ref_large, ref_small],
+    ):
+        assert np.array_equal(req.outputs[out], np.asarray(ref.run(tile)[out]))
+
+    # an unregistered third shape is still rejected by name
+    other = make_app("gaussian", size=17)
+    with pytest.raises(ValueError, match="tile shape"):
+        srv.submit(_tiles(other, 1)[0])
+
+
 def test_pad_to_slots_contract():
     fillers = []
 

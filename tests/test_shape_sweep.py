@@ -137,6 +137,75 @@ def test_sweep_covers_lane_blocked_plans():
     assert fused_lane_shifts >= 1, fused_lane_shifts
 
 
+def test_sweep_covers_lane_carry_plans():
+    """The lane_carry axis is not vacuous: the sweep contains lane-blocked
+    plans that actually rotate column rings per lane step, at least one
+    that composes them with fused lane line buffers, and at least one
+    batched lane-carry plan (rings re-warmed per slot).  Plan-only, so
+    this check is cheap."""
+    ring_cases = lane_lb_cases = batched = 0
+    for name, kw, _, fuse, ckw in SWEEP_CASES:
+        if "block_w" not in ckw or ckw.get("line_buffer") is False:
+            continue
+        plan = build_pipeline_plan(make_app(name, **kw).pipeline, fuse=fuse, **ckw)
+        has_ring = any(r.lane for kg in plan.kernels for r in kg.rings)
+        has_lb = any(
+            sp.line_buffer is not None and sp.line_buffer.lane
+            for kg in plan.kernels for sp in kg.stages
+        )
+        if has_ring:
+            ring_cases += 1
+            if "batch" in ckw:
+                batched += 1
+        if has_lb:
+            lane_lb_cases += 1
+    assert ring_cases >= 4, ring_cases
+    assert lane_lb_cases >= 1, lane_lb_cases
+    assert batched >= 1, batched
+
+
+def test_lane_carry_anchors_beat_recompute():
+    """The acceptance criterion of the lane×carry fix, end to end: under
+    the *default* ``line_buffer="auto"`` a lane-blocked plan engages
+    column-ring / lane-line-buffer carry, its estimated HBM bytes (and,
+    where intermediates are lane-buffered, its eval rows) are strictly
+    below the recompute twin — the wide gaussian at the hardware lane
+    width fetches each input row once, not once per tap per lane block —
+    and the carried outputs are bit-exact against the twin on
+    exactly-representable inputs."""
+    anchors = [
+        # (app, kwargs, compile kwargs, expects lane line buffers)
+        ("gaussian", {"size": 33, "width": 255}, {"block_w": 128}, False),
+        ("harris", {"schedule": "sch3", "size": 20}, {"block_w": 8}, True),
+        ("unsharp", {"size": 17}, {"block_w": 5}, False),
+    ]
+    for name, kw, ckw, want_lane_lbs in anchors:
+        app = make_app(name, **kw)
+        carry = build_pipeline_plan(app.pipeline, **ckw)  # line_buffer="auto"
+        rc = build_pipeline_plan(app.pipeline, line_buffer=False, **ckw)
+        kg = next(k for k in carry.kernels if k.lane_grid is not None)
+        assert kg.notes.get("lane_carry") == "carried", name
+        assert any(r.lane for r in kg.rings), name
+        if want_lane_lbs:
+            assert any(
+                sp.line_buffer is not None and sp.line_buffer.lane
+                for sp in kg.stages
+            ), name
+            assert carry.total_eval_rows() < rc.total_eval_rows(), name
+        assert carry.hbm_bytes() < rc.hbm_bytes(), name
+        pp = compile_pipeline(app.pipeline, **ckw)
+        pp_rc = compile_pipeline(app.pipeline, line_buffer=False, **ckw)
+        inputs = sweep_inputs(app, SWEEP_SEED + 7, "u4")
+        got = np.asarray(pp(inputs), np.float64)
+        got_rc = np.asarray(pp_rc(inputs), np.float64)
+        if is_exact_case(name, "u4"):
+            assert np.array_equal(got, got_rc), name
+        else:
+            np.testing.assert_allclose(
+                got, got_rc, rtol=1e-6, atol=1e-6, err_msg=name
+            )
+
+
 def test_sweep_covers_batched_plans():
     """The batch axis is not vacuous: the sweep contains batched plans,
     ragged-capacity batches (spare zero-padded slots), and the

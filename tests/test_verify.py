@@ -197,6 +197,47 @@ def _unreset_line_buffer(plan):
     sp.line_buffer = dataclasses.replace(sp.line_buffer, batch_reset=False)
 
 
+def _lane_ring_plan(**kw):
+    return build_pipeline_plan(
+        make_app("gaussian", size=24, width=40).pipeline,
+        block_w=8, line_buffer=True, **kw,
+    )
+
+
+def _short_lane_warmup(plan):
+    """A lane warm-up one column short: the prefix view pins halo-1 ring
+    columns, so the first steady lane step of every row panel reads an
+    uninitialized carried column (UB205); the pinned columns also enter
+    the working set, so the ws audit cascades (UB403)."""
+    kg = next(kg for kg in plan.kernels if any(r.lane for r in kg.rings))
+    g = next(g for g in kg.groups if g.lane_pinned)
+    g.cols0 -= 1
+
+
+def _unrotated_column_ring(plan):
+    """A steady column stream delivering from lo instead of hi: the ring
+    re-reads the warm-up columns at every lane step and never rotates, so
+    lane steps past the first tap stale data — exactly UB205."""
+    kg = next(kg for kg in plan.kernels if any(r.lane for r in kg.rings))
+    r = next(r for r in kg.rings if r.lane)
+    g = next(
+        g for g in kg.groups
+        if g.lane_axis is not None and not g.lane_pinned and not g.pinned
+        and g.l0 == r.hi
+    )
+    g.l0 = r.lo
+
+
+def _unreset_lane_ring(plan):
+    """A column ring warmed once globally instead of once per batch slot:
+    slot b's first lane step reads columns rotated in by slot b-1 — the
+    lane analogue of _unreset_ring, caught by the same batch-isolation
+    rule (UB502) through the bofs-composed sweep."""
+    kg = next(kg for kg in plan.kernels if any(r.lane for r in kg.rings))
+    i = next(i for i, r in enumerate(kg.rings) if r.lane)
+    kg.rings[i] = dataclasses.replace(kg.rings[i], batch_reset=False)
+
+
 def _drift_batch_steps(plan):
     """Batch occupancy metadata drifts from the grid: the declared slot
     count no longer matches the leading grid dim (UB501), and eval_rows —
@@ -256,6 +297,21 @@ MUTATIONS = [
     # misread as structural
     ("undeclare-batch-grid", _batched_gaussian_plan, _drop_batch_grid,
      {"UB501"}, None),
+    # the lane (column) carry model: a short lane warm-up fails coverage
+    # (UB205) and its pinned columns drop out of the working set (UB403)
+    ("short-lane-warmup", _lane_ring_plan, _short_lane_warmup,
+     {"UB205"}, {"UB205", "UB403"}),
+    ("unrotated-column-ring", _lane_ring_plan, _unrotated_column_ring,
+     {"UB205"}, {"UB205"}),
+    # a lane ring carried across a batch boundary is the same isolation
+    # bug as a row ring: exactly UB502, batch-composed through bofs
+    ("carry-lane-ring-across-batch",
+     lambda: _lane_ring_plan(batch=3, batch_capacity=4),
+     _unreset_lane_ring, {"UB502"}, {"UB502"}),
+    # without a batch dim the same un-reset flag means a global-first
+    # warm-up guard: lane coverage breaks on every later row panel (UB205)
+    ("global-first-lane-warmup", _lane_ring_plan, _unreset_lane_ring,
+     {"UB205"}, {"UB205"}),
 ]
 
 
