@@ -35,6 +35,11 @@ SERVE_CASES = [
     ("matmul", dict(m=16, n=16, k=16), dict(), 16),
 ]
 
+# fraction of the degraded-mode stream that is marker-poisoned: the SLO
+# question the degraded row answers is "what does serving look like with
+# a few percent bad tiles", not "with a hostile majority"
+DEGRADED_FRAC = 0.05
+
 
 def _best_of(fn, reps: int):
     best = None
@@ -50,16 +55,22 @@ def serve_rows(smoke: bool = False) -> list:
     """One row per serve case: warm images/sec for the per-tile loop and
     the batched bridge, cold (compile + first dispatch) images/sec, the
     warm speedup, a bit-exactness bit (batched outputs vs the per-tile
-    loop, ragged final dispatch included), and the bridge's cache/dispatch
-    counters.  ``smoke=True`` keeps the same schema but a single timing
-    rep per measurement."""
+    loop, ragged final dispatch included), the bridge's cache/dispatch
+    counters, and the **degraded-mode** throughput — the same stream with
+    ``DEGRADED_FRAC`` of its tiles marker-poisoned, served through
+    quarantine bisection (poisoned tiles fail closed with
+    ``PoisonedTileError``, healthy tiles stay bit-exact) — the price of
+    fault isolation in images/sec.  ``smoke=True`` keeps the same schema
+    but a single timing rep per measurement."""
     from repro.apps.paper_apps import make_app
     from repro.backend import (
         PipelineServer,
+        PoisonedTileError,
         clear_pipeline_cache,
         compile_pipeline,
         pipeline_cache_stats,
     )
+    from repro.backend.faults import mark_poison, poison_output
 
     reps = 1 if smoke else 5
     rng = np.random.default_rng(0)
@@ -110,6 +121,35 @@ def serve_rows(smoke: bool = False) -> list:
         t_batch = _best_of(lambda: srv.run(timed_tiles), reps)
         stats = srv.stats()
 
+        # -- degraded mode: the same stream with DEGRADED_FRAC of its tiles
+        # marker-poisoned; every timed run pays the quarantine bisection
+        # that isolates them, and the correctness pass asserts poisoned
+        # tiles fail closed while healthy tiles match the per-tile loop
+        # byte-for-byte
+        n_bad = max(1, int(round(DEGRADED_FRAC * n_tiles)))
+        bad_idx = sorted(
+            int(i)
+            for i in np.random.default_rng(1).choice(
+                n_tiles, size=n_bad, replace=False
+            )
+        )
+        degraded_tiles = [dict(t) for t in timed_tiles]  # arrays shared
+        for i in bad_idx:
+            mark_poison(degraded_tiles[i])
+        with poison_output(srv):
+            done_deg = srv.run(degraded_tiles)
+            healthy_exact = all(
+                np.array_equal(r.outputs[out_name], loop_out[i])
+                for i, r in enumerate(done_deg)
+                if i not in bad_idx
+            )
+            failed_closed = all(
+                isinstance(done_deg[i].error, PoisonedTileError)
+                for i in bad_idx
+            )
+            t_degraded = _best_of(lambda: srv.run(degraded_tiles), reps)
+        deg_stats = srv.stats()
+
         rows.append({
             "kernel": name,
             "case": "x".join(
@@ -126,6 +166,12 @@ def serve_rows(smoke: bool = False) -> list:
             "cache_hits": stats["hits"],
             "cache_misses": stats["misses"],
             "cache_entries": stats["entries"],
+            "degraded_frac": round(n_bad / n_tiles, 3),
+            "images_sec_degraded_warm": round(n_tiles / t_degraded, 1),
+            "degraded_vs_clean": round(t_batch / t_degraded, 2),
+            "poisoned_failed_closed": bool(failed_closed),
+            "healthy_bit_exact": bool(healthy_exact),
+            "quarantine_dispatches": deg_stats["quarantine_dispatches"],
         })
     return rows
 
@@ -165,6 +211,17 @@ def serve_smoke_check(path: str | None = None) -> int:
                 f"{row['kernel']}: batched serve outputs diverged from the "
                 f"per-tile loop"
             )
+        if not row["healthy_bit_exact"]:
+            problems.append(
+                f"{row['kernel']}: degraded-mode healthy tiles diverged "
+                f"from the per-tile loop (quarantine leaked a poisoned "
+                f"dispatch)"
+            )
+        if not row["poisoned_failed_closed"]:
+            problems.append(
+                f"{row['kernel']}: a poisoned tile did not fail closed "
+                f"with PoisonedTileError"
+            )
     for p in problems:
         print(f"serve-smoke: {p}", file=sys.stderr)
     if problems:
@@ -183,14 +240,16 @@ def main() -> None:
     print(
         "kernel,case,batch_slots,tiles,images_sec_loop,"
         "images_sec_batched_warm,images_sec_batched_cold,speedup_warm,"
-        "bit_exact"
+        "bit_exact,images_sec_degraded_warm,degraded_vs_clean,"
+        "healthy_bit_exact"
     )
     for r in serve_rows():
         print(
             f"{r['kernel']},{r['case']},{r['batch_slots']},{r['tiles']},"
             f"{r['images_sec_loop']},{r['images_sec_batched_warm']},"
             f"{r['images_sec_batched_cold']},{r['speedup_warm']},"
-            f"{r['bit_exact']}"
+            f"{r['bit_exact']},{r['images_sec_degraded_warm']},"
+            f"{r['degraded_vs_clean']},{r['healthy_bit_exact']}"
         )
     print("# persist into BENCH_backend.json with `python -m benchmarks.run`")
 

@@ -8,6 +8,7 @@
 #   bash scripts/ci.sh --bench-smoke # regenerate 2 BENCH rows, check schema
 #   bash scripts/ci.sh --serve       # serve-bridge suite + serve bench schema
 #   bash scripts/ci.sh --tune        # autotuner suite + bounded smoke search
+#   bash scripts/ci.sh --faults      # seeded fault-injection chaos suite
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -38,8 +39,36 @@ run_verify_stage() {
     fi
 }
 
+run_faults_stage() {
+    # Seeded fault-injection chaos suite (tests/test_faults.py): every
+    # injected fault — corrupt schedule db, poisoned cache entry, NaN/Inf
+    # inputs and outputs, kernel raises, slow dispatches, queue overload —
+    # must recover or fail closed with its named backend.errors class,
+    # with quarantine bisection keeping healthy tiles bit-exact.  The
+    # suite is all-interpret and deliberately small-tile, so it runs
+    # under a tight wall-clock budget: chaos tests that quietly grow into
+    # minutes stop being run, which defeats their purpose.  Override via
+    # FAULTS_BUDGET_S.
+    local start_s=$SECONDS
+    python -m pytest -q -m faults
+    local elapsed_s=$((SECONDS - start_s))
+    local budget_s="${FAULTS_BUDGET_S:-120}"
+    echo "faults suite wall-clock: ${elapsed_s}s (budget ${budget_s}s)"
+    if (( elapsed_s > budget_s )); then
+        echo "faults suite exceeded its wall-clock budget" \
+             "(${elapsed_s}s > ${budget_s}s); keep the chaos suite cheap" \
+             "enough to always run" >&2
+        exit 1
+    fi
+}
+
 if [[ "${1:-}" == "--verify" ]]; then
     run_verify_stage
+    exit 0
+fi
+
+if [[ "${1:-}" == "--faults" ]]; then
+    run_faults_stage
     exit 0
 fi
 
@@ -115,6 +144,7 @@ if [[ "${1:-}" == "--backend" ]]; then
     python -m pytest -q -m backend
     python -m pytest -q -m linebuf
     HYPOTHESIS_PROFILE=sweep python -m pytest -q -m sweep
+    run_faults_stage
     python -m repro.backend.demo --smoke
     elapsed_s=$((SECONDS - start_s))
     budget_s=$((BACKEND_BASELINE_S * BACKEND_BUDGET_MULT))

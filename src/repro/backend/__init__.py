@@ -12,6 +12,23 @@ this package for the Stage -> plan -> grid/BlockSpec correspondence.
 from .access import AxisAccess, LoadAccess, UnsupportedAccessError, decompose_stage
 from .autotune import ScheduleDB, TuneResult, lookup_schedule
 from .autotune import search as autotune_search
+from .errors import (
+    BackendError,
+    BackendWarning,
+    DeadlineExceededError,
+    DegradedModeWarning,
+    EmitError,
+    LaneCarryDegradeWarning,
+    MissingInputError,
+    NonFiniteInputError,
+    PlanError,
+    PoisonedTileError,
+    QueueFullError,
+    RequestError,
+    ScheduleDBCorruptWarning,
+    ServeError,
+    TunedModeMismatchWarning,
+)
 from .codegen import (
     CompiledKernel,
     CompiledStage,
@@ -37,6 +54,7 @@ from .runner import (
     PallasPipeline,
     clear_pipeline_cache,
     compile_pipeline,
+    drop_pipeline_cache_entry,
     max_abs_error,
     pipeline_cache_size,
     pipeline_cache_stats,
@@ -90,6 +108,22 @@ __all__ = [
     "reference_arrays",
     "PipelineServer",
     "TileRequest",
+    "BackendError",
+    "BackendWarning",
+    "PlanError",
+    "EmitError",
+    "RequestError",
+    "MissingInputError",
+    "NonFiniteInputError",
+    "DeadlineExceededError",
+    "PoisonedTileError",
+    "ServeError",
+    "QueueFullError",
+    "DegradedModeWarning",
+    "ScheduleDBCorruptWarning",
+    "LaneCarryDegradeWarning",
+    "TunedModeMismatchWarning",
+    "drop_pipeline_cache_entry",
     "RULES",
     "PlanViolation",
     "PlanVerificationError",

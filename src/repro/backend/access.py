@@ -23,9 +23,13 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 from repro.core.poly import AffineExpr, AffineMap
 from repro.frontend.lower import NormalizedStage
 
+from .errors import PlanError
 
-class UnsupportedAccessError(NotImplementedError):
+
+class UnsupportedAccessError(PlanError, NotImplementedError):
     """Access map outside the backend's affine class."""
+
+    code = "PLAN-ACCESS"
 
 
 @dataclass(frozen=True)

@@ -36,6 +36,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
@@ -45,6 +46,7 @@ from repro.core.ubplan import VMEM_BYTES, lane_width_candidates
 from repro.frontend.lower import Pipeline, normalize_pipeline
 
 from .access import UnsupportedAccessError
+from .errors import ScheduleDBCorruptWarning
 from .plan import FusionInfeasible, PipelinePlan, build_pipeline_plan
 from .runner import (
     TUNABLE_KEYS,
@@ -85,26 +87,46 @@ class ScheduleDB:
     winning ``schedule`` (tunable kwargs only) plus the measurements that
     justified it (``warm_us``, ``heuristic_warm_us``, ``speedup``,
     ``model_cycles``) and the search's audit counters (``candidates``,
-    ``measured``, ``rejected``).  A missing file loads as an empty db."""
+    ``measured``, ``rejected``).  A missing file loads as an empty db.
+
+    A *corrupt* file (truncated write, garbage bytes, wrong version, no
+    ``entries`` object) raises under ``strict=True`` (the default — tools
+    editing the db want the loud failure) but loads as an *empty* db with
+    the reason recorded in ``corrupt`` under ``strict=False`` — the
+    serving path (``compile_pipeline(tune=...)``) uses that to degrade to
+    the heuristic planner with a named
+    :class:`~repro.backend.errors.ScheduleDBCorruptWarning` instead of
+    raising ``json.JSONDecodeError`` mid-compile."""
 
     path: Optional[str] = None
     entries: Dict[str, Dict] = field(default_factory=dict)
+    corrupt: Optional[str] = None      # strict=False: why the db is empty
 
     @classmethod
-    def load(cls, path: Optional[str] = None) -> "ScheduleDB":
+    def load(cls, path: Optional[str] = None, strict: bool = True) -> "ScheduleDB":
         p = path or default_db_path()
         if not os.path.exists(p):
             return cls(path=p)
-        with open(p) as f:
-            doc = json.load(f)
-        if not isinstance(doc, dict) or "entries" not in doc:
-            raise ValueError(f"{p}: not a schedule db (no 'entries' key)")
-        version = doc.get("version")
-        if version != DB_VERSION:
-            raise ValueError(
-                f"{p}: schedule db version {version!r} != {DB_VERSION}"
-            )
-        return cls(path=p, entries=dict(doc["entries"]))
+        try:
+            with open(p) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict) or "entries" not in doc:
+                raise ValueError(f"{p}: not a schedule db (no 'entries' key)")
+            version = doc.get("version")
+            if version != DB_VERSION:
+                raise ValueError(
+                    f"{p}: schedule db version {version!r} != {DB_VERSION}"
+                )
+            entries = doc["entries"]
+            if not isinstance(entries, dict):
+                raise ValueError(f"{p}: 'entries' is not an object")
+        except (ValueError, UnicodeDecodeError, OSError) as e:
+            # json.JSONDecodeError subclasses ValueError: truncated and
+            # garbage files land here together with the structural checks
+            if strict:
+                raise
+            return cls(path=p, corrupt=f"{type(e).__name__}: {e}")
+        return cls(path=p, entries=dict(entries))
 
     def save(self, path: Optional[str] = None) -> str:
         p = path or self.path or default_db_path()
@@ -128,7 +150,9 @@ class ScheduleDB:
         entry = self.entries.get(key)
         if entry is None:
             return None
-        return dict(entry)
+        # a malformed (non-object) row is returned as-is so the caller's
+        # validity check can name it instead of dict() raising here
+        return dict(entry) if isinstance(entry, dict) else entry
 
     def store(self, key: str, entry: Dict) -> None:
         bad = set(entry["schedule"]) - set(TUNABLE_KEYS)
@@ -144,7 +168,7 @@ class ScheduleDB:
 _DB_CACHE: Dict[str, Tuple[float, ScheduleDB]] = {}
 
 
-def _resolve_db(db: object) -> ScheduleDB:
+def _resolve_db(db: object, strict: bool = True) -> ScheduleDB:
     if isinstance(db, ScheduleDB):
         return db
     if db in (True, "auto", None):
@@ -159,9 +183,60 @@ def _resolve_db(db: object) -> ScheduleDB:
     cached = _DB_CACHE.get(path)
     if cached is not None and cached[0] == mtime:
         return cached[1]
-    loaded = ScheduleDB.load(path)
+    loaded = ScheduleDB.load(path, strict=strict)
     _DB_CACHE[path] = (mtime, loaded)
     return loaded
+
+
+def _valid_entry_or_reason(entry: object) -> Optional[str]:
+    """Why a stored row cannot be served, or ``None`` when it can.  Rows
+    written by a future writer (``row_version``), rows that are not
+    objects, and rows whose schedule names non-tunable knobs all degrade
+    to a miss rather than poisoning the compile."""
+    if not isinstance(entry, dict):
+        return f"row is {type(entry).__name__}, not an object"
+    rv = entry.get("row_version")
+    if rv is not None and rv != DB_VERSION:
+        return f"unknown row_version {rv!r} (this reader is {DB_VERSION})"
+    sched = entry.get("schedule")
+    if not isinstance(sched, dict):
+        return "row has no 'schedule' object"
+    bad = sorted(set(sched) - set(TUNABLE_KEYS))
+    if bad:
+        return f"schedule names non-tunable keys {bad}"
+    return None
+
+
+def _serveable_entry(
+    pipe: Pipeline, plan_kwargs: Mapping, db: object, stacklevel: int
+) -> Optional[Dict]:
+    """Shared lookup with degradation: a corrupt db or malformed row is a
+    *miss* plus a named :class:`ScheduleDBCorruptWarning` — the caller
+    (ultimately ``compile_pipeline(tune=...)``) falls back to the
+    heuristic planner instead of raising mid-compile."""
+    resolved = _resolve_db(db, strict=False)
+    if resolved.corrupt:
+        warnings.warn(
+            f"schedule db {resolved.path}: {resolved.corrupt}; "
+            f"degrading to the heuristic schedule (db treated as empty)",
+            ScheduleDBCorruptWarning,
+            stacklevel=stacklevel,
+        )
+        return None
+    key = schedule_db_key(pipe, plan_kwargs)
+    entry = resolved.lookup_entry(key)
+    if entry is None:
+        return None
+    reason = _valid_entry_or_reason(entry)
+    if reason is not None:
+        warnings.warn(
+            f"schedule db {resolved.path}: stored row {key[:12]}… is "
+            f"malformed ({reason}); degrading to the heuristic schedule",
+            ScheduleDBCorruptWarning,
+            stacklevel=stacklevel,
+        )
+        return None
+    return entry
 
 
 def lookup_schedule(
@@ -169,8 +244,12 @@ def lookup_schedule(
 ) -> Optional[Schedule]:
     """The ``compile_pipeline(tune=...)`` hook: stored winning schedule for
     this pipeline + non-tunable kwargs, or ``None`` on a db miss (the
-    caller falls back to the heuristic planner)."""
-    return _resolve_db(db).lookup(schedule_db_key(pipe, plan_kwargs))
+    caller falls back to the heuristic planner).  A corrupt db or
+    malformed row is a miss with a :class:`ScheduleDBCorruptWarning`."""
+    entry = _serveable_entry(pipe, plan_kwargs, db, stacklevel=3)
+    if entry is None:
+        return None
+    return dict(entry["schedule"])
 
 
 def lookup_schedule_entry(
@@ -178,8 +257,10 @@ def lookup_schedule_entry(
 ) -> Optional[Dict]:
     """Like :func:`lookup_schedule` but returns the full stored row — the
     runner reads ``entry["mode"]`` to warn when an interpret-measured
-    winner is served to a compiled-mode compile."""
-    return _resolve_db(db).lookup_entry(schedule_db_key(pipe, plan_kwargs))
+    winner is served to a compiled-mode compile.  ``stacklevel`` walks
+    lookup → ``compile_pipeline`` → the user's compile call, so the
+    degradation warning points at the tuned compile that degraded."""
+    return _serveable_entry(pipe, plan_kwargs, db, stacklevel=4)
 
 
 # ---------------------------------------------------------------------------
@@ -520,7 +601,15 @@ def search(
         entry=entry,
     )
     if db is not None and db is not False:
-        store = _resolve_db(db)
+        store = _resolve_db(db, strict=False)
+        if store.corrupt:
+            warnings.warn(
+                f"schedule db {store.path}: {store.corrupt}; rewriting it "
+                f"fresh with this search's winner",
+                ScheduleDBCorruptWarning,
+                stacklevel=2,
+            )
+            store.corrupt = None
         store.store(key, entry)
         store.save()
         _DB_CACHE.pop(store.path, None)           # force fresh mtime on reload

@@ -1,0 +1,326 @@
+"""Deterministic seeded fault injection for the serving stack.
+
+The static verifier keeps *plans* honest by seeding corruptions into the
+plan IR and asserting each is rejected by its named ``UBxyz`` rule
+(``tests/test_verify.py``).  This module is the runtime twin: injectors
+for every real failure class the serve path has — corrupted schedule
+database, poisoned plan-cache entry, NaN/Inf in inputs or mid-pipeline
+outputs, a kernel raise at dispatch N, a slow dispatch blowing a
+deadline — each deterministic (seeded where randomness is involved) and
+each a context manager that restores the patched state on exit.  The
+chaos suite (``tests/test_faults.py``, ``scripts/ci.sh --faults``)
+asserts that every injected fault either fully recovers or fails closed
+with its specific named error from :mod:`backend.errors` — never a
+silent wrong answer.
+
+Injection seams, narrowest first:
+
+* the **schedule db** is a file: :func:`corrupt_schedule_db` rewrites it
+  in one of four corruption modes and restores the original bytes on
+  exit.
+* the **plan cache** hands out :class:`~repro.backend.runner
+  .PallasPipeline` objects: :func:`poison_cache_entry` shadows one
+  pipeline's ``run`` with a raiser — both on the object a server already
+  holds and in the cache row — simulating an entry that was evicted and
+  repopulated broken.
+* every batched execution of a :class:`~repro.backend.serve_bridge
+  .PipelineServer` flows through its ``_run_pipeline`` bound method:
+  :func:`kernel_raise`, :func:`poison_output`, and :func:`slow_dispatch`
+  wrap that one seam, so no kernel or planner code ever changes under
+  injection.
+
+Tile poisoning is marker-based: :func:`mark_poison` plants a sentinel
+value (``POISON_MARKER``) in a tile's input, and the output/raise
+injectors trigger on slots whose stacked input contains the sentinel.
+Marker-based faults follow the *tile* through retries and quarantine
+bisection — exactly how a data-dependent kernel bug behaves — which is
+what lets the chaos suite prove bisection isolates the poisoned tile
+while every healthy tile drains bit-exact.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+from typing import Dict, Iterator, List, Mapping, Optional
+
+import numpy as np
+
+from .runner import PallasPipeline
+from .serve_bridge import PipelineServer
+
+# sentinel an injector plants in a tile input to mark it poisoned; large
+# and exactly representable in f32 so stacking/casting preserves it
+POISON_MARKER = np.float32(2.0 ** 60)
+
+
+class InjectedFault(RuntimeError):
+    """The exception injected faults raise — deliberately *not* part of
+    the :mod:`backend.errors` taxonomy, so a chaos test can tell an
+    injected raw fault apart from the named error the serving layer is
+    required to convert it into."""
+
+
+class FaultClock:
+    """Injectable deterministic time source for ``PipelineServer(clock=...)``.
+
+    Starts at ``t0`` and only moves when :meth:`advance` is called — a
+    deadline test never sleeps and never flakes on wall-clock noise.  The
+    :func:`slow_dispatch` injector advances it from inside the dispatch
+    seam to simulate a dispatch that takes ``dispatch_s`` seconds."""
+
+    def __init__(self, t0: float = 0.0) -> None:
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+# ---------------------------------------------------------------------------
+# Schedule-db corruption
+# ---------------------------------------------------------------------------
+
+DB_CORRUPTIONS = ("truncate", "garbage", "bad-version", "bad-schema")
+
+
+@contextlib.contextmanager
+def corrupt_schedule_db(path: str, mode: str = "truncate") -> Iterator[str]:
+    """Corrupt the schedule database at ``path`` for the duration of the
+    block; original bytes (or absence) are restored on exit.
+
+    Modes: ``"truncate"`` cuts the JSON mid-document (the partial-write /
+    partial-copy failure), ``"garbage"`` replaces it with non-JSON bytes,
+    ``"bad-version"`` bumps the version field past ``DB_VERSION``,
+    ``"bad-schema"`` keeps valid JSON but drops the ``entries`` key."""
+    if mode not in DB_CORRUPTIONS:
+        raise ValueError(f"mode must be one of {DB_CORRUPTIONS}: {mode!r}")
+    existed = os.path.exists(path)
+    original = open(path, "rb").read() if existed else None
+    if mode == "truncate":
+        doc = original if original is not None else (
+            b'{"version": 1, "entries": {"k": {"schedule": {}}}}'
+        )
+        body = doc[: max(1, len(doc) // 2)]
+    elif mode == "garbage":
+        body = b"\x00\xffnot json at all\x17"
+    elif mode == "bad-version":
+        body = json.dumps({"version": 999, "entries": {}}).encode()
+    else:                                       # bad-schema
+        body = json.dumps({"version": 1, "rows": []}).encode()
+    try:
+        with open(path, "wb") as f:
+            f.write(body)
+        # drop the mtime-keyed load cache so the corruption is actually read
+        from .autotune import _DB_CACHE
+
+        _DB_CACHE.pop(path, None)
+        yield path
+    finally:
+        if existed:
+            with open(path, "wb") as f:
+                f.write(original)
+        elif os.path.exists(path):
+            os.remove(path)
+        from .autotune import _DB_CACHE
+
+        _DB_CACHE.pop(path, None)
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache poisoning
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def poison_cache_entry(pp: PallasPipeline) -> Iterator[PallasPipeline]:
+    """Poison one compiled pipeline: its ``run`` raises
+    :class:`InjectedFault` on every call, both through the object servers
+    already hold *and* through its plan-cache row (the evicted-then-
+    repopulated-broken scenario).  Recovery is the serve bridge's
+    retry-with-recompile: the cache entry is dropped and a fresh compile
+    replaces the poisoned object, so the restored state on exit is simply
+    the shadow removed."""
+
+    def _poisoned_run(inputs: Mapping[str, np.ndarray]):
+        raise InjectedFault(
+            "poisoned plan-cache entry: this compiled pipeline is broken"
+        )
+
+    # instance-attribute shadow over the dataclass method; the cache holds
+    # the same object, so cache hits serve the poison too
+    pp.run = _poisoned_run  # type: ignore[method-assign]
+    try:
+        yield pp
+    finally:
+        if "run" in pp.__dict__:
+            del pp.__dict__["run"]
+
+
+# ---------------------------------------------------------------------------
+# Tile poisoning (inputs and marker-based output/raise injection)
+# ---------------------------------------------------------------------------
+
+
+def nan_input(
+    tiles: List[Dict[str, np.ndarray]],
+    frac: float = 0.05,
+    seed: int = 0,
+    kind: str = "nan",
+) -> List[int]:
+    """Poison a seeded ``frac`` of ``tiles`` in place with one NaN (or
+    ``kind="inf"``) value at a seeded coordinate of a seeded input;
+    returns the poisoned tile indices (sorted).  At least one tile is
+    poisoned for any ``frac > 0``."""
+    if not tiles or frac <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    n_bad = max(1, int(round(frac * len(tiles))))
+    picked = sorted(
+        int(i) for i in rng.choice(len(tiles), size=n_bad, replace=False)
+    )
+    val = np.float32("nan") if kind == "nan" else np.float32("inf")
+    for i in picked:
+        name = sorted(tiles[i])[int(rng.integers(len(tiles[i])))]
+        arr = np.array(tiles[i][name], dtype=np.float32, copy=True)
+        flat = int(rng.integers(arr.size))
+        arr.flat[flat] = val
+        tiles[i][name] = arr
+    return picked
+
+
+def mark_poison(
+    tile: Dict[str, np.ndarray], name: Optional[str] = None
+) -> Dict[str, np.ndarray]:
+    """Plant the :data:`POISON_MARKER` sentinel in one input of ``tile``
+    (in place; first input by name when ``name`` is None).  The marker is
+    finite, so it passes the submit-time finite-values guard — it models
+    an in-range input that trips a data-dependent kernel bug, which only
+    output quarantine can catch."""
+    n = name or sorted(tile)[0]
+    arr = np.array(tile[n], dtype=np.float32, copy=True)
+    arr.flat[0] = POISON_MARKER
+    tile[n] = arr
+    return tile
+
+
+def _marked_slots(ins: Mapping[str, np.ndarray]) -> List[int]:
+    """Slot indices whose stacked input carries the poison marker."""
+    nslots = next(iter(ins.values())).shape[0]
+    bad: List[int] = []
+    for b in range(nslots):
+        if any(bool((np.asarray(a[b]) == POISON_MARKER).any())
+               for a in ins.values()):
+            bad.append(b)
+    return bad
+
+
+@contextlib.contextmanager
+def poison_output(
+    server: PipelineServer, kind: str = "nan"
+) -> Iterator[PipelineServer]:
+    """Wrap the server's dispatch seam so every slot whose input carries
+    the poison marker gets its outputs splatted with NaN (``kind="inf"``:
+    Inf) *after* the real kernels run — a mid-pipeline numeric fault that
+    follows the tile through bisection.  Healthy slots' outputs pass
+    through untouched, byte-for-byte."""
+    real = server._run_pipeline
+    val = float("nan") if kind == "nan" else float("inf")
+
+    def _wrapped(pp: PallasPipeline, ins: Mapping[str, np.ndarray]):
+        bufs = dict(real(pp, ins))
+        bad = _marked_slots(ins)
+        if bad:
+            for name in [ck.name for ck in pp.kernels]:
+                arr = np.array(np.asarray(bufs[name]), copy=True)
+                for b in bad:
+                    arr[b] = val
+                bufs[name] = arr
+        return bufs
+
+    server._run_pipeline = _wrapped  # type: ignore[method-assign]
+    try:
+        yield server
+    finally:
+        if "_run_pipeline" in server.__dict__:
+            del server.__dict__["_run_pipeline"]
+
+
+@contextlib.contextmanager
+def kernel_raise(
+    server: PipelineServer,
+    at_dispatch: Optional[int] = None,
+    on_marker: bool = False,
+) -> Iterator[PipelineServer]:
+    """Make the server's dispatch seam raise :class:`InjectedFault`.
+
+    ``at_dispatch=N`` raises exactly on the Nth wrapped dispatch
+    (1-based) and never again — the transient fault class, which the
+    retry-with-recompile ladder must fully recover.  ``on_marker=True``
+    raises on every dispatch whose stacked input carries the poison
+    marker — the data-dependent fault class, which only quarantine
+    bisection can isolate.  Exactly one trigger must be chosen."""
+    if (at_dispatch is None) == (not on_marker):
+        raise ValueError("pass exactly one of at_dispatch / on_marker")
+    real = server._run_pipeline
+    count = {"n": 0}
+
+    def _wrapped(pp: PallasPipeline, ins: Mapping[str, np.ndarray]):
+        count["n"] += 1
+        if at_dispatch is not None and count["n"] == at_dispatch:
+            raise InjectedFault(
+                f"injected kernel raise at dispatch {at_dispatch}"
+            )
+        if on_marker and _marked_slots(ins):
+            raise InjectedFault(
+                "injected kernel raise: poisoned tile in the batch"
+            )
+        return real(pp, ins)
+
+    server._run_pipeline = _wrapped  # type: ignore[method-assign]
+    try:
+        yield server
+    finally:
+        if "_run_pipeline" in server.__dict__:
+            del server.__dict__["_run_pipeline"]
+
+
+@contextlib.contextmanager
+def slow_dispatch(
+    server: PipelineServer, clock: FaultClock, dispatch_s: float
+) -> Iterator[PipelineServer]:
+    """Make every dispatch appear to take ``dispatch_s`` seconds on the
+    server's injected :class:`FaultClock` — no real sleeping — so a
+    request whose deadline is shorter than one dispatch deterministically
+    fails with ``DeadlineExceededError``."""
+    real = server._run_pipeline
+
+    def _wrapped(pp: PallasPipeline, ins: Mapping[str, np.ndarray]):
+        out = real(pp, ins)
+        clock.advance(dispatch_s)
+        return out
+
+    server._run_pipeline = _wrapped  # type: ignore[method-assign]
+    try:
+        yield server
+    finally:
+        if "_run_pipeline" in server.__dict__:
+            del server.__dict__["_run_pipeline"]
+
+
+__all__ = [
+    "DB_CORRUPTIONS",
+    "FaultClock",
+    "InjectedFault",
+    "POISON_MARKER",
+    "corrupt_schedule_db",
+    "kernel_raise",
+    "mark_poison",
+    "nan_input",
+    "poison_cache_entry",
+    "poison_output",
+    "slow_dispatch",
+]

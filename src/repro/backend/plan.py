@@ -80,6 +80,7 @@ from repro.frontend.expr import expr_depth, refs_in
 from repro.frontend.lower import NormalizedStage, Pipeline, normalize_pipeline
 
 from .access import LoadAccess, UnsupportedAccessError, decompose_stage
+from .errors import PlanError
 
 ELEM_BYTES = 4                      # all generated streams are f32
 
@@ -108,8 +109,10 @@ MAX_RED_CHUNK = 128
 RING_STEP_OVERHEAD_CYCLES = 8
 
 
-class FusionInfeasible(Exception):
+class FusionInfeasible(PlanError):
     """A candidate fusion group violates a structural or VMEM constraint."""
+
+    code = "PLAN-FUSION"
 
 
 def _cdiv(a: int, b: int) -> int:

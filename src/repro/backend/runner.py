@@ -40,19 +40,13 @@ from repro.core.ubplan import VMEM_BYTES
 from repro.frontend.lower import Pipeline, execute_pipeline, normalize_pipeline
 
 from .codegen import CompiledKernel, emit_kernel, resolve_mode
+from .errors import (
+    EmitError,
+    LaneCarryDegradeWarning,
+    TunedModeMismatchWarning,
+)
 from .plan import PipelinePlan, RED_GRID_THRESHOLD, build_pipeline_plan
 from .verify import assert_plan_verified
-
-
-class LaneCarryDegradeWarning(UserWarning):
-    """``line_buffer=True`` was requested but a lane-blocked kernel had to
-    degrade (fully or partially) to recompute mode; the message names the
-    planner's reason (``halo-exceeds-bw``, ``carry-infeasible``, ...)."""
-
-
-class TunedModeMismatchWarning(UserWarning):
-    """A stored schedule measured in one execution mode is being served to
-    a compile in another (interpret rankings may not transfer to TPU)."""
 
 
 def _warn_lane_carry_degrades(plan: PipelinePlan) -> None:
@@ -298,6 +292,18 @@ def clear_pipeline_cache(reset_stats: bool = False) -> None:
         _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
 
+def drop_pipeline_cache_entry(key: Optional[str]) -> bool:
+    """Evict one cache entry by its :func:`plan_cache_key` (the serve
+    bridge's retry-with-recompile path: a dispatch failure drops the
+    possibly-poisoned entry before recompiling, so the fresh compile can
+    never be served the broken pipeline back as a cache hit).  Returns
+    whether an entry was present.  Deliberate drops are not LRU pressure
+    and do not count as ``evictions`` in :func:`pipeline_cache_stats`."""
+    if key is None:
+        return False
+    return _PIPELINE_CACHE.pop(key, None) is not None
+
+
 def pipeline_cache_size() -> int:
     return len(_PIPELINE_CACHE)
 
@@ -445,7 +451,19 @@ def compile_pipeline(
         _warn_lane_carry_degrades(plan)
     if verify is not False:
         assert_plan_verified(plan)
-    kernels = [emit_kernel(kg, mode=mode) for kg in plan.kernels]
+    kernels = []
+    for kg in plan.kernels:
+        try:
+            kernels.append(emit_kernel(kg, mode=mode))
+        except Exception as e:
+            # a certified plan failing to lower is an emitter (or Pallas)
+            # defect, not a caller error: name the kernel group instead of
+            # surfacing a bare Pallas traceback
+            raise EmitError(
+                f"emission failed in {mode!r} mode: {e}",
+                kernel=kg.stages[-1].name,
+                stage=kg.stage_names[-1] if kg.stage_names else None,
+            ) from e
     pp = PallasPipeline(pipe, kernels, plan, mode=mode, cache_key=key)
     if cache:
         _PIPELINE_CACHE[key] = pp
@@ -517,6 +535,7 @@ __all__ = [
     "schedule_db_key",
     "TUNABLE_KEYS",
     "clear_pipeline_cache",
+    "drop_pipeline_cache_entry",
     "pipeline_cache_size",
     "pipeline_cache_stats",
     "reference_arrays",

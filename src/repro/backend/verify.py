@@ -72,6 +72,7 @@ from repro.core.poly import AffineExpr, AffineMap, Box, map_image
 from repro.core.ubplan import VMEM_BYTES
 
 from .access import AxisAccess, LoadAccess
+from .errors import PlanError
 from .plan import (
     ELEM_BYTES,
     KernelGroup,
@@ -134,8 +135,10 @@ class PlanViolation:
         return f"[{self.rule}] {where}: {self.message}{wit}"
 
 
-class PlanVerificationError(Exception):
+class PlanVerificationError(PlanError):
     """A plan failed static verification; ``.violations`` has the details."""
+
+    code = "PLAN-VERIFY"
 
     def __init__(self, violations: Sequence[PlanViolation]):
         self.violations = list(violations)
